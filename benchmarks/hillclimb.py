@@ -1,0 +1,133 @@
+"""§Perf hillclimbing driver: run tagged dry-run variants of the chosen
+cells and print before/after roofline deltas.
+
+    PYTHONPATH=src:. python -m benchmarks.hillclimb --cell <arch@shape> \
+        --variant <tag>
+    PYTHONPATH=src:. python -m benchmarks.hillclimb --report
+
+Each variant is a (hypothesis, config-delta) pair; results are written as
+tagged JSONs next to the baselines and summarized by --report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] \
+    / "experiments" / "dryrun"
+
+# hypothesis -> config delta, per hillclimbed cell (see EXPERIMENTS.md §Perf
+# for the napkin math behind each)
+EXPERIMENTS: dict[str, dict[str, dict]] = {
+    # paper-technique representative: VLM decode with the CHIME KV tiers
+    "paligemma-3b@decode_32k": {
+        "tiered": {"kv_policy": "tiered"},
+        "tiered_hot1k": {"kv_policy": "tiered", "kv_hot_window": 1024},
+        "tiered_hot8k": {"kv_policy": "tiered", "kv_hot_window": 8192},
+        "tiered_bf16s": {"kv_policy": "tiered",
+                         "attn_scores_dtype": "bfloat16"},
+        "tiered_int8ffn": {"kv_policy": "tiered",
+                           "attn_scores_dtype": "bfloat16",
+                           "ffn_weight_store": "int8"},
+    },
+    # worst roofline fraction / memory-bound: MLA decode
+    "deepseek-v2-lite@decode_32k": {
+        "absorbed": {"mla_absorbed": True},
+        "absorbed_tiered": {"mla_absorbed": True, "kv_policy": "tiered"},
+        "absorbed_tiered_bf16s": {"mla_absorbed": True,
+                                  "kv_policy": "tiered",
+                                  "attn_scores_dtype": "bfloat16"},
+    },
+    # most collective-bound: MoE decode. "kvseq" is a pure code fix (keep
+    # the cache's seq sharding through the GQA broadcast) — the tag runs
+    # the same config on the fixed code; moeff adds the expert layout.
+    "llama4-maverick-400b@decode_32k": {
+        "kvseq": {},
+        "kvseq_tiered": {"kv_policy": "tiered"},
+        "moeff": {"moe_ff_fsdp": True},
+    },
+    # collective-bound training at pod scale
+    "nemotron-4-340b@train_4k": {
+        "mb4": {"microbatches": 4},
+        "mb8": {"microbatches": 8},
+        "mb4_dots": {"microbatches": 4, "remat": "save_dots"},
+        "mb4_bf16s": {"microbatches": 4,
+                      "attn_scores_dtype": "bfloat16"},
+    },
+    # worst useful-flops ratio: unshardable 36-head attention at 32k
+    "starcoder2-7b@prefill_32k": {
+        "seqsp": {"seq_sharding": True},
+        "seqsp_bf16s": {"seq_sharding": True,
+                        "attn_scores_dtype": "bfloat16"},
+    },
+    # collective-bound MoE prefill: partial-sum all-reduces of (tokens, D)
+    # f32 activations (52 GB/layer) — Megatron-SP turns them into
+    # reduce-scatter + gather (the full fix is shard_map all-to-all
+    # dispatch, out of scope here and noted in DESIGN.md)
+    "deepseek-v2-lite@prefill_32k": {
+        "seqsp": {"seq_sharding": True},
+    },
+}
+
+
+def run(cell: str, variant: str, multi_pod: bool = False):
+    from repro.launch import dryrun
+    arch, shape = cell.split("@")
+    overrides = EXPERIMENTS[cell][variant]
+    res = dryrun.run_cell(arch, shape, multi_pod, overrides, tag=variant)
+    dryrun.save_result(res)
+    return res
+
+
+def report():
+    for cell, variants in EXPERIMENTS.items():
+        arch, shape = cell.split("@")
+        base_p = DRYRUN_DIR / f"{arch}@{shape}@pod16x16.json"
+        if not base_p.exists():
+            continue
+        base = json.loads(base_p.read_text())
+        br = base["roofline"]
+        print(f"\n== {cell} (dominant: {br['dominant']}) ==")
+        print(f"{'variant':24s} {'compute_s':>10s} {'memory_s':>10s} "
+              f"{'coll_s':>10s} {'bound_s':>10s} {'Δbound':>8s} "
+              f"{'peakGB':>7s}")
+        print(f"{'baseline':24s} {br['compute_s']:10.3f} "
+              f"{br['memory_s']:10.3f} {br['collective_s']:10.3f} "
+              f"{br['bound_s']:10.3f} {'—':>8s} "
+              f"{base['memory']['peak_bytes'] / 1e9:7.1f}")
+        for tag in variants:
+            p = DRYRUN_DIR / f"{arch}@{shape}@pod16x16@{tag}.json"
+            if not p.exists():
+                print(f"{tag:24s} (not run)")
+                continue
+            d = json.loads(p.read_text())
+            r = d["roofline"]
+            delta = (br["bound_s"] - r["bound_s"]) / br["bound_s"] * 100
+            print(f"{tag:24s} {r['compute_s']:10.3f} {r['memory_s']:10.3f} "
+                  f"{r['collective_s']:10.3f} {r['bound_s']:10.3f} "
+                  f"{delta:+7.1f}% "
+                  f"{d['memory']['peak_bytes'] / 1e9:7.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell")
+    ap.add_argument("--variant")
+    ap.add_argument("--all-variants", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--report", action="store_true")
+    args = ap.parse_args()
+    if args.report:
+        report()
+        return
+    if args.all_variants:
+        for v in EXPERIMENTS[args.cell]:
+            run(args.cell, v, args.multi_pod)
+        return
+    run(args.cell, args.variant, args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Table I fused-kernel microbenchmarks: wall-time of the jnp oracle path
+(the dry-run execution path) on this host, plus the kernels' analytic VMEM
+working sets. Real-TPU kernel timing is out of scope in this container; the
+Pallas kernels are validated in interpret mode (tests/test_kernels.py)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.attn_stream import attn_stream_vmem_bytes
+from repro.kernels.ffn_act import ffn_vmem_bytes
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    print("\n# Table I — fused kernel microbench (jnp oracle path, host)")
+    print("name,us_per_call,derived")
+    key = jax.random.PRNGKey(0)
+    B, H, S, D = 1, 8, 1024, 64
+    q = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    k = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    v = jax.random.normal(key, (B, H, S, D), jnp.float32)
+    us = _time(jax.jit(lambda a, b, c: ref.attn_stream_ref(a, b, c)),
+               q, k, v)
+    fl = 4 * B * H * S * S * D
+    print(f"FUSED_ATTN_STREAM,{us:.0f},{fl / us * 1e-3:.2f}GFLOP/s_host"
+          f"|vmem={attn_stream_vmem_bytes(128, 128, D) / 1024:.0f}KiB")
+
+    M, Dm, F = 2048, 1024, 4096
+    x = jax.random.normal(key, (M, Dm), jnp.float32)
+    w1 = jax.random.normal(key, (Dm, F), jnp.float32) * 0.02
+    wg = jax.random.normal(key, (Dm, F), jnp.float32) * 0.02
+    w2 = jax.random.normal(key, (F, Dm), jnp.float32) * 0.02
+    us = _time(jax.jit(lambda a, b, c, d: ref.ffn_act_ref(
+        a, b, c, d, "silu_gated")), x, w1, wg, w2)
+    fl = 2 * M * Dm * F * 3
+    print(f"FUSED_FFN_ACT,{us:.0f},{fl / us * 1e-3:.2f}GFLOP/s_host"
+          f"|vmem={ffn_vmem_bytes(128, 512, Dm) / 1024:.0f}KiB")
+
+    w = jax.random.normal(key, (Dm, 3 * Dm), jnp.float32) * 0.02
+    us = _time(jax.jit(lambda a, b: ref.qkv_proj_ref(a, b, None)), x, w)
+    fl = 2 * M * Dm * 3 * Dm
+    print(f"FUSED_QKV_PROJ,{us:.0f},{fl / us * 1e-3:.2f}GFLOP/s_host")
+
+    s = jnp.ones((Dm,), jnp.float32)
+    us = _time(jax.jit(lambda a, b: ref.fused_norm_ref(a, b, None, 'rms')),
+               x, s)
+    print(f"FUSED_NORM,{us:.0f},{M * Dm * 4 * 2 / us * 1e-3:.2f}GB/s_host")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Benchmarks reproducing the paper's tables/figures from the analytical
+simulator. Each function prints a CSV block and returns rows."""
+
+from __future__ import annotations
+
+from repro.configs.base import PAPER_MODELS, get_config
+from repro.simulator import (
+    CHIME, DRAM_ONLY, FACIL, JETSON_ORIN_NX, simulate)
+from repro.simulator.chime_sim import Workload
+from repro.simulator.hardware import TABLE_V_STATIC
+
+PAPER_CLAIMS = {
+    "speedup": (31.0, 54.0),
+    "energy_eff": (113.0, 246.0),
+    "chime_tps": (233.0, 533.0),
+    "chime_tok_per_j": (116.5, 266.5),
+    "jetson_tps": (7.4, 11.0),
+    "dram_only_speedup": (2.38, 2.49),
+    "dram_only_energy": (1.04, 1.07),
+}
+
+
+def fig6_speedup_energy():
+    """Fig 6: speedup + energy efficiency vs Jetson Orin NX per model."""
+    print("\n# Fig 6 — CHIME vs Jetson Orin NX "
+          "(paper: 31-54x speedup, 113-246x energy eff)")
+    print("model,chime_tps,chime_tok_per_j,chime_w,jetson_tps,"
+          "jetson_tok_per_j,speedup_x,energy_eff_x")
+    rows = []
+    for m in PAPER_MODELS:
+        cfg = get_config(m)
+        c = simulate(cfg, CHIME)
+        j = simulate(cfg, JETSON_ORIN_NX)
+        row = dict(model=m, chime_tps=c.tps, chime_tok_per_j=c.tokens_per_j,
+                   chime_w=c.avg_power_w, jetson_tps=j.tps,
+                   jetson_tok_per_j=j.tokens_per_j,
+                   speedup=j.total_s / c.total_s,
+                   energy_eff=j.energy_j / c.energy_j)
+        rows.append(row)
+        print(f"{m},{c.tps:.1f},{c.tokens_per_j:.1f},{c.avg_power_w:.2f},"
+              f"{j.tps:.1f},{j.tokens_per_j:.2f},{row['speedup']:.1f},"
+              f"{row['energy_eff']:.1f}")
+    sp = [r["speedup"] for r in rows]
+    ee = [r["energy_eff"] for r in rows]
+    print(f"# mean speedup {sum(sp) / len(sp):.1f}x (paper ~41x); "
+          f"mean energy eff {sum(ee) / len(ee):.1f}x (paper ~185x)")
+    return rows
+
+
+def table5_platforms():
+    """Table V: cross-platform comparison (FACIL rows are published)."""
+    print("\n# Table V — edge AI platform comparison")
+    print("platform,tps_range,tok_per_j_range,power_w,source")
+    tps = []
+    tpj = []
+    for m in PAPER_MODELS:
+        r = simulate(get_config(m), CHIME)
+        tps.append(r.tps)
+        tpj.append(r.tokens_per_j)
+    print(f"CHIME (ours),{min(tps):.0f}-{max(tps):.0f},"
+          f"{min(tpj):.1f}-{max(tpj):.1f},~2-6,simulated")
+    for name, row in TABLE_V_STATIC.items():
+        print(f"{name},{row['tps'][0]}-{row['tps'][1]},"
+              f"{row['tok_per_j'][0]}-{row['tok_per_j'][1]},"
+              f"{row['power_w']},published")
+    fac_hi = FACIL["throughput_tps"][1]
+    print(f"# CHIME vs FACIL throughput: {min(tps) / fac_hi:.1f}x - "
+          f"{max(tps) / FACIL['throughput_tps'][0]:.1f}x "
+          f"(paper: 12.1-69.2x)")
+    return {"tps": tps, "tok_per_j": tpj}
+
+
+def fig8_seqlen():
+    """Fig 8: latency + energy vs input length 128..4k (linear growth)."""
+    print("\n# Fig 8 — sequence-length sensitivity (CHIME)")
+    print("model,text_tokens,latency_ms,energy_j")
+    rows = []
+    for m in PAPER_MODELS:
+        cfg = get_config(m)
+        for n in (128, 256, 512, 1024, 2048, 4096):
+            r = simulate(cfg, CHIME, Workload(text_tokens=n))
+            rows.append((m, n, r.total_s * 1e3, r.energy_j))
+            print(f"{m},{n},{r.total_s * 1e3:.1f},{r.energy_j:.3f}")
+    # linearity check: latency(4k)/latency(128) should be O(10) not O(1000)
+    for m in PAPER_MODELS:
+        sub = [r for r in rows if r[0] == m]
+        ratio = sub[-1][2] / sub[0][2]
+        print(f"# {m}: 128->4k latency ratio {ratio:.1f}x "
+              "(paper: ~order of magnitude, linear-ish)")
+    return rows
+
+
+def fig9_memconfig():
+    """Fig 9: CHIME vs M3D-DRAM-only (paper: 2.38-2.49x speedup,
+    1.04-1.07x energy)."""
+    print("\n# Fig 9 — heterogeneous vs DRAM-only")
+    print("model,speedup_x,energy_eff_x")
+    rows = []
+    for m in PAPER_MODELS:
+        cfg = get_config(m)
+        c = simulate(cfg, CHIME)
+        d = simulate(cfg, DRAM_ONLY)
+        rows.append((m, d.total_s / c.total_s, d.energy_j / c.energy_j))
+        print(f"{m},{rows[-1][1]:.2f},{rows[-1][2]:.2f}")
+    return rows
+
+
+def fig7_breakdown():
+    """Fig 7(c)/(d): power/time breakdown — which domain dominates."""
+    print("\n# Fig 7 — per-domain decode-time breakdown (CHIME)")
+    print("model,dram_ms_tok,attn_kv_ms_tok,rram_ms_tok,ucie_ms_tok,"
+          "overhead_ms_tok")
+    for m in ("fastvlm-0.6b", "mobilevlm-1.7b"):
+        cfg = get_config(m)
+        r = simulate(cfg, CHIME)
+        n = 488
+        b = r.breakdown
+        print(f"{m},{b['dram_s'] / n * 1e3:.3f},"
+              f"{b['attn_kv_s'] / n * 1e3:.3f},"
+              f"{b['rram_s'] / n * 1e3:.3f},{b['ucie_s'] / n * 1e3:.3f},"
+              f"{b['overhead_s'] / n * 1e3:.3f}")
+        dom = "rram" if b["rram_s"] > b["dram_s"] else "dram"
+        print(f"# {m}: {dom} dominates (paper: RRAM dominates — it runs "
+              "the data-intensive FFN)")
+
+
+def validate_against_claims() -> dict:
+    """Machine-checkable validation summary for EXPERIMENTS.md."""
+    res = {}
+    sp, ee, ct, cj, jt = [], [], [], [], []
+    do_s, do_e = [], []
+    for m in PAPER_MODELS:
+        cfg = get_config(m)
+        c = simulate(cfg, CHIME)
+        j = simulate(cfg, JETSON_ORIN_NX)
+        d = simulate(cfg, DRAM_ONLY)
+        sp.append(j.total_s / c.total_s)
+        ee.append(j.energy_j / c.energy_j)
+        ct.append(c.tps)
+        cj.append(c.tokens_per_j)
+        jt.append(j.tps)
+        do_s.append(d.total_s / c.total_s)
+        do_e.append(d.energy_j / c.energy_j)
+
+    def band(x):
+        return (min(x), max(x))
+    res["speedup"] = band(sp)
+    res["energy_eff"] = band(ee)
+    res["chime_tps"] = band(ct)
+    res["chime_tok_per_j"] = band(cj)
+    res["jetson_tps"] = band(jt)
+    res["dram_only_speedup"] = band(do_s)
+    res["dram_only_energy"] = band(do_e)
+    print("\n# Validation vs paper claims")
+    print("metric,ours,paper")
+    for k, v in res.items():
+        pc = PAPER_CLAIMS[k]
+        print(f"{k},{v[0]:.2f}-{v[1]:.2f},{pc[0]}-{pc[1]}")
+    return res
+
+
+def main():
+    fig6_speedup_energy()
+    table5_platforms()
+    fig8_seqlen()
+    fig9_memconfig()
+    fig7_breakdown()
+    validate_against_claims()
+
+
+if __name__ == "__main__":
+    main()

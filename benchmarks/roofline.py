@@ -1,0 +1,71 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (EXPERIMENTS.md).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints, per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and what would move the dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] \
+    / "experiments" / "dryrun"
+
+ADVICE = {
+    "compute": "increase arithmetic intensity (fuse, larger tiles) or "
+               "accept: compute-bound is the roofline target",
+    "memory": "cut HBM traffic: FUSED_ATTN_STREAM keeps S^2 scores in "
+              "VMEM; int8 cold-KV/FFN weights halve weight bytes",
+    "collective": "reshard to cut gathers (seq-parallel residual, "
+                  "reduce-scatter grads), overlap collectives with compute",
+}
+
+
+def load_all(include_tagged: bool = False) -> list[dict]:
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(p.read_text())
+        if not include_tagged and len(d["cell"].split("@")) > 3:
+            continue  # hillclimb variants reported by benchmarks/hillclimb
+        rows.append(d)
+    return rows
+
+
+def main():
+    rows = load_all()
+    if not rows:
+        print("# no dry-run results yet — run "
+              "`python -m repro.launch.dryrun --all --both-meshes`")
+        return
+    print("\n# §Roofline — per (arch x shape x mesh), terms in seconds "
+          "per step (per device)")
+    print("cell,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,useful_ratio,peak_gb_dev")
+    for d in rows:
+        r = d.get("roofline", {})
+        if not r:
+            continue
+        print(f"{d['cell']},{r['compute_s']:.4f},{r['memory_s']:.4f},"
+              f"{r['collective_s']:.4f},{r['dominant']},"
+              f"{r['model_flops']:.3e},"
+              f"{(r['useful_flops_ratio'] or 0):.3f},"
+              f"{d['memory']['peak_bytes'] / 1e9:.2f}")
+    doms = {}
+    for d in rows:
+        dom = d.get("roofline", {}).get("dominant")
+        doms[dom] = doms.get(dom, 0) + 1
+    print(f"# dominant-term histogram: {doms}")
+    for k, v in ADVICE.items():
+        print(f"# if {k}-bound: {v}")
+    # §Perf hillclimb summary
+    try:
+        from benchmarks import hillclimb
+        hillclimb.report()
+    except Exception as e:  # noqa: BLE001
+        print(f"# hillclimb report unavailable: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figs, roofline
+    paper_figs.main()
+    kernel_bench.main()
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end VQA serving (the paper's workload): batched requests through
+prefill + decode on a paper model, comparing flat vs CHIME-tiered KV.
+
+    PYTHONPATH=src python examples/serve_vlm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import kv_tiers as KT
+from repro.launch.serve import generate
+from repro.models import Model
+
+
+def run(kv_policy: str, batch_size: int = 4, prompt: int = 32,
+        gen: int = 12):
+    cfg = get_config("mobilevlm-1.7b", reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        kv_policy=kv_policy, kv_hot_window=16)
+    model = Model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    tv = cfg.frontend.num_tokens
+    batch = {
+        "patches": jax.random.normal(
+            rng, (batch_size, tv, cfg.frontend.frontend_dim)),
+        "tokens": jax.random.randint(
+            rng, (batch_size, prompt - tv), 0, cfg.vocab_size),
+    }
+    t0 = time.time()
+    toks, cache = generate(model, params, batch, prompt, gen)
+    dt = time.time() - t0
+    print(f"[{kv_policy:6s}] {batch_size} requests x {gen} tokens "
+          f"in {dt:.2f}s; first answer ids: {toks[0, :8].tolist()}")
+    return toks, cache
+
+
+def main():
+    toks_flat, _ = run("flat")
+    toks_tier, cache = run("tiered")
+    # tiered decoding should agree with flat decoding on most tokens
+    # (int8 cold tier is a approximation only for tokens older than the
+    # hot window)
+    agree = float((toks_flat == toks_tier).mean())
+    print(f"flat-vs-tiered token agreement: {agree:.2%}")
+    # endurance discipline: cold slots written once
+    for store in jax.tree.leaves(
+            cache, is_leaf=lambda x: isinstance(x, dict) and "hot" in x):
+        if isinstance(store, dict) and "hot" in store:
+            rep = KT.endurance_report(store)
+            print(f"cold-tier writes: {int(rep['total_cold_writes'])}, "
+                  f"max per block {int(rep['max_writes_per_block'])}")
+            break
+
+
+if __name__ == "__main__":
+    main()

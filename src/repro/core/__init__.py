@@ -1,0 +1,1 @@
+"""CHIME core: planner, kv_tiers, quant, fusion, dataflow (import submodules directly to avoid import cycles with repro.models)."""

@@ -1,0 +1,203 @@
+"""CHIME kernel locality-aware fusion (paper §III-C ③, Table I).
+
+This is the fusion registry: the model calls these entry points and the
+registry picks the execution strategy —
+
+  * pure-jnp oracle (XLA fuses; this is also what the dry-run lowers so
+    cost_analysis reflects the shipped HLO),
+  * Pallas TPU kernel (``cfg.use_pallas_kernels`` on a TPU backend; the
+    near-memory PE/SFPE pipeline of the paper mapped to MXU/VPU with
+    explicit VMEM BlockSpecs),
+  * int8 "RRAM-domain" weight store (``cfg.ffn_weight_store == 'int8'`` —
+    FFN weights held as QTensor; dequant fused into the GEMM).
+
+Fusion boundaries coincide with memory-domain boundaries (the paper's key
+rule): a fused kernel never spans the attention-domain/FFN-domain cut, so
+per layer exactly two activations (AttnOut, FFNOut) cross domains —
+core/dataflow.py audits the lowered HLO for this.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.quant import QTensor, dequantize
+from repro.models import layers as L
+from repro.models import attention as A
+
+
+import os
+
+
+def _use_pallas(cfg: ModelConfig) -> bool:
+    if not cfg.use_pallas_kernels:
+        return False
+    # REPRO_PALLAS_INTERPRET=1 lets CPU tests exercise the kernel path
+    # end-to-end through the model (kernels run in interpret mode)
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("REPRO_PALLAS_INTERPRET") == "1")
+
+
+# ---------------------------------------------------------------------------
+# FUSED_FFN_ACT
+# ---------------------------------------------------------------------------
+def apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rules,
+              mlp_type: str | None = None, d_ff: int | None = None
+              ) -> jax.Array:
+    kind = mlp_type or cfg.mlp_type
+    if kind == "moe":
+        return L.apply_moe(p, cfg, x, rules)
+    if kind == "rwkv_cm":
+        raise ValueError("rwkv_cm is stateful; handled in model block")
+    if isinstance(p.get("w_up"), QTensor):
+        p = dict(p)
+        for k in ("w_up", "w_gate", "w_down"):
+            if isinstance(p.get(k), QTensor):
+                p[k] = dequantize(p[k], jnp.dtype(cfg.compute_dtype))
+    if _use_pallas(cfg) and kind in ("gelu", "silu_gated", "gelu_gated",
+                                     "relu2") and "b_up" not in p:
+        from repro.kernels import ops
+        return ops.ffn_act(
+            x, p["w_up"], p.get("w_gate"), p["w_down"], kind)
+    return L.apply_mlp(p, cfg, x, rules, mlp_type=kind)
+
+
+# ---------------------------------------------------------------------------
+# FUSED_QKV_PROJ + FUSED_ATTN_STREAM
+# ---------------------------------------------------------------------------
+def apply_attention_seq(p: dict, cfg: ModelConfig, x: jax.Array,
+                        positions: jax.Array, rules, causal: bool,
+                        build_cache: bool = False, max_len: int = 0
+                        ) -> tuple[jax.Array, dict | None]:
+    """Full-sequence attention (train / prefill / encoder). When
+    ``build_cache``, the post-RoPE K/V are absorbed into KV stores
+    (flat or CHIME-tiered per cfg.kv_policy)."""
+    from repro.core import kv_tiers as KT
+    q, k, v = A.qkv_proj(p, cfg, x, positions, rules)
+    S = x.shape[1]
+    if _use_pallas(cfg) and causal:
+        from repro.kernels import ops
+        o = ops.attn_stream(q, k, v, causal=True)
+    else:
+        mask = A.causal_mask(S, S) if causal else None
+        o = A.gqa_scores_softmax_pv(
+            q, k, v, mask, rules=rules,
+            scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
+    cache = None
+    if build_cache:
+        cache = {
+            "k": KT.store_from_full(k, cfg.kv_policy, cfg.kv_hot_window,
+                                    S, max_len),
+            "v": KT.store_from_full(v, cfg.kv_policy, cfg.kv_hot_window,
+                                    S, max_len),
+        }
+    return A.attn_out(p, cfg, o, rules), cache
+
+
+def apply_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                           cache: dict, pos, rules
+                           ) -> tuple[jax.Array, dict]:
+    """One-token decode over flat or CHIME-tiered KV stores."""
+    from repro.core import kv_tiers as KT
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = A.qkv_proj(p, cfg, x, positions, rules)
+    ck = KT.store_append(cache["k"], k_new, pos)
+    cv = KT.store_append(cache["v"], v_new, pos)
+    if "hot" in ck:
+        # tiered: two-segment flash merge — int8 cold tier read directly
+        # (scales factored into the dots), no concat/resharding
+        o = A.attend_tiered(cfg, q, ck, cv, pos)
+    else:
+        cd = jnp.dtype(cfg.compute_dtype)
+        kv, valid = KT.store_read(ck, pos, cd)
+        vv, _ = KT.store_read(cv, pos, cd)
+        # decode: the broadcast K/V must KEEP the cache's seq sharding —
+        # constraining seq to replicated force-gathers the whole cache
+        # every step (observed: 2x 5.4 GB/layer/step on llama4)
+        o = A.gqa_scores_softmax_pv(
+            q, kv, vv, valid[None, None, None, :], rules=rules,
+            scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+            kv_logical=("batch", "kv_seq_shard", "heads", None))
+    return A.attn_out(p, cfg, o, rules), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLA (latent cache — flat or tiered, same stores)
+# ---------------------------------------------------------------------------
+def apply_mla_seq(p: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array, rules, causal: bool,
+                  build_cache: bool = False, max_len: int = 0
+                  ) -> tuple[jax.Array, dict | None]:
+    from repro.core import kv_tiers as KT
+    S = x.shape[1]
+    c_kv, k_rope = A.mla_latents(p, cfg, x, positions)
+    q_nope, q_rope = A.mla_queries(p, cfg, x, positions)
+    mask = (A.causal_mask(S, S) if causal else None)
+    out = A.mla_attention(p, cfg, q_nope, q_rope, c_kv, k_rope, mask,
+                          absorbed=cfg.mla_absorbed)
+    cache = None
+    if build_cache:
+        cache = {
+            "c_kv": KT.store_from_full(c_kv, cfg.kv_policy,
+                                       cfg.kv_hot_window, S, max_len),
+            "k_rope": KT.store_from_full(k_rope, cfg.kv_policy,
+                                         cfg.kv_hot_window, S, max_len),
+        }
+    return out, cache
+
+
+def apply_mla_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                     cache: dict, pos, rules) -> tuple[jax.Array, dict]:
+    from repro.core import kv_tiers as KT
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    c_new, r_new = A.mla_latents(p, cfg, x, positions)
+    q_nope, q_rope = A.mla_queries(p, cfg, x, positions)
+    cc = KT.store_append(cache["c_kv"], c_new, pos)
+    cr = KT.store_append(cache["k_rope"], r_new, pos)
+    if "hot" in cc:
+        out = A.mla_attend_tiered(p, cfg, q_nope, q_rope, cc, cr, pos)
+    else:
+        cd = jnp.dtype(cfg.compute_dtype)
+        c_all, valid = KT.store_read(cc, pos, cd)
+        r_all, _ = KT.store_read(cr, pos, cd)
+        mask = valid[None, None, None, :]
+        out = A.mla_attention(p, cfg, q_nope, q_rope, c_all, r_all, mask,
+                              absorbed=cfg.mla_absorbed)
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
+# ---------------------------------------------------------------------------
+# FUSED_NORM
+# ---------------------------------------------------------------------------
+def apply_norm(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if _use_pallas(cfg):
+        from repro.kernels import ops
+        if cfg.norm_type == "rmsnorm":
+            return ops.fused_norm(x, p["scale"], None, kind="rms")
+        return ops.fused_norm(x, p["scale"], p["bias"], kind="layer")
+    return L.apply_norm(p, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# "RRAM" weight placement (planner hook)
+# ---------------------------------------------------------------------------
+_FFN_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def place_ffn_weights_int8(params, path: tuple = ()):
+    """Convert every dense-FFN weight leaf to an int8 QTensor store. Walks
+    the params pytree looking for mlp scopes — the planner's 'move FFN
+    weights into the RRAM domain' step."""
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if k in _FFN_KEYS and isinstance(v, jax.Array) and v.ndim >= 2 \
+                    and path and path[-1] in ("mlp", "shared"):
+                from repro.core.quant import quantize
+                out[k] = quantize(v)
+            else:
+                out[k] = place_ffn_weights_int8(v, path + (k,))
+        return out
+    return params

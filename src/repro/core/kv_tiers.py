@@ -1,0 +1,207 @@
+"""CHIME KV-cache tiered scheduling (paper §III-C ②), TPU realization.
+
+The M3D DRAM stack's vertical latency gradient (read = 3 + 0.8·L ns) becomes
+a *precision/bandwidth* gradient on TPU:
+
+  Tier-0 (hot)    : the most recent ``hot_window`` tokens, full precision
+                    (bf16) — these dominate attention mass in decoding and
+                    are what the Pallas attention kernel streams first.
+  Tiers 1-3 (cold): older tokens, int8 per-(token,head) quantized — half the
+                    HBM bytes per decode step, the dominant decode cost.
+  Tier-4 (frozen) : the paper's write-once RRAM offload. Cold slots are
+                    written exactly once, when a token ages out of the hot
+                    window; per-block write counters assert the endurance
+                    discipline (tests/test_kv_tiers.py proves writes==1).
+
+The cache is a plain pytree usable inside jit/pjit serve_step; every update
+is functional. Works for GQA K/V tensors and MLA latents alike (anything of
+shape (B, L, ...)).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import dequantize_per_token, quantize_per_token
+
+ENDURANCE_BLOCK = 128  # tokens per endurance-accounting block
+
+
+def init_tiered(batch: int, max_len: int, inner: tuple[int, ...],
+                hot_window: int, dtype=jnp.bfloat16) -> dict:
+    """A tiered store for one cached tensor of per-token shape ``inner``."""
+    W = min(hot_window, max_len)
+    return {
+        "hot": jnp.zeros((batch, W) + inner, dtype),
+        "cold_q": jnp.zeros((batch, max_len) + inner, jnp.int8),
+        "cold_scale": jnp.ones((batch, max_len) + inner[:-1] + (1,),
+                               jnp.float32),
+        "writes": jnp.zeros(
+            ((max_len + ENDURANCE_BLOCK - 1) // ENDURANCE_BLOCK,),
+            jnp.int32),
+    }
+
+
+def tiered_logical(inner_logical: tuple[str | None, ...]) -> dict:
+    seq_ax = ("batch", "kv_seq_shard") + inner_logical
+    return {
+        "hot": ("batch", None) + inner_logical,
+        "cold_q": seq_ax,
+        "cold_scale": ("batch", "kv_seq_shard") + inner_logical[:-1] + (None,),
+        "writes": (None,),
+    }
+
+
+def hot_window_of(cache: dict) -> int:
+    return cache["hot"].shape[1]
+
+
+def tiered_from_full(full: jax.Array, hot_window: int, length,
+                     max_len: int) -> dict:
+    """Prefill path: build a tiered store from a fully-materialized
+    (B, S, ...) tensor whose first ``length`` positions are valid. The cold
+    prefix is quantized in one shot (each slot written once — the paper's
+    'one-shot, write-once' RRAM offload); the last W tokens land in the hot
+    ring at slot p % W."""
+    B, S = full.shape[:2]
+    W = min(hot_window, max_len)
+    assert S <= max_len
+    q, scale = quantize_per_token(full)
+    cold_q = jnp.zeros((B, max_len) + full.shape[2:], jnp.int8)
+    cold_q = jax.lax.dynamic_update_slice(
+        cold_q, q, (0,) * cold_q.ndim)
+    cold_scale = jnp.ones((B, max_len) + full.shape[2:-1] + (1,),
+                          jnp.float32)
+    cold_scale = jax.lax.dynamic_update_slice(
+        cold_scale, scale, (0,) * cold_scale.ndim)
+    # hot ring: position p -> slot p % W; fill from the last W valid tokens
+    pos = jnp.arange(W)
+    # slot i holds absolute position: largest p < length with p % W == i
+    abs_pos = (length - 1) - ((length - 1 - pos) % W)
+    abs_pos = jnp.clip(abs_pos, 0, S - 1)
+    hot = jnp.take(full, abs_pos, axis=1)
+    writes = jnp.zeros_like(init_tiered(B, max_len, full.shape[2:],
+                                        W)["writes"])
+    n_cold_blocks = jnp.maximum(length - W, 0) // ENDURANCE_BLOCK
+    writes = jnp.where(
+        jnp.arange(writes.shape[0]) < n_cold_blocks, 1, writes)
+    return {"hot": hot, "cold_q": cold_q, "cold_scale": cold_scale,
+            "writes": writes}
+
+
+def tiered_append(cache: dict, new: jax.Array, pos) -> dict:
+    """Decode step: write token ``pos`` (shape (B, 1, ...)) into the hot
+    ring; the evicted token (pos - W) is quantized into its cold slot —
+    written exactly once in the cache's lifetime (endurance-aware)."""
+    W = hot_window_of(cache)
+    slot = pos % W
+    evict_pos = pos - W
+    evicted = jax.lax.dynamic_slice_in_dim(cache["hot"], slot, 1, axis=1)
+    q, scale = quantize_per_token(evicted)
+    do_evict = evict_pos >= 0
+    safe_evict = jnp.maximum(evict_pos, 0)
+    old_q = jax.lax.dynamic_slice_in_dim(
+        cache["cold_q"], safe_evict, 1, axis=1)
+    old_s = jax.lax.dynamic_slice_in_dim(
+        cache["cold_scale"], safe_evict, 1, axis=1)
+    cold_q = jax.lax.dynamic_update_slice_in_dim(
+        cache["cold_q"], jnp.where(do_evict, q, old_q), safe_evict, axis=1)
+    cold_scale = jax.lax.dynamic_update_slice_in_dim(
+        cache["cold_scale"], jnp.where(do_evict, scale, old_s),
+        safe_evict, axis=1)
+    hot = jax.lax.dynamic_update_slice_in_dim(
+        cache["hot"], new.astype(cache["hot"].dtype), slot, axis=1)
+    blk = safe_evict // ENDURANCE_BLOCK
+    writes = cache["writes"].at[blk].add(
+        jnp.where(do_evict, 1, 0))
+    return {"hot": hot, "cold_q": cold_q, "cold_scale": cold_scale,
+            "writes": writes}
+
+
+def tiered_read(cache: dict, pos, dtype=jnp.bfloat16
+                ) -> tuple[jax.Array, jax.Array]:
+    """Materialize the attendable store as (values, valid_mask) along a
+    combined length axis [cold(max_len) ++ hot(W)].
+
+    Positions < pos - W + 1 read from the int8 cold tier (half the HBM
+    bytes); the hot window reads bf16. The consuming attention masks
+    invalid slots. XLA fuses the dequant into the score GEMM, so the cold
+    tier's HBM traffic really is the int8 array.
+    """
+    W = hot_window_of(cache)
+    max_len = cache["cold_q"].shape[1]
+    cold = dequantize_per_token(cache["cold_q"], cache["cold_scale"], dtype)
+    cold_valid = jnp.arange(max_len) <= (pos - W)
+    hot_pos = hot_ring_positions(pos, W)
+    hot_valid = (hot_pos >= 0) & (hot_pos <= pos)
+    values = jnp.concatenate([cold, cache["hot"].astype(dtype)], axis=1)
+    valid = jnp.concatenate([cold_valid, hot_valid], axis=0)
+    return values, valid
+
+
+def hot_ring_positions(pos, W: int) -> jax.Array:
+    """Absolute position held by each hot slot, given current write pos."""
+    i = jnp.arange(W)
+    return pos - ((pos - i) % W)
+
+
+def combined_positions(cache: dict, pos) -> jax.Array:
+    """Absolute positions along the combined [cold ++ hot] axis (for masks
+    or position-dependent logic)."""
+    W = hot_window_of(cache)
+    max_len = cache["cold_q"].shape[1]
+    return jnp.concatenate(
+        [jnp.arange(max_len), hot_ring_positions(pos, W)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# generic cached-tensor store: {"flat": arr} or a tiered dict.
+# One abstraction for GQA K/V tensors and MLA latents alike.
+# ---------------------------------------------------------------------------
+def store_init(batch: int, max_len: int, inner: tuple[int, ...],
+               policy: str, hot_window: int, dtype=jnp.bfloat16) -> dict:
+    if policy == "tiered":
+        return init_tiered(batch, max_len, inner, hot_window, dtype)
+    return {"flat": jnp.zeros((batch, max_len) + inner, dtype)}
+
+
+def store_logical(inner_logical: tuple[str | None, ...],
+                  policy: str) -> dict:
+    if policy == "tiered":
+        return tiered_logical(inner_logical)
+    return {"flat": ("batch", "kv_seq_shard") + inner_logical}
+
+
+def store_from_full(full: jax.Array, policy: str, hot_window: int,
+                    length, max_len: int) -> dict:
+    """Prefill: absorb a (B, S, ...) tensor (first ``length`` valid)."""
+    if policy == "tiered":
+        return tiered_from_full(full, hot_window, length, max_len)
+    B = full.shape[0]
+    flat = jnp.zeros((B, max_len) + full.shape[2:], full.dtype)
+    flat = jax.lax.dynamic_update_slice(flat, full, (0,) * flat.ndim)
+    return {"flat": flat}
+
+
+def store_append(store: dict, new: jax.Array, pos) -> dict:
+    if "hot" in store:
+        return tiered_append(store, new, pos)
+    return {"flat": jax.lax.dynamic_update_slice_in_dim(
+        store["flat"], new.astype(store["flat"].dtype), pos, axis=1)}
+
+
+def store_read(store: dict, pos, dtype=jnp.bfloat16
+               ) -> tuple[jax.Array, jax.Array]:
+    """-> (values (B, L', ...), valid (L',)) where L' = max_len (flat) or
+    max_len + W (tiered, [cold ++ hot])."""
+    if "hot" in store:
+        return tiered_read(store, pos, dtype)
+    L = store["flat"].shape[1]
+    return store["flat"].astype(dtype), jnp.arange(L) <= pos
+
+
+def endurance_report(cache: dict) -> dict:
+    w = cache["writes"]
+    return {"max_writes_per_block": jnp.max(w),
+            "total_cold_writes": jnp.sum(w)}

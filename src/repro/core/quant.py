@@ -1,0 +1,98 @@
+"""Blockwise quantization — the TPU realization of CHIME's RRAM storage.
+
+RRAM's value proposition in the paper is *dense, cheap-to-read, expensive-to-
+write* storage for read-mostly tensors (FFN weights; frozen cold KV blocks).
+On TPU the analogous denser/cheaper-to-read representation is low-bit
+storage with on-the-fly dequantization fused into the consuming GEMM:
+an int8 weight halves the HBM bytes of the memory-roofline term, exactly as
+RRAM halves pressure on the DRAM chiplet. Writes to these stores are
+expensive (requantization) and the KV frozen tier is written once — the
+endurance discipline survives the port.
+
+Also hosts int8 gradient compression for cross-pod all-reduce
+(distributed-optimization trick; see optim/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class QTensor:
+    """Blockwise-quantized tensor: q int8/int4(in int8 carrier), scales f32.
+    Quantized along the *last* axis in blocks of ``block``."""
+    q: jax.Array
+    scale: jax.Array
+    bits: int = 8
+
+    def tree_flatten(self):
+        return (self.q, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+
+jax.tree_util.register_pytree_node(
+    QTensor, QTensor.tree_flatten, QTensor.tree_unflatten)
+
+
+def quantize(x: jax.Array, bits: int = 8, block: int = 256) -> QTensor:
+    """Symmetric blockwise quantization along the last axis."""
+    *lead, d = x.shape
+    if d % block != 0:
+        block = d
+    xb = x.reshape(*lead, d // block, block).astype(jnp.float32)
+    maxv = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.where(maxv > 0, maxv / qmax, 1.0)
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax).astype(jnp.int8)
+    return QTensor(q.reshape(*lead, d),
+                   scale[..., 0].reshape(*lead, d // block), bits)
+
+
+def dequantize(t: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    *lead, d = t.q.shape
+    nb = t.scale.shape[-1]
+    block = d // nb
+    xb = t.q.reshape(*lead, nb, block).astype(jnp.float32) \
+        * t.scale[..., None]
+    return xb.reshape(*lead, d).astype(dtype)
+
+
+def quantize_per_token(x: jax.Array, bits: int = 8
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric quantization over the trailing feature
+    dim — the KV cold-tier format. Returns (q int8, scale f32[..., 1])."""
+    xf = x.astype(jnp.float32)
+    maxv = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.where(maxv > 0, maxv / qmax, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_per_token(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (cross-pod int8 all-reduce)
+# ---------------------------------------------------------------------------
+def compress_grad(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor int8 with stochastic-free symmetric scaling; the all-reduce
+    then moves 1/4 of the bf16 bytes over the pod axis."""
+    maxv = jnp.max(jnp.abs(g))
+    scale = jnp.where(maxv > 0, maxv / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_grad(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,91 @@
+"""Deterministic, resumable synthetic data pipeline.
+
+Production properties this models faithfully:
+  * host-sharded: each data-parallel host materializes only its slice of
+    the global batch (``host_slice``);
+  * deterministic + seekable: batch t is a pure function of (seed, t), so
+    restart-from-checkpoint replays the exact stream (the checkpoint stores
+    only the step counter — fault tolerance needs nothing else);
+  * modality-aware: emits token LM batches, VQA-style (patches + tokens)
+    batches for VLM archs, and frame batches for audio archs, mirroring
+    the paper's VQA inference workload (512x512 image + 128 text tokens).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    seed: int = 0
+    # markov-chain synthetic text: makes loss curves meaningfully decrease
+    order: int = 2
+
+
+class SyntheticPipeline:
+    def __init__(self, cfg: ModelConfig, dcfg: DataConfig,
+                 host_index: int = 0, host_count: int = 1):
+        assert dcfg.global_batch % host_count == 0
+        self.cfg = cfg
+        self.dcfg = dcfg
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = dcfg.global_batch // host_count
+
+    def host_slice(self, step: int) -> dict:
+        """Batch ``step`` for this host — pure function of (seed, step)."""
+        rng = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.dcfg.seed), step),
+            self.host_index)
+        B, S = self.local_batch, self.dcfg.seq_len
+        cfg = self.cfg
+        r1, r2, r3 = jax.random.split(rng, 3)
+        if cfg.family == "audio":
+            frames = jax.random.normal(
+                r1, (B, S, cfg.frontend.frontend_dim), jnp.float32)
+            labels = jax.random.randint(r2, (B, S), 0, cfg.vocab_size)
+            return {"frames": frames, "labels": labels}
+        tokens = self._markov_tokens(r1, B, S)
+        if cfg.frontend is not None:
+            tv = cfg.frontend.num_tokens
+            patches = jax.random.normal(
+                r2, (B, tv, cfg.frontend.frontend_dim), jnp.float32)
+            text = tokens[:, :S - tv]
+            labels = jnp.concatenate(
+                [jnp.zeros((B, tv), jnp.int32),
+                 jnp.roll(text, -1, axis=1)], axis=1)
+            mask = jnp.concatenate(
+                [jnp.zeros((B, tv)), jnp.ones((B, S - tv))], axis=1)
+            return {"tokens": text, "patches": patches,
+                    "labels": labels, "loss_mask": mask}
+        labels = jnp.roll(tokens, -1, axis=1)
+        mask = jnp.ones((B, S)).at[:, -1].set(0.0)
+        return {"tokens": tokens, "labels": labels, "loss_mask": mask}
+
+    def _markov_tokens(self, rng, B: int, S: int) -> jax.Array:
+        """Learnable synthetic text: token_{t+1} = f(token_t) + noise, so a
+        model that trains actually reduces loss below uniform entropy."""
+        V = self.cfg.vocab_size
+        k1, k2 = jax.random.split(rng)
+        start = jax.random.randint(k1, (B,), 0, V)
+        noise = jax.random.randint(k2, (B, S), 0, 17)
+
+        def step(tok, n):
+            nxt = (tok * 31 + 7 + n) % V
+            return nxt, nxt
+        _, toks = jax.lax.scan(step, start, noise.T)
+        return toks.T.astype(jnp.int32)
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.host_slice(step)
+            step += 1

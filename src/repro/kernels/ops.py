@@ -1,0 +1,64 @@
+"""Public jit'd wrappers for the Pallas kernels with model-layout adapters
+and jnp fallback (interpret on CPU, compiled on TPU)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attn_stream as _attn
+from repro.kernels import ffn_act as _ffn
+from repro.kernels import fused_norm as _norm
+from repro.kernels import qkv_proj as _qkv
+from repro.kernels import ref
+
+attn_stream_kernel = _attn.attn_stream
+ffn_act_kernel = _ffn.ffn_act
+qkv_proj_kernel = _qkv.qkv_proj
+fused_norm_kernel = _norm.fused_norm
+
+
+def attn_stream(q: jax.Array, k: jax.Array, v: jax.Array,
+                causal: bool = True) -> jax.Array:
+    """Model layout (B,S,H,D)/(B,L,Hkv,D) -> kernel layout and back."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    o = _attn.attn_stream(qt, kt, vt, causal=causal)
+    return jnp.swapaxes(o, 1, 2)
+
+
+def ffn_act(x: jax.Array, w_up: jax.Array, w_gate: jax.Array | None,
+            w_down: jax.Array, kind: str) -> jax.Array:
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])
+    out = _ffn.ffn_act(xf, w_up, w_gate, w_down, kind)
+    return out.reshape(*lead, -1)
+
+
+def qkv_proj(x: jax.Array, wq: jax.Array, wk: jax.Array, wv: jax.Array,
+             bq=None, bk=None, bv=None):
+    """Weights (D, Hx, Dh) per projection; returns q,k,v in model layout."""
+    D = x.shape[-1]
+    lead = x.shape[:-1]
+    shapes = [w.shape[1:] for w in (wq, wk, wv)]
+    w = jnp.concatenate([w.reshape(D, -1) for w in (wq, wk, wv)], axis=1)
+    b = None
+    if bq is not None:
+        b = jnp.concatenate([t.reshape(-1) for t in (bq, bk, bv)])
+    out = _qkv.qkv_proj(x.reshape(-1, D), w, b)
+    sizes = [h * d for h, d in shapes]
+    qf, kf, vf = jnp.split(out, [sizes[0], sizes[0] + sizes[1]], axis=-1)
+    return (qf.reshape(*lead, *shapes[0]),
+            kf.reshape(*lead, *shapes[1]),
+            vf.reshape(*lead, *shapes[2]))
+
+
+def fused_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None,
+               kind: str = "rms") -> jax.Array:
+    lead = x.shape[:-1]
+    out = _norm.fused_norm(x.reshape(-1, x.shape[-1]), scale, bias, kind)
+    return out.reshape(*lead, -1)
+
+
+__all__ = ["attn_stream", "ffn_act", "qkv_proj", "fused_norm", "ref"]

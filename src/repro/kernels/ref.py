@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (paper Table I fused kernels).
+These are the ground truth the kernel tests assert against, and the
+execution path the dry-run lowers (so cost_analysis reflects shipped HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 20
+
+
+def attn_stream_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    scale: float | None = None) -> jax.Array:
+    """q: (B,H,S,D); k,v: (B,Hkv,L,D); GQA by head grouping."""
+    B, H, S, D = q.shape
+    Hkv, L = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, S, D)
+    scale = scale if scale is not None else D ** -0.5
+    scores = jnp.einsum("bkgsd,bkld->bkgsl", qf,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(L)[None, :] <= jnp.arange(S)[:, None] + (L - S)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgsl,bkld->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def ffn_act_ref(x: jax.Array, w_up: jax.Array, w_gate: jax.Array | None,
+                w_down: jax.Array, act: str = "silu_gated") -> jax.Array:
+    """x: (M, D); w_up: (D, F); w_down: (F, D)."""
+    h = x.astype(jnp.float32) @ w_up.astype(jnp.float32)
+    if act in ("silu_gated",):
+        h = jax.nn.silu(h)
+    elif act in ("gelu", "gelu_gated"):
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(act)
+    if w_gate is not None:
+        h = h * (x.astype(jnp.float32) @ w_gate.astype(jnp.float32))
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+def qkv_proj_ref(x: jax.Array, w: jax.Array,
+                 b: jax.Array | None) -> jax.Array:
+    """x: (M, D); w: (D, N) = concat(Wq|Wk|Wv); one pass over x."""
+    out = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def fused_norm_ref(x: jax.Array, scale: jax.Array,
+                   bias: jax.Array | None, kind: str = "rms",
+                   eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        out = xf * jax.lax.rsqrt(
+            jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        out = out * scale.astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mean) * jax.lax.rsqrt(var + eps) \
+            * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)

@@ -1,0 +1,134 @@
+"""The (architecture x input-shape) evaluation grid: 10 archs x 4 shapes =
+40 cells, with principled skips (DESIGN.md §Arch-applicability):
+
+* long_500k needs sub-quadratic sequence mixing -> only rwkv6-7b (ssm) and
+  zamba2-1.2b (hybrid) run it; pure full-attention archs skip.
+* encoder-only (hubert-xlarge) has no decode step -> decode shapes skip.
+
+Also provides ``input_specs`` — ShapeDtypeStruct stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) — and the
+per-arch dry-run overrides (FSDP + bf16 optimizer state for the >100B
+models so params+optimizer fit per-chip HBM).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (
+    ASSIGNED_ARCHS, LM_SHAPES, ModelConfig, ShapeSpec, get_config)
+
+SUBQUADRATIC = ("rwkv6-7b", "zamba2-1.2b")
+ENCODER_ONLY = ("hubert-xlarge",)
+
+# archs where params+optimizer need FSDP + low-precision optimizer state
+HUGE = ("nemotron-4-340b", "llama4-maverick-400b")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    skip_reason: str | None = None
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}@{self.shape.name}"
+
+
+def all_cells() -> list[Cell]:
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in LM_SHAPES:
+            skip = None
+            if shape.name == "long_500k" and arch not in SUBQUADRATIC:
+                skip = ("full-attention at 524k context is out of scope "
+                        "(sub-quadratic archs only per assignment)")
+            if arch in ENCODER_ONLY and shape.kind == "decode":
+                skip = "encoder-only arch has no decode step"
+            cells.append(Cell(arch, shape, skip))
+    return cells
+
+
+def runnable_cells() -> list[Cell]:
+    return [c for c in all_cells() if c.skip_reason is None]
+
+
+def cell_config(arch: str, shape: ShapeSpec, **overrides) -> ModelConfig:
+    """The dry-run/runtime config for one cell."""
+    cfg = get_config(arch)
+    kw: dict = {}
+    if shape.kind == "train":
+        # FSDP (ZeRO-3-style weight/optimizer sharding over 'data') + full
+        # per-layer remat is the memory-sane default at 256-512 chips
+        kw.update(param_dtype="float32", compute_dtype="bfloat16",
+                  remat="full", fsdp=True)
+        if arch in HUGE:
+            # bf16 params/opt state + Megatron sequence parallelism are
+            # what make 340B-770B x 1M-token steps fit 16 GB/chip
+            kw.update(param_dtype="bfloat16", seq_sharding=True)
+    else:
+        kw.update(param_dtype="bfloat16", compute_dtype="bfloat16",
+                  remat="none")
+        if arch in HUGE:
+            kw.update(fsdp=True)
+    if shape.kind == "decode":
+        # CHIME tiered KV is evaluated as the optimized variant; the
+        # baseline dry-run uses the flat cache (see benchmarks/roofline.py)
+        kw.setdefault("kv_policy", "flat")
+    kw.update(overrides)
+    return cfg.replace(**kw)
+
+
+def train_microbatches(arch: str, shape: ShapeSpec) -> int:
+    """Gradient-accumulation factor per cell. Keeps per-microbatch batch
+    >= 32 (the multi-pod batch sharding) while bounding activations."""
+    if shape.kind != "train":
+        return 1
+    return 16 if arch in HUGE else 4
+
+
+def grad_accum_dtype(arch: str) -> str:
+    return "bfloat16" if arch in HUGE else "float32"
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's *batch* argument.
+    (KV caches/TrainState are derived separately — see launch/steps.py.)"""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), i32)}
+    if cfg.family == "audio":
+        batch = {"frames": sds((B, S, cfg.frontend.frontend_dim), f32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), i32)
+        return batch
+    if cfg.frontend is not None:
+        tv = cfg.frontend.num_tokens
+        batch = {"tokens": sds((B, S - tv), i32),
+                 "patches": sds((B, tv, cfg.frontend.frontend_dim), f32)}
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), i32)
+        return batch
+    batch = {"tokens": sds((B, S), i32)}
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), i32)
+    return batch
+
+
+def batch_logical(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    lg = {}
+    for k in input_specs(cfg, shape):
+        if k == "patches":
+            lg[k] = ("batch", None, None)
+        elif k == "frames":
+            lg[k] = ("batch", None, None)
+        else:
+            lg[k] = ("batch", None)
+    return lg

@@ -1,0 +1,318 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+in experiments/probe_cost_semantics.py), which under-counts layer-scanned
+models by ~num_layers. So this module re-derives FLOPs / bytes / collective
+traffic by walking the optimized HLO text with *execution multiplicities*:
+
+  1. parse every computation and its ops (result shapes, operands, attrs);
+  2. build the call graph (while body/condition, fusion calls, to_apply)
+     and extract while trip counts from the loop-condition constants;
+  3. propagate multiplicity from ENTRY; aggregate
+       - dot FLOPs (2 * prod(out_dims) * prod(lhs contracting dims)),
+       - bytes accessed (operands + outputs of executed top-level ops;
+         fusion internals counted at the fusion call site),
+       - collective bytes by op kind (all-gather / all-reduce /
+         reduce-scatter / all-to-all / collective-permute).
+
+All quantities are per-device (the HLO module is the post-SPMD partition).
+
+Roofline terms (TPU v5e):
+  compute    = FLOPs / 197 TFLOP/s
+  memory     = bytes_accessed / 819 GB/s
+  collective = collective_bytes / 50 GB/s per link
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12         # bf16 FLOP/s
+HBM_BW = 819e9              # B/s
+ICI_BW = 50e9               # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "iota", "broadcast", "reshape", "copy-start",
+    "copy-done",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+([\w-]+)\((.*)$")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shapes_in(segment: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(segment: str) -> float:
+    return sum(_DTYPE_BYTES[dt] * math.prod(dims or [1])
+               for dt, dims in _shapes_in(segment))
+
+
+class Op:
+    __slots__ = ("name", "result", "opcode", "rest", "line")
+
+    def __init__(self, name, result, opcode, rest, line):
+        self.name = name
+        self.result = result      # result-shape text segment
+        self.opcode = opcode
+        self.rest = rest          # operand list + attrs (raw text)
+        self.line = line
+
+
+def parse_computations(hlo_text: str) -> tuple[dict, str]:
+    """-> ({comp_name: [Op, ...]}, entry_name)."""
+    comps: dict[str, list[Op]] = {}
+    entry = None
+    cur: list[Op] | None = None
+    cur_name = None
+    for line in hlo_text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur_name = m.group(2)
+            cur = []
+            comps[cur_name] = cur
+            if m.group(1):
+                entry = cur_name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            cur.append(Op(om.group(1), om.group(2), om.group(3),
+                          om.group(4), line))
+    return comps, entry
+
+
+_CALL_ATTRS = (("body", True), ("calls", False), ("to_apply", False),
+               ("condition", False), ("true_computation", False),
+               ("false_computation", False), ("branch_computations", False))
+
+
+def _callees(op: Op) -> list[tuple[str, bool]]:
+    """[(callee_name, is_while_body)]."""
+    out = []
+    for attr, is_body in _CALL_ATTRS:
+        for m in re.finditer(attr + r"=\{?%?([\w\.\-, %]+)\}?", op.rest):
+            names = [n.strip().lstrip("%") for n in m.group(1).split(",")]
+            out.extend((n, is_body and op.opcode == "while") for n in names
+                       if n)
+    return out
+
+
+def _trip_count(comps: dict, cond_name: str | None) -> int:
+    """Max integer constant in the while condition computation."""
+    if cond_name is None or cond_name not in comps:
+        return 1
+    best = 1
+    for op in comps[cond_name]:
+        for c in _CONST_RE.findall(op.line):
+            best = max(best, int(c))
+    return best
+
+
+def _multiplicities(comps: dict, entry: str) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # topological-ish propagation: repeat until fixpoint (call graphs here
+    # are DAGs; a few passes suffice)
+    for _ in range(12):
+        changed = False
+        snapshot = dict(mult)
+        for comp, ops in comps.items():
+            m = snapshot.get(comp, 0.0)
+            if m <= 0:
+                continue
+            for op in ops:
+                cond = None
+                if op.opcode == "while":
+                    cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                    cond = cm.group(1) if cm else None
+                trip = _trip_count(comps, cond) if op.opcode == "while" else 1
+                for callee, is_body in _callees(op):
+                    add = m * (trip if (is_body or callee == cond) else 1)
+                    if mult[callee] < add:
+                        mult[callee] = add
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(op: Op, symbols: dict[str, list[int]]) -> float:
+    out_shapes = _shapes_in(op.result)
+    if not out_shapes:
+        return 0.0
+    out_elems = math.prod(out_shapes[0][1] or [1])
+    # lhs operand name = first operand
+    opnd = op.rest.split(")")[0]
+    first = opnd.split(",")[0].strip().lstrip("%")
+    lhs_dims = symbols.get(first.split(" ")[-1].lstrip("%"), [])
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if cm and lhs_dims:
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                contract *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contract
+
+
+def analyze(hlo_text: str) -> dict:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return {"flops": 0, "bytes": 0, "collectives": {}, "error": "no entry"}
+    mult = _multiplicities(comps, entry)
+
+    # which computations are fusion bodies (bytes counted at call site)
+    fusion_bodies: set[str] = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if m:
+                    fusion_bodies.add(m.group(1))
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    coll_ops = 0
+
+    for comp, ops in comps.items():
+        m = mult.get(comp, 0.0)
+        if m <= 0:
+            continue
+        symbols = {}
+        for op in ops:
+            shp = _shapes_in(op.result)
+            symbols[op.name] = shp[0][1] if shp else []
+        for op in ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, symbols)
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                b = _shape_bytes(op.result)
+                coll[base] += m * b
+                coll_ops += 1
+            if comp in fusion_bodies:
+                continue  # bytes for fusion internals counted at call site
+            if op.opcode in _SKIP_BYTES_OPS or op.opcode.endswith("-done"):
+                continue
+            # output bytes + operand bytes (operands resolved via symbols)
+            b = _shape_bytes(op.result)
+            for name in re.findall(r"%([\w\.\-]+)", op.rest.split(")")[0]):
+                dims = symbols.get(name)
+                if dims is not None:
+                    # dtype unknown from symbol table; re-find in def line
+                    b += _shape_bytes_from_dims(comp, name, comps, dims)
+            bytes_acc += m * b
+
+    return {
+        "flops": flops,
+        "bytes": bytes_acc,
+        "collective_bytes": coll,
+        "collective_total": sum(coll.values()),
+        "collective_op_count": coll_ops,
+        "computations": len(comps),
+    }
+
+
+_defline_cache: dict[int, dict] = {}
+
+
+def _shape_bytes_from_dims(comp: str, name: str, comps: dict,
+                           dims: list[int]) -> float:
+    """Bytes of an operand; dtype looked up from its definition line."""
+    key = id(comps)
+    table = _defline_cache.setdefault(key, {})
+    ckey = (comp, name)
+    if ckey in table:
+        return table[ckey]
+    val = 0.0
+    for op in comps.get(comp, []):
+        if op.name == name:
+            val = _shape_bytes(op.result)
+            break
+    table[ckey] = val
+    return val
+
+
+# ---------------------------------------------------------------------------
+# public API used by dryrun.py
+# ---------------------------------------------------------------------------
+def collective_bytes(hlo_text: str, model=None) -> dict:
+    a = analyze(hlo_text)
+    return {
+        "ops": a["collective_op_count"],
+        "by_kind": a["collective_bytes"],
+        "total": a["collective_total"],
+        "hlo_flops": a["flops"],
+        "hlo_bytes": a["bytes"],
+    }
+
+
+def model_flops(params_active: int, shape) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D inference (D = processed tokens)."""
+    if shape.kind == "train":
+        return 6.0 * params_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * params_active * shape.global_batch * shape.seq_len
+    return 2.0 * params_active * shape.global_batch
+
+
+def roofline_terms(result: dict, shape) -> dict:
+    n_chips = result["n_chips"]
+    coll = result["collectives"]
+    # prefer the multiplicity-corrected HLO walk; fall back to cost_analysis
+    flops_dev = coll.get("hlo_flops") or \
+        (result["cost"]["flops_per_device"] or 0.0)
+    bytes_dev = coll.get("hlo_bytes") or \
+        (result["cost"]["bytes_accessed_per_device"] or 0.0)
+    coll_dev = coll["total"]
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    mf = model_flops(result["active_params"], shape)
+    hlo_flops_total = flops_dev * n_chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_s": terms[dominant],
+        "model_flops": mf,
+        "hlo_flops_total": hlo_flops_total,
+        "useful_flops_ratio": (mf / hlo_flops_total
+                               if hlo_flops_total else None),
+        "roofline_fraction": (compute_s / terms[dominant]
+                              if terms[dominant] else None),
+    }

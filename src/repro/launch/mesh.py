@@ -1,0 +1,28 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the leading "pod" axis
+carries pure data parallelism across the pod-level DCN/ICI boundary — the
+axis CHIME's cross-pod gradient compression and the elastic re-mesh policy
+(runtime/fault.py) operate on.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the same axis names — lets every pjit code path
+    run unmodified in tests on CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,97 @@
+"""Batched serving driver: prefill + decode with the CHIME tiered KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch paligemma-3b \
+        --reduced --batch 4 --prompt-len 32 --gen 16 --kv-policy tiered
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import kv_tiers as KT
+from repro.data import DataConfig, SyntheticPipeline
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models import Model
+from repro.sharding import ShardingRules
+
+
+def generate(model: Model, params, batch: dict, prompt_len: int,
+             gen_len: int, greedy: bool = True, rng=None):
+    """Prefill then autoregressive decode; returns (tokens, cache)."""
+    max_len = prompt_len + gen_len
+    logits, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len))(params, batch)
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    toks = [tok]
+    for i in range(gen_len - 1):
+        pos = jnp.asarray(prompt_len + i, jnp.int32)
+        logits, cache = step(params, tok, cache, pos)
+        if greedy or rng is None:
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        else:
+            rng, k = jax.random.split(rng)
+            tok = jax.random.categorical(
+                k, logits[:, -1])[:, None].astype(jnp.int32)
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1), cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paligemma-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--kv-policy", default="tiered",
+                    choices=["flat", "tiered"])
+    ap.add_argument("--hot-window", type=int, default=16)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        kv_policy=args.kv_policy, kv_hot_window=args.hot_window)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_local_mesh())
+    rules = ShardingRules(mesh)
+    model = Model(cfg, rules)
+
+    pipe = SyntheticPipeline(cfg, DataConfig(args.batch, args.prompt_len))
+    batch = pipe.host_slice(0)
+    batch.pop("labels", None)
+    batch.pop("loss_mask", None)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        t0 = time.time()
+        toks, cache = generate(model, params, batch, args.prompt_len,
+                               args.gen)
+        dt = time.time() - t0
+        total = args.batch * args.gen
+        print(f"[serve] arch={args.arch} kv={args.kv_policy} "
+              f"generated {toks.shape} in {dt:.2f}s "
+              f"({total / dt:.1f} tok/s incl. compile)")
+        if args.kv_policy == "tiered":
+            # endurance report from the first attention layer's K store
+            for ucache in jax.tree.leaves(
+                    {k: v for k, v in cache.items()},
+                    is_leaf=lambda x: isinstance(x, dict) and "hot" in x):
+                if isinstance(ucache, dict) and "hot" in ucache:
+                    rep = KT.endurance_report(ucache)
+                    print(f"[serve] cold-tier writes: total="
+                          f"{int(rep['total_cold_writes'])} "
+                          f"max/block={int(rep['max_writes_per_block'])}")
+                    break
+        print("[serve] sample token ids:", toks[0, :12].tolist())
+        return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""Step functions (train / prefill / serve) + their sharding derivations.
+
+Everything is pjit end-to-end: parameters, optimizer state, KV caches and
+batches get NamedShardings resolved from logical axes (repro/sharding.py);
+activations are steered by with_sharding_constraint inside the model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.cells import batch_logical, input_specs
+from repro.models import Model
+from repro.optim import AdamWConfig, TrainState, adamw_update
+from repro.sharding import ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: int = 1,
+                    grad_accum_dtype: str = "float32"):
+    """Gradient-accumulated train step: the global batch is split into
+    ``microbatches`` sequential microbatches (scan), bounding activation
+    memory; gradients accumulate in ``grad_accum_dtype`` (bf16 for the
+    >100B models — the low-precision accumulation distributed-optimization
+    trade documented in DESIGN.md)."""
+
+    def train_step(state: TrainState, batch: dict):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(
+                state.params, batch)
+        else:
+            adt = jnp.dtype(grad_accum_dtype)
+            mbs = jax.tree.map(
+                lambda a: a.reshape((microbatches,
+                                     a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(model.loss)(state.params, mb)
+                gacc = jax.tree.map(
+                    lambda acc, gg: acc + gg.astype(acc.dtype), gacc, g)
+                return (gacc, lacc + l), None
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), state.params)
+            (gacc, lsum), _ = jax.lax.scan(
+                body, (gacc0, jnp.zeros((), jnp.float32)), mbs)
+            loss = lsum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, gacc)
+        new_state, metrics = adamw_update(state, grads, opt_cfg)
+        metrics["loss"] = loss
+        return new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len)
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, tokens, cache, pos):
+        return model.decode_step(params, tokens, cache, pos)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract values + shardings
+# ---------------------------------------------------------------------------
+def abstract_train_state(model: Model, opt_cfg: AdamWConfig):
+    p_shapes, _ = model.abstract_params()
+    sdt = jnp.dtype(opt_cfg.state_dtype)
+    opt = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, sdt),
+                       p_shapes)
+    return TrainState(params=p_shapes, mu=opt, nu=opt,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_state_shardings(model: Model, rules: ShardingRules,
+                          opt_cfg: AdamWConfig):
+    p_shard = model.param_shardings(rules)
+    return TrainState(params=p_shard, mu=p_shard, nu=p_shard,
+                      step=NamedSharding(rules.mesh, P()))
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec,
+                    rules: ShardingRules, specs: dict):
+    lg = batch_logical(cfg, shape)
+    return {k: rules.sharding(lg[k], specs[k].shape) for k in specs}
+
+
+def cache_shardings(model: Model, rules: ShardingRules, batch: int,
+                    max_len: int):
+    shapes, logical = model.cache_spec(batch, max_len)
+    return jax.tree.map(
+        lambda sd, ax: rules.sharding(ax, sd.shape), shapes, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def replicated(rules: ShardingRules):
+    return NamedSharding(rules.mesh, P())

@@ -1,0 +1,425 @@
+"""Attention mixers: GQA/MQA/MHA and MLA (DeepSeek), with flat and CHIME
+tiered KV caches.
+
+The jnp implementations here are the oracles; `FUSED_QKV_PROJ` and
+`FUSED_ATTN_STREAM` (paper Table I) have Pallas TPU twins in repro/kernels
+selected via ``cfg.use_pallas_kernels`` through core/fusion.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, apply_rope, embed_axis
+from repro.sharding import logical_constraint
+
+NEG_INF = -2.0 ** 20
+
+
+def _constrain(rules, x, logical):
+    return x if rules is None else logical_constraint(rules, x, logical)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def init_attn(b: ParamBuilder, cfg: ModelConfig):
+    e = embed_axis(cfg)
+    b.param("wq", (cfg.d_model, cfg.num_heads, cfg.head_dim),
+            (e, "heads", None))
+    b.param("wk", (cfg.d_model, cfg.num_kv_heads, cfg.head_dim),
+            (e, "kv_heads", None))
+    b.param("wv", (cfg.d_model, cfg.num_kv_heads, cfg.head_dim),
+            (e, "kv_heads", None))
+    b.param("wo", (cfg.num_heads, cfg.head_dim, cfg.d_model),
+            ("heads", None, e))
+    if cfg.use_attn_bias:
+        b.param("bq", (cfg.num_heads, cfg.head_dim), ("heads", None),
+                init="zeros")
+        b.param("bk", (cfg.num_kv_heads, cfg.head_dim), ("kv_heads", None),
+                init="zeros")
+        b.param("bv", (cfg.num_kv_heads, cfg.head_dim), ("kv_heads", None),
+                init="zeros")
+        b.param("bo", (cfg.d_model,), (None,), init="zeros")
+
+
+def qkv_proj(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+             rules) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """FUSED_QKV_PROJ: GEMM(X·Wq)+bq ; GEMM(X·Wk)+bk ; GEMM(X·Wv)+bv.
+    One pass over X; RoPE applied before caching (keys cached post-RoPE)."""
+    cd = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = _constrain(rules, q, ("batch", None, "heads", None))
+    k = _constrain(rules, k, ("batch", None, "kv_heads", None))
+    v = _constrain(rules, v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def gqa_scores_softmax_pv(q: jax.Array, k: jax.Array, v: jax.Array,
+                          mask: jax.Array | None,
+                          scale: float | None = None,
+                          rules=None,
+                          scores_dtype=jnp.float32,
+                          kv_logical=("batch", None, "heads", None)
+                          ) -> jax.Array:
+    """Grouped attention. q: (B,S,H,D); k,v: (B,L,Hkv,D); mask broadcastable
+    to (B,1,S,L) / (1,1,1,L) or None. Returns (B,S,H,D). This is the jnp
+    oracle for FUSED_ATTN_STREAM (the Pallas kernel streams K/V tiles with
+    online softmax instead of materializing the (S,L) score matrix).
+
+    K/V are broadcast to the full head count before the score einsum so the
+    (B,H,S,L) scores shard cleanly over 'model' on the H dim — the grouped
+    (Hkv, G) reshape formulation makes SPMD fall into involuntary full
+    rematerialization when Hkv < model-axis size (observed on
+    nemotron-340b: replicated 6.4 GB score buffers)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    sdt = jnp.dtype(scores_dtype)
+    kf = k.astype(sdt)
+    vf = v.astype(sdt)
+    if G > 1:
+        kf = jnp.broadcast_to(kf[:, :, :, None],
+                              (B, kf.shape[1], Hkv, G, D)) \
+            .reshape(B, kf.shape[1], H, D)
+        vf = jnp.broadcast_to(vf[:, :, :, None],
+                              (B, vf.shape[1], Hkv, G, D)) \
+            .reshape(B, vf.shape[1], H, D)
+    if rules is not None:
+        from repro.sharding import logical_constraint
+        kf = logical_constraint(rules, kf, kv_logical)
+        vf = logical_constraint(rules, vf, kv_logical)
+    scores = jnp.einsum("bshd,blhd->bhsl", q.astype(sdt), kf) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores,
+                           jnp.asarray(NEG_INF, scores.dtype))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhsl,blhd->bshd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def attn_out(p: dict, cfg: ModelConfig, o: jax.Array, rules) -> jax.Array:
+    out = jnp.einsum("bshk,hkd->bsd", o,
+                     p["wo"].astype(cfg.compute_dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(out.dtype)
+    return out
+
+
+def causal_mask(S: int, L: int, offset: int = 0) -> jax.Array:
+    """(1,1,S,L) causal mask; offset = number of cached tokens before the
+    current block (query i attends key j iff j <= i + offset)."""
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(L)[None, :]
+    return (kj <= qi + offset)[None, None]
+
+
+# ---- flat KV cache --------------------------------------------------------
+def init_flat_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    kv_heads: int | None = None,
+                    head_dim: int | None = None) -> dict:
+    kvh = kv_heads or cfg.num_kv_heads
+    hd = head_dim or cfg.head_dim
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jnp.zeros((batch, max_len, kvh, hd), dt),
+        "v": jnp.zeros((batch, max_len, kvh, hd), dt),
+    }
+
+
+def flat_cache_logical() -> dict:
+    ax = ("batch", "kv_seq_shard", "kv_heads", None)
+    return {"k": ax, "v": ax}
+
+
+def flat_cache_update(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                      pos: jax.Array) -> dict:
+    """Insert (B,1,Hkv,D) at position pos (scalar int32)."""
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, pos, 0, 0))
+    return {"k": k, "v": v}
+
+
+def attend_flat(cfg: ModelConfig, q: jax.Array, cache: dict,
+                pos: jax.Array) -> jax.Array:
+    """Decode attention over a flat cache: q (B,1,H,D), keys valid < pos+1."""
+    L = cache["k"].shape[1]
+    valid = (jnp.arange(L) <= pos)[None, None, None, :]
+    return gqa_scores_softmax_pv(q, cache["k"], cache["v"], valid)
+
+
+# ---------------------------------------------------------------------------
+# two-part (tiered) attention: flash-style partial softmax merge
+# ---------------------------------------------------------------------------
+def _bcast_kv_heads(t: jax.Array, H: int) -> jax.Array:
+    """(B,L,Hkv,D) -> (B,L,H,D) by group broadcast (free under fusion)."""
+    B, L, Hkv, D = t.shape
+    G = H // Hkv
+    if G == 1:
+        return t
+    return jnp.broadcast_to(t[:, :, :, None], (B, L, Hkv, G, D)) \
+        .reshape(B, L, H, D)
+
+
+def partial_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      valid: jax.Array, scale: float,
+                      k_scale: jax.Array | None = None,
+                      v_scale: jax.Array | None = None,
+                      sdt=jnp.float32):
+    """One attendable segment -> flash partials (m, denom, acc), f32.
+
+    q: (B,S,H,D); k,v: (B,L,Hkv,D) — may be int8 with per-(token,head)
+    scales k_scale/v_scale (B,L,Hkv,1): the scales factor OUT of the dots
+    (scores = (q·k_q) * k_scale; pv = (p*v_scale)·v_q), so the int8 arrays
+    are the HBM operands and no dequantized copy is materialized — this is
+    what makes the cold tier's bandwidth saving real in the HLO.
+    """
+    B, S, H, D = q.shape
+    kf = _bcast_kv_heads(k.astype(sdt), H)
+    scores = jnp.einsum("bshd,blhd->bhsl", q.astype(sdt), kf) * scale
+    if k_scale is not None:
+        ks = _bcast_kv_heads(k_scale, H)[..., 0]          # (B,L,H)
+        ks = jnp.swapaxes(ks, 1, 2)[:, :, None, :]        # (B,H,1,L)
+        scores = scores * ks.astype(scores.dtype)
+    scores = jnp.where(valid[None, None, None, :], scores.astype(
+        jnp.float32), NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)           # (B,H,S,1)
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    pv = p.astype(sdt)
+    if v_scale is not None:
+        vs = _bcast_kv_heads(v_scale, H)[..., 0]          # (B,L,H)
+        vs = jnp.swapaxes(vs, 1, 2)[:, :, None, :]        # (B,H,1,L)
+        pv = pv * vs.astype(pv.dtype)
+    vf = _bcast_kv_heads(v.astype(sdt), H)
+    acc = jnp.einsum("bhsl,blhd->bhsd", pv, vf).astype(jnp.float32)
+    return m, denom, acc
+
+
+def merge_partials(parts: list[tuple[jax.Array, jax.Array, jax.Array]],
+                   out_dtype) -> jax.Array:
+    """Merge flash partials across segments -> (B,S,H,D)."""
+    m_star = parts[0][0]
+    for m, _, _ in parts[1:]:
+        m_star = jnp.maximum(m_star, m)
+    denom = 0.0
+    acc = 0.0
+    for m, d, a in parts:
+        w = jnp.exp(m - m_star)                            # (B,H,S,1)
+        denom = denom + d * w
+        acc = acc + a * w
+    out = acc / jnp.maximum(denom, 1e-30)
+    return jnp.swapaxes(out, 1, 2).astype(out_dtype)      # (B,S,H,D)
+
+
+def attend_tiered(cfg, q: jax.Array, k_store: dict, v_store: dict,
+                  pos) -> jax.Array:
+    """Decode attention over a CHIME-tiered KV store without concat or
+    dequant materialization: cold (int8, seq-sharded) and hot (bf16,
+    replicated ring) segments each produce flash partials, merged by
+    softmax stitching — no resharding collective between tiers."""
+    from repro.core import kv_tiers as KT
+    scale = q.shape[-1] ** -0.5
+    sdt = jnp.dtype(cfg.attn_scores_dtype)
+    W = KT.hot_window_of(k_store)
+    max_len = k_store["cold_q"].shape[1]
+    cold_valid = jnp.arange(max_len) <= (pos - W)
+    hot_pos = KT.hot_ring_positions(pos, W)
+    hot_valid = (hot_pos >= 0) & (hot_pos <= pos)
+    p_cold = partial_attention(
+        q, k_store["cold_q"], v_store["cold_q"], cold_valid, scale,
+        k_scale=k_store["cold_scale"], v_scale=v_store["cold_scale"],
+        sdt=sdt)
+    p_hot = partial_attention(
+        q, k_store["hot"], v_store["hot"], hot_valid, scale, sdt=sdt)
+    return merge_partials([p_cold, p_hot], q.dtype)
+
+
+def mla_attend_tiered(p: dict, cfg, q_nope: jax.Array, q_rope: jax.Array,
+                      c_store: dict, r_store: dict, pos) -> jax.Array:
+    """Tiered MLA decode in absorbed (latent-space) form: the cold latent
+    tier stays int8 (scales factor out of both score dots and the PV dot);
+    cold/hot segments merge by softmax stitching."""
+    from repro.core import kv_tiers as KT
+    m = cfg.mla
+    cd = jnp.dtype(cfg.compute_dtype)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope,
+                       p["wk_b"].astype(cd))               # (B,S,H,R)
+    W = KT.hot_window_of(c_store)
+    L = c_store["cold_q"].shape[1]
+    cold_valid = jnp.arange(L) <= (pos - W)
+    hot_pos = KT.hot_ring_positions(pos, W)
+    hot_valid = (hot_pos >= 0) & (hot_pos <= pos)
+
+    def seg(c, c_scale, r, r_scale, valid):
+        nope = jnp.einsum("bshr,blr->bhsl", q_lat.astype(jnp.float32),
+                          c.astype(jnp.float32))
+        rope = jnp.einsum("bshr,blr->bhsl", q_rope.astype(jnp.float32),
+                          r.astype(jnp.float32))
+        if c_scale is not None:
+            nope = nope * c_scale[..., 0][:, None, None, :]
+            rope = rope * r_scale[..., 0][:, None, None, :]
+        scores = (nope + rope) * scale
+        scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        mx = jnp.max(scores, -1, keepdims=True)
+        pr = jnp.exp(scores - mx)
+        den = jnp.sum(pr, -1, keepdims=True)
+        if c_scale is not None:
+            pr = pr * c_scale[..., 0][:, None, None, :]
+        acc = jnp.einsum("bhsl,blr->bhsr", pr,
+                         c.astype(jnp.float32))
+        return mx, den, acc
+
+    parts = [
+        seg(c_store["cold_q"], c_store["cold_scale"],
+            r_store["cold_q"], r_store["cold_scale"], cold_valid),
+        seg(c_store["hot"], None, r_store["hot"], None, hot_valid),
+    ]
+    o_lat = merge_partials(parts, cd)                      # (B,S,H,R)
+    o = jnp.einsum("bshr,rhv->bshv", o_lat, p["wv_b"].astype(cd))
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(cd))
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def init_mla(b: ParamBuilder, cfg: ModelConfig):
+    m = cfg.mla
+    e = embed_axis(cfg)
+    H = cfg.num_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        b.param("wq_a", (cfg.d_model, m.q_lora_rank), (e, None))
+        b.param("q_norm_scale", (m.q_lora_rank,), (None,), init="ones")
+        b.param("wq_b", (m.q_lora_rank, H, qk_dim), (None, "heads", None))
+    else:
+        b.param("wq", (cfg.d_model, H, qk_dim), (e, "heads", None))
+    b.param("wkv_a", (cfg.d_model, m.kv_lora_rank), (e, None))
+    b.param("kv_norm_scale", (m.kv_lora_rank,), (None,), init="ones")
+    b.param("wk_rope", (cfg.d_model, m.qk_rope_head_dim), (e, None))
+    b.param("wk_b", (m.kv_lora_rank, H, m.qk_nope_head_dim),
+            (None, "heads", None))
+    b.param("wv_b", (m.kv_lora_rank, H, m.v_head_dim),
+            (None, "heads", None))
+    b.param("wo", (H, m.v_head_dim, cfg.d_model), ("heads", None, e))
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(
+        jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mla_latents(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Compute the compressed KV latent and the shared RoPE key — these are
+    what the (tierable) MLA cache stores."""
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"].astype(cd))
+    c_kv = _rms(c_kv, p["kv_norm_scale"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wk_rope"].astype(cd))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_queries(p: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    if m.q_lora_rank:
+        cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["wq_a"].astype(cd)),
+                  p["q_norm_scale"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                        cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(p: dict, cfg: ModelConfig, q_nope: jax.Array,
+                  q_rope: jax.Array, c_kv: jax.Array, k_rope: jax.Array,
+                  mask: jax.Array | None, absorbed: bool) -> jax.Array:
+    """MLA attention from latents. Two execution strategies:
+
+    * expanded (paper-faithful baseline): materialize per-head K_nope and V
+      from the latent, run standard MHA;
+    * absorbed (beyond-paper optimization, §Perf): fold W_uk into the query
+      and W_uv into the output so scores/PV run directly in the
+      kv_lora_rank latent space — never materializes (B,L,H,128) keys.
+    """
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    rope_scores = jnp.einsum("bshr,blr->bhsl",
+                             q_rope.astype(jnp.float32),
+                             k_rope.astype(jnp.float32))
+    if absorbed:
+        # q_latent = q_nope @ W_uk  -> (B,S,H,R)
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["wk_b"].astype(cd))
+        nope_scores = jnp.einsum("bshr,blr->bhsl",
+                                 q_lat.astype(jnp.float32),
+                                 c_kv.astype(jnp.float32))
+        scores = (nope_scores + rope_scores) * scale
+        if mask is not None:
+            scores = jnp.where(mask[:, :, 0] if mask.ndim == 5 else mask,
+                               scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o_lat = jnp.einsum("bhsl,blr->bshr", probs,
+                           c_kv.astype(jnp.float32)).astype(cd)
+        o = jnp.einsum("bshr,rhv->bshv", o_lat, p["wv_b"].astype(cd))
+    else:
+        k_nope = jnp.einsum("blr,rhk->blhk", c_kv, p["wk_b"].astype(cd))
+        v = jnp.einsum("blr,rhv->blhv", c_kv, p["wv_b"].astype(cd))
+        nope_scores = jnp.einsum("bshk,blhk->bhsl",
+                                 q_nope.astype(jnp.float32),
+                                 k_nope.astype(jnp.float32))
+        scores = (nope_scores + rope_scores) * scale
+        if mask is not None:
+            scores = jnp.where(mask[:, :, 0] if mask.ndim == 5 else mask,
+                               scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhsl,blhv->bshv", probs,
+                       v.astype(jnp.float32)).astype(cd)
+    return jnp.einsum("bshv,hvd->bsd", o, p["wo"].astype(cd))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    m = cfg.mla
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+    }
+
+
+def mla_cache_logical() -> dict:
+    return {"c_kv": ("batch", "kv_seq_shard", None),
+            "k_rope": ("batch", "kv_seq_shard", None)}
+
+
+def mla_cache_update(cache: dict, c_kv_new: jax.Array, k_rope_new: jax.Array,
+                     pos: jax.Array) -> dict:
+    return {
+        "c_kv": jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new, (0, pos, 0)),
+        "k_rope": jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new, (0, pos, 0)),
+    }

@@ -1,0 +1,101 @@
+"""Analytic parameter counts per config — feeds MODEL_FLOPS = 6·N·D in the
+roofline (§Roofline) and the CHIME simulator's per-kernel byte counts."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def _block_specs(cfg: ModelConfig):
+    """Yield (mixer, mlp_kind, d_ff) per layer, resolving MoE first-dense."""
+    idx = 0
+    for seg in cfg.segments:
+        for _ in range(seg.repeats):
+            for mixer in seg.pattern:
+                if mixer in ("mamba2",) and cfg.family == "hybrid":
+                    mlp = None
+                elif mixer == "rwkv6":
+                    mlp = "rwkv_cm"
+                elif cfg.mlp_type == "moe":
+                    if cfg.moe and idx < cfg.moe.first_dense_layers:
+                        mlp = "dense_first"
+                    else:
+                        mlp = "moe"
+                else:
+                    mlp = cfg.mlp_type
+                yield mixer, mlp, cfg.d_ff
+                idx += 1
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    D = cfg.d_model
+    n = 0
+    n += cfg.vocab_size * D                      # embed
+    if not cfg.tie_embeddings and not cfg.is_encoder:
+        n += cfg.vocab_size * D                  # lm_head
+    if cfg.is_encoder:
+        n += cfg.vocab_size * D                  # classifier head
+    if cfg.frontend is not None:
+        f = cfg.frontend
+        n += f.frontend_dim * D + (D * D if f.connector == "mlp" else 0)
+
+    seen_shared_attn = False
+    for mixer, mlp, d_ff in _block_specs(cfg):
+        # mixer
+        if mixer in ("attn", "attn_shared"):
+            a = D * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim \
+                + cfg.num_heads * cfg.head_dim * D
+            if mixer == "attn_shared":
+                if not seen_shared_attn:
+                    n += a
+                    seen_shared_attn = True
+            else:
+                n += a
+        elif mixer == "mla":
+            m = cfg.mla
+            qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+            n += D * cfg.num_heads * qk          # wq (full rank)
+            n += D * m.kv_lora_rank + D * m.qk_rope_head_dim
+            n += m.kv_lora_rank * cfg.num_heads * (
+                m.qk_nope_head_dim + m.v_head_dim)
+            n += cfg.num_heads * m.v_head_dim * D
+        elif mixer == "rwkv6":
+            H, K = cfg.num_heads, cfg.head_dim
+            r, rd = cfg.ssm.rwkv_lora_rank, cfg.ssm.rwkv_decay_lora
+            n += 3 * D * H * K + D * D + H * K * D
+            n += D * 5 * r + 5 * r * D + D * rd + rd * D
+        elif mixer == "mamba2":
+            d_inner = cfg.ssm.expand * D
+            conv_dim = d_inner + 2 * cfg.ssm.state_dim
+            H = d_inner // cfg.ssm.head_dim
+            n += D * (d_inner + conv_dim + H) + d_inner * D
+
+        # mlp
+        if mlp is None or mlp == "rwkv_cm":
+            if mlp == "rwkv_cm":
+                n += D * d_ff + d_ff * D + D * D
+        elif mlp == "moe":
+            m = cfg.moe
+            e_count = (m.top_k if active_only else m.num_experts)
+            n += D * m.num_experts               # router
+            n += e_count * 3 * D * m.d_ff_expert
+            if m.num_shared_experts:
+                n += 3 * D * m.d_ff_shared
+        elif mlp == "dense_first":
+            n += 3 * D * cfg.moe.d_ff_dense
+        else:
+            mats = 3 if mlp in ("silu_gated", "gelu_gated") else 2
+            n += mats * D * d_ff
+    return n
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """KV-cache bytes appended per generated token (all layers)."""
+    total = 0
+    for mixer, _, _ in _block_specs(cfg):
+        if mixer in ("attn", "attn_shared"):
+            total += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+        elif mixer == "mla":
+            total += (cfg.mla.kv_lora_rank
+                      + cfg.mla.qk_rope_head_dim) * dtype_bytes
+    return total

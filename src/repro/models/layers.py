@@ -1,0 +1,369 @@
+"""Shared layers: param builder, norms, rotary, MLP variants, MoE.
+
+All parameters are built through ``ParamBuilder`` which records, next to every
+array, its *logical sharding axes* — the single source of truth the launcher
+uses to derive NamedShardings for any mesh (see repro/sharding.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# parameter builder
+# ---------------------------------------------------------------------------
+class ParamBuilder:
+    """Builds a params pytree and a parallel pytree of logical-axis tuples."""
+
+    def __init__(self, rng: jax.Array | None, dtype: jnp.dtype,
+                 abstract: bool = False):
+        self.rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _split(self) -> jax.Array | None:
+        if self.abstract:
+            return None
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def scope(self, name: str) -> "ParamBuilder":
+        sub = ParamBuilder(self._split(), self.dtype, self.abstract)
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return sub
+
+    def param(self, name: str, shape: tuple[int, ...],
+              logical: tuple[str | None, ...],
+              init: str = "normal", scale: float | None = None) -> None:
+        assert len(shape) == len(logical), (name, shape, logical)
+        if self.abstract:
+            self.params[name] = jax.ShapeDtypeStruct(shape, self.dtype)
+            self.axes[name] = logical
+            return
+        if init == "zeros":
+            arr = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            arr = jnp.ones(shape, self.dtype)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+            std = scale if scale is not None else fan_in ** -0.5
+            arr = (jax.random.normal(self._split(), shape, jnp.float32)
+                   * std).astype(self.dtype)
+        self.params[name] = arr
+        self.axes[name] = logical
+
+
+def embed_axis(cfg: ModelConfig) -> str:
+    """Weight-storage axis for the d_model dim: FSDP shards it over 'data'."""
+    return "fsdp_embed" if getattr(cfg, "fsdp", False) else "embed"
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(b: ParamBuilder, cfg: ModelConfig, dim: int | None = None):
+    d = dim or cfg.d_model
+    b.param("scale", (d,), (None,), init="ones")
+    if cfg.norm_type == "layernorm":
+        b.param("bias", (d,), (None,), init="zeros")
+
+
+def apply_norm(p: dict, cfg: ModelConfig, x: jax.Array,
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = ((xf - mean) * jax.lax.rsqrt(var + eps)
+               * p["scale"].astype(jnp.float32)
+               + p["bias"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary
+# ---------------------------------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dim = x.shape[-1]
+    freqs = rope_freqs(dim, theta)                       # (dim/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..s,d/2)
+    cos = jnp.cos(angles)[..., :, None, :]               # (.., s, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP variants
+# ---------------------------------------------------------------------------
+_ACT = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def init_mlp(b: ParamBuilder, cfg: ModelConfig, d_ff: int | None = None,
+             mlp_type: str | None = None):
+    d_ff = d_ff or cfg.d_ff
+    kind = mlp_type or cfg.mlp_type
+    e = embed_axis(cfg)
+    gated = kind in ("silu_gated", "gelu_gated")
+    if cfg.ffn_weight_store == "int8":
+        # "RRAM-domain" dense storage: FFN weights held int8 with
+        # per-output-column scales; dequant fuses into the GEMM, so HBM
+        # traffic is the int8 array (half the bf16 bytes — the paper's
+        # density/read-energy argument ported to TPU). Inference-only.
+        sc_up = cfg.d_model ** -0.5 / 127.0
+        sc_dn = d_ff ** -0.5 / 127.0
+        _int8_param(b, "w_up_q", (cfg.d_model, d_ff), (e, "mlp"))
+        _const_param(b, "w_up_scale", (d_ff,), ("mlp",), sc_up)
+        if gated:
+            _int8_param(b, "w_gate_q", (cfg.d_model, d_ff), (e, "mlp"))
+            _const_param(b, "w_gate_scale", (d_ff,), ("mlp",), sc_up)
+        _int8_param(b, "w_down_q", (d_ff, cfg.d_model), ("mlp", e))
+        _const_param(b, "w_down_scale", (cfg.d_model,), (None,), sc_dn)
+    else:
+        b.param("w_up", (cfg.d_model, d_ff), (e, "mlp"))
+        if gated:
+            b.param("w_gate", (cfg.d_model, d_ff), (e, "mlp"))
+        b.param("w_down", (d_ff, cfg.d_model), ("mlp", e))
+    if cfg.use_mlp_bias:
+        b.param("b_up", (d_ff,), ("mlp",), init="zeros")
+        b.param("b_down", (cfg.d_model,), (None,), init="zeros")
+
+
+def _int8_param(b: ParamBuilder, name: str, shape, logical):
+    if b.abstract:
+        b.params[name] = jax.ShapeDtypeStruct(shape, jnp.int8)
+        b.axes[name] = logical
+        return
+    arr = jax.random.randint(b._split(), shape, -127, 128, jnp.int32)
+    b.params[name] = arr.astype(jnp.int8)
+    b.axes[name] = logical
+
+
+def _const_param(b: ParamBuilder, name: str, shape, logical, value: float):
+    if b.abstract:
+        b.params[name] = jax.ShapeDtypeStruct(shape, jnp.float32)
+    else:
+        b.params[name] = jnp.full(shape, value, jnp.float32)
+    b.axes[name] = logical
+
+
+def apply_mlp(p: dict, cfg: ModelConfig, x: jax.Array, rules,
+              mlp_type: str | None = None) -> jax.Array:
+    """FUSED_FFN_ACT (Table I): GEMM -> (+bias) -> act -> GEMM -> (+bias).
+    On TPU the fusion is realized either by XLA (jnp path) or by the Pallas
+    ffn_act kernel; the int8 "RRAM" weight store is handled by the fusion
+    registry (core/fusion.py) which wraps this. This is the jnp oracle path.
+    """
+    from repro.sharding import logical_constraint
+    kind = mlp_type or cfg.mlp_type
+    act = _ACT["silu" if kind == "silu_gated" else
+               "gelu" if kind in ("gelu", "gelu_gated") else "relu2"]
+    if "w_up_q" in p:
+        # int8 "RRAM" store: dequant fused into the GEMM by XLA; the HBM
+        # operand is the int8 array
+        p = dict(p)
+        cd = cfg.compute_dtype
+        p["w_up"] = (p["w_up_q"].astype(cd)
+                     * p["w_up_scale"].astype(cd))
+        if "w_gate_q" in p:
+            p["w_gate"] = (p["w_gate_q"].astype(cd)
+                           * p["w_gate_scale"].astype(cd))
+        p["w_down"] = (p["w_down_q"].astype(cd)
+                       * p["w_down_scale"].astype(cd))
+    h = jnp.einsum("...d,df->...f", x, p["w_up"].astype(cfg.compute_dtype))
+    if "b_up" in p:
+        h = h + p["b_up"].astype(h.dtype)
+    h = act(h)
+    if "w_gate" in p:
+        h = h * jnp.einsum("...d,df->...f", x,
+                           p["w_gate"].astype(cfg.compute_dtype))
+    if rules is not None:
+        h = logical_constraint(rules, h, ("batch",) + (None,) * (h.ndim - 2)
+                               + ("mlp",))
+    out = jnp.einsum("...f,fd->...d", h, p["w_down"].astype(cfg.compute_dtype))
+    if "b_down" in p:
+        out = out + p["b_down"].astype(out.dtype)
+    if rules is not None and cfg.seq_sharding and out.ndim == 3 \
+            and out.shape[1] > 1:
+        # seq-shard the partial-sum output so XLA emits reduce-scatter
+        # instead of all-reduce at the FFNOut cut point (Megatron-SP)
+        out = logical_constraint(rules, out, ("batch", "seq_sp", None))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 channel-mix (token-shifted MLP)
+# ---------------------------------------------------------------------------
+def init_rwkv_cm(b: ParamBuilder, cfg: ModelConfig):
+    e = embed_axis(cfg)
+    b.param("mu_k", (cfg.d_model,), (None,), init="zeros")
+    b.param("mu_r", (cfg.d_model,), (None,), init="zeros")
+    b.param("w_k", (cfg.d_model, cfg.d_ff), (e, "mlp"))
+    b.param("w_v", (cfg.d_ff, cfg.d_model), ("mlp", e))
+    b.param("w_r", (cfg.d_model, cfg.d_model), (e, None))
+
+
+def apply_rwkv_cm(p: dict, cfg: ModelConfig, x: jax.Array, rules,
+                  x_prev: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """RWKV channel mix. x: (B,S,D). x_prev: (B,D) last token of the previous
+    step (decode) or None (token shift within the sequence). Returns
+    (out, new_x_prev)."""
+    from repro.sharding import logical_constraint
+    if x_prev is None:
+        shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        shifted = jnp.concatenate(
+            [x_prev[:, None, :], x[:, :-1]], axis=1) if x.shape[1] > 1 \
+            else x_prev[:, None, :]
+    xk = x + (shifted - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (shifted - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(cfg.compute_dtype))))
+    if rules is not None:
+        k = logical_constraint(rules, k, ("batch", None, "mlp"))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(cfg.compute_dtype))
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(cfg.compute_dtype)))
+    return r * kv, x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (sort-based, capacity-dropping — production style)
+# ---------------------------------------------------------------------------
+def init_moe(b: ParamBuilder, cfg: ModelConfig):
+    assert cfg.moe is not None
+    m = cfg.moe
+    e = embed_axis(cfg)
+    if cfg.moe_ff_fsdp:
+        # shard the expert d_ff dim over 'data' (weights never gathered;
+        # the contraction reduces the small routed activations instead)
+        up_ax = ("experts", None, "moe_ff")
+        dn_ax = ("experts", "moe_ff", None)
+    else:
+        up_ax = ("experts", e, None)
+        dn_ax = ("experts", None, e)
+    b.param("router", (cfg.d_model, m.num_experts), (e, None),
+            scale=cfg.d_model ** -0.5)
+    b.param("w_up", (m.num_experts, cfg.d_model, m.d_ff_expert), up_ax)
+    b.param("w_gate", (m.num_experts, cfg.d_model, m.d_ff_expert), up_ax)
+    b.param("w_down", (m.num_experts, m.d_ff_expert, cfg.d_model), dn_ax)
+    if m.num_shared_experts > 0:
+        sb = b.scope("shared")
+        init_mlp(sb, cfg, d_ff=m.d_ff_shared, mlp_type="silu_gated")
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array, rules) -> jax.Array:
+    """Top-k routed experts with per-expert capacity, sort-based dispatch.
+
+    Dispatch layout: tokens are sorted by assigned expert and scattered into
+    an (E, C, d) buffer sharded expert-wise over the 'model' axis (expert
+    parallelism) — XLA materializes the all-to-all at the shard boundary.
+    Overflow beyond capacity C is dropped (weights renormalized), matching
+    capacity-factor MoE training systems.
+    """
+    from repro.sharding import logical_constraint
+    m = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+
+    gate_logits = jnp.einsum(
+        "td,de->te", xf, p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, m.top_k)        # (T,k)
+    gate_w = gate_w / jnp.clip(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    k = m.top_k
+    E = m.num_experts
+    cap = max(int(T * k / E * m.capacity_factor), 1)
+    # round capacity to MXU-aligned multiple where it matters
+    if cap >= 128:
+        cap = ((cap + 127) // 128) * 128
+
+    flat_expert = gate_idx.reshape(-1)                      # (T*k,)
+    flat_token = jnp.repeat(jnp.arange(T), k)               # (T*k,)
+    flat_w = gate_w.reshape(-1)
+
+    order = jnp.argsort(flat_expert)                        # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = flat_token[order]
+    sorted_w = flat_w[order]
+
+    # position of each routed token within its expert
+    ones = jnp.ones_like(sorted_expert)
+    seg_pos = jax.lax.associative_scan(jnp.add, ones) - 1
+    offsets = jnp.cumsum(jnp.bincount(sorted_expert, length=E)) \
+        - jnp.bincount(sorted_expert, length=E)
+    pos_in_expert = seg_pos - offsets[sorted_expert]
+    keep = pos_in_expert < cap
+
+    # scatter tokens into (E, C, D)
+    slot = jnp.where(keep, sorted_expert * cap + pos_in_expert, E * cap)
+    buf = jnp.zeros((E * cap + 1, D), xf.dtype).at[slot].set(
+        xf[sorted_token])[:-1]
+    buf = buf.reshape(E, cap, D)
+    if rules is not None:
+        buf = logical_constraint(rules, buf, ("experts", None, None))
+
+    # per-expert fused FFN (the "RRAM-domain" fused kernel for MoE)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(cfg.compute_dtype))
+    h = jax.nn.silu(h) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_gate"].astype(cfg.compute_dtype))
+    out_buf = jnp.einsum(
+        "ecf,efd->ecd", h, p["w_down"].astype(cfg.compute_dtype))
+    out_buf = out_buf.reshape(E * cap, D)
+
+    # combine back to tokens
+    gathered = out_buf[jnp.clip(slot, 0, E * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    contrib = gathered * sorted_w[:, None].astype(gathered.dtype)
+    out = jnp.zeros((T, D), x.dtype).at[sorted_token].add(contrib)
+    out = out.reshape(B, S, D)
+    if rules is not None and cfg.seq_sharding and S > 1:
+        # the combine scatter-add otherwise materializes replicated and
+        # all-reduces (tokens, D) f32 per layer
+        out = logical_constraint(rules, out, ("batch", "seq_sp", None))
+
+    if m.num_shared_experts > 0:
+        out = out + apply_mlp(p["shared"], cfg, x, rules,
+                              mlp_type="silu_gated")
+    return out
+
+
+def moe_aux_loss(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    xf = x.reshape(-1, D)
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top1, m.num_experts, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return m.num_experts * jnp.sum(frac_tokens * frac_probs)

@@ -1,0 +1,496 @@
+"""Unified, config-driven model: every assigned architecture and the paper's
+MLLMs instantiate this one class.
+
+Execution modes:
+  * full    — whole-sequence forward (training loss fwd / encoder inference)
+  * prefill — whole-sequence forward that also builds the KV/state caches
+  * decode  — one token against the caches (serve_step)
+
+Layers are grouped into scan *units* (homogeneous repeated blocks); each
+unit's params/caches carry a leading repeat axis and are scanned with
+configurable remat — this keeps the lowered HLO compact even for
+nemotron-340b's 96 layers on a 512-device mesh. Zamba2's shared attention
+block is closed over (not scanned) so its single weight set is reused by all
+applications, faithful to the architecture.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import fusion, kv_tiers as KT
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import vision as V
+from repro.sharding import ShardingRules, logical_constraint
+
+MAX_LEARNED_POS = 32_768
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    mixer: str                 # attn | attn_shared | mla | rwkv6 | mamba2
+    mlp: Optional[str]         # mlp kind or None (mixer-only block)
+    d_ff: int
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitSpec:
+    block: BlockSpec
+    repeats: int
+
+
+def build_plan(cfg: ModelConfig) -> list[UnitSpec]:
+    """Flatten segments into per-layer BlockSpecs, then compress consecutive
+    identical specs into scanable units."""
+    specs: list[BlockSpec] = []
+    idx = 0
+    for seg in cfg.segments:
+        for _ in range(seg.repeats):
+            for mixer in seg.pattern:
+                if mixer == "mamba2" and cfg.family == "hybrid":
+                    mlp = None
+                elif mixer == "rwkv6":
+                    mlp = "rwkv_cm"
+                elif cfg.mlp_type == "moe":
+                    if cfg.moe and idx < cfg.moe.first_dense_layers:
+                        mlp = "dense_first"
+                    else:
+                        mlp = "moe"
+                else:
+                    mlp = cfg.mlp_type
+                specs.append(BlockSpec(mixer, mlp, cfg.d_ff))
+                idx += 1
+    units: list[UnitSpec] = []
+    for s in specs:
+        if units and units[-1].block == s:
+            units[-1] = UnitSpec(s, units[-1].repeats + 1)
+        else:
+            units.append(UnitSpec(s, 1))
+    return units
+
+
+class Model:
+    """See module docstring. ``rules`` (ShardingRules) is optional: None for
+    single-device smoke tests, a mesh-bound resolver for pjit execution."""
+
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules | None = None):
+        self.cfg = cfg
+        self.rules = rules
+        self.plan = build_plan(cfg)
+        self.has_shared_attn = any(
+            u.block.mixer == "attn_shared" for u in self.plan)
+        # pad vocab (Megatron-style) so embeddings/logits shard over 'model'
+        m = cfg.vocab_pad_multiple
+        self.padded_vocab = ((cfg.vocab_size + m - 1) // m) * m
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def _init_block(self, b: L.ParamBuilder, spec: BlockSpec):
+        cfg = self.cfg
+        ln1 = b.scope("ln1")
+        L.init_norm(ln1, cfg)
+        mix = b.scope("mixer")
+        if spec.mixer in ("attn", "attn_shared"):
+            A.init_attn(mix, cfg)
+        elif spec.mixer == "mla":
+            A.init_mla(mix, cfg)
+        elif spec.mixer == "rwkv6":
+            S.init_rwkv6(mix, cfg)
+        elif spec.mixer == "mamba2":
+            S.init_mamba2(mix, cfg)
+        else:
+            raise ValueError(spec.mixer)
+        if spec.mlp is not None:
+            ln2 = b.scope("ln2")
+            L.init_norm(ln2, cfg)
+            mlp = b.scope("mlp")
+            if spec.mlp == "moe":
+                L.init_moe(mlp, cfg)
+            elif spec.mlp == "dense_first":
+                L.init_mlp(mlp, cfg, d_ff=cfg.moe.d_ff_dense,
+                           mlp_type="silu_gated")
+            elif spec.mlp == "rwkv_cm":
+                L.init_rwkv_cm(mlp, cfg)
+            else:
+                L.init_mlp(mlp, cfg, mlp_type=spec.mlp)
+
+    def _build(self, rng, abstract: bool):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        b = L.ParamBuilder(rng, dt, abstract=abstract)
+        e = L.embed_axis(cfg)
+        if cfg.family != "audio":
+            emb = b.scope("embed")
+            emb.param("table", (self.padded_vocab, cfg.d_model),
+                      ("vocab", e), scale=1.0)
+        if cfg.pos_emb == "learned":
+            b.param("pos_emb", (MAX_LEARNED_POS, cfg.d_model), (None, e),
+                    scale=0.02)
+        if cfg.frontend is not None:
+            fe = b.scope("frontend")
+            V.init_frontend(fe, cfg)
+        units = b.scope("units")
+        for ui, unit in enumerate(self.plan):
+            if unit.block.mixer == "attn_shared":
+                continue  # shared weights live at top level
+            if unit.repeats == 1:
+                ub = units.scope(f"u{ui}")
+                self._init_block(ub, unit.block)
+            else:
+                if abstract:
+                    ub = L.ParamBuilder(None, dt, abstract=True)
+                    self._init_block(ub, unit.block)
+                    stacked = jax.tree.map(
+                        lambda s: jax.ShapeDtypeStruct(
+                            (unit.repeats,) + s.shape, s.dtype), ub.params)
+                    units.params[f"u{ui}"] = stacked
+                    units.axes[f"u{ui}"] = jax.tree.map(
+                        lambda ax: (None,) + ax, ub.axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+                else:
+                    rngs = jax.random.split(b._split(), unit.repeats)
+
+                    def one(r):
+                        bb = L.ParamBuilder(r, dt)
+                        self._init_block(bb, unit.block)
+                        return bb.params
+                    units.params[f"u{ui}"] = jax.vmap(one)(rngs)
+                    ab = L.ParamBuilder(None, dt, abstract=True)
+                    self._init_block(ab, unit.block)
+                    units.axes[f"u{ui}"] = jax.tree.map(
+                        lambda ax: (None,) + ax, ab.axes,
+                        is_leaf=lambda x: isinstance(x, tuple))
+        if self.has_shared_attn:
+            sb = b.scope("shared_attn")
+            self._init_block(
+                sb, BlockSpec("attn", self.cfg.mlp_type, self.cfg.d_ff))
+        fn = b.scope("final_norm")
+        L.init_norm(fn, cfg)
+        if not cfg.tie_embeddings:
+            b.param("lm_head", (cfg.d_model, self.padded_vocab),
+                    (e, "vocab"), scale=cfg.d_model ** -0.5)
+        return b.params, b.axes
+
+    def init(self, rng) -> dict:
+        params, _ = self._build(rng, abstract=False)
+        return params
+
+    def abstract_params(self) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct tree, logical-axes tree) without allocation."""
+        return self._build(None, abstract=True)
+
+    def param_shardings(self, rules: ShardingRules):
+        shapes, axes = self.abstract_params()
+        return jax.tree.map(
+            lambda sd, ax: rules.sharding(ax, sd.shape), shapes, axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def _block_cache_abstract(self, spec: BlockSpec, batch: int,
+                              max_len: int) -> tuple[Any, Any]:
+        """(shape tree, logical tree) for one block's cache."""
+        cfg = self.cfg
+        pol = cfg.kv_policy
+        W = cfg.kv_hot_window
+        cd = jnp.dtype(cfg.compute_dtype)
+        if spec.mixer in ("attn", "attn_shared"):
+            inner = (cfg.num_kv_heads, cfg.head_dim)
+            shp = {
+                "k": KT.store_init(batch, max_len, inner, pol, W, cd),
+                "v": KT.store_init(batch, max_len, inner, pol, W, cd),
+            }
+            lg = {"k": KT.store_logical(("kv_heads", None), pol),
+                  "v": KT.store_logical(("kv_heads", None), pol)}
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            shp = {
+                "c_kv": KT.store_init(batch, max_len, (m.kv_lora_rank,),
+                                      pol, W, cd),
+                "k_rope": KT.store_init(batch, max_len,
+                                        (m.qk_rope_head_dim,), pol, W, cd),
+            }
+            lg = {"c_kv": KT.store_logical((None,), pol),
+                  "k_rope": KT.store_logical((None,), pol)}
+        elif spec.mixer == "rwkv6":
+            shp = {"tm": S.init_rwkv6_state(cfg, batch),
+                   "cm_x_prev": jnp.zeros((batch, cfg.d_model), cd)}
+            lg = {"tm": S.rwkv6_state_logical(),
+                  "cm_x_prev": ("batch", None)}
+        elif spec.mixer == "mamba2":
+            shp = S.init_mamba2_state(cfg, batch)
+            lg = S.mamba2_state_logical()
+        else:
+            shp, lg = {}, {}
+        return shp, lg
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        cache = {}
+        for ui, unit in enumerate(self.plan):
+            shp, _ = self._block_cache_abstract(unit.block, batch, max_len)
+            if unit.repeats > 1:
+                shp = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (unit.repeats,) + a.shape), shp)
+            cache[f"u{ui}"] = shp
+        return cache
+
+    def cache_spec(self, batch: int, max_len: int) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct tree, logical tree) for the full cache."""
+        shapes, logical = {}, {}
+        for ui, unit in enumerate(self.plan):
+            shp, lg = self._block_cache_abstract(unit.block, batch, max_len)
+            shp = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), shp)
+            if unit.repeats > 1:
+                shp = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (unit.repeats,) + s.shape, s.dtype), shp)
+                lg = jax.tree.map(
+                    lambda ax: (None,) + ax, lg,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            shapes[f"u{ui}"], logical[f"u{ui}"] = shp, lg
+        return shapes, logical
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def _embed(self, params: dict, batch: dict, pos) -> tuple[jax.Array,
+                                                              jax.Array]:
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        if cfg.family == "audio":
+            x = V.apply_connector(params["frontend"], cfg, batch["frames"])
+        elif cfg.frontend is not None and "patches" in batch:
+            vis = V.apply_connector(params["frontend"], cfg,
+                                    batch["patches"])
+            txt = jnp.take(params["embed"]["table"], batch["tokens"],
+                           axis=0).astype(cd)
+            x = jnp.concatenate([vis, txt], axis=1)
+        else:
+            x = jnp.take(params["embed"]["table"], batch["tokens"],
+                         axis=0).astype(cd)
+        B, Sq = x.shape[:2]
+        if pos is None:
+            positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        else:
+            positions = jnp.full((B, Sq), pos, jnp.int32)
+        if cfg.pos_emb == "learned":
+            x = x + jnp.take(params["pos_emb"],
+                             jnp.minimum(positions, MAX_LEARNED_POS - 1),
+                             axis=0).astype(cd)
+        if self.rules is not None:
+            x = logical_constraint(self.rules, x, self._res_axes(x))
+        return x, positions
+
+    def _res_axes(self, x) -> tuple:
+        """Residual-stream logical axes; seq_sharding (Megatron-SP) shards
+        the seq dim over 'model' so saved activations scale with TP."""
+        seq_ax = "seq_sp" if (self.cfg.seq_sharding
+                              and x.shape[1] > 1) else None
+        return ("batch", seq_ax, None)
+
+    def _run_block(self, spec: BlockSpec, bp: dict, shared_p: dict | None,
+                   x: jax.Array, positions: jax.Array, bcache: dict,
+                   pos, mode: str) -> tuple[jax.Array, dict, jax.Array]:
+        cfg = self.cfg
+        rules = self.rules
+        aux = jnp.zeros((), jnp.float32)
+        p = shared_p if spec.mixer == "attn_shared" else bp
+        build_cache = (mode == "prefill")
+        # pre-norm -> mixer -> residual
+        h = fusion.apply_norm(p["ln1"], cfg, x)
+        new_cache = dict(bcache) if bcache else {}
+        if spec.mixer in ("attn", "attn_shared"):
+            if mode == "decode":
+                out, nc = fusion.apply_attention_decode(
+                    p["mixer"], cfg, h, bcache, pos, rules)
+                new_cache = nc
+            else:
+                ml = (bcache["k"]["flat"].shape[1] if bcache and
+                      "flat" in bcache["k"] else
+                      bcache["k"]["cold_q"].shape[1] if bcache else 0)
+                out, nc = fusion.apply_attention_seq(
+                    p["mixer"], cfg, h, positions, rules,
+                    causal=not cfg.is_encoder,
+                    build_cache=build_cache and bool(bcache), max_len=ml)
+                if nc is not None:
+                    new_cache = nc
+        elif spec.mixer == "mla":
+            if mode == "decode":
+                out, new_cache = fusion.apply_mla_decode(
+                    p["mixer"], cfg, h, bcache, pos, rules)
+            else:
+                ml = (bcache["c_kv"]["flat"].shape[1] if bcache and
+                      "flat" in bcache["c_kv"] else
+                      bcache["c_kv"]["cold_q"].shape[1] if bcache else 0)
+                out, nc = fusion.apply_mla_seq(
+                    p["mixer"], cfg, h, positions, rules,
+                    causal=not cfg.is_encoder,
+                    build_cache=build_cache and bool(bcache), max_len=ml)
+                if nc is not None:
+                    new_cache = nc
+        elif spec.mixer == "rwkv6":
+            state = bcache.get("tm") if (bcache and mode != "full") else None
+            out, tm_state = S.apply_rwkv6(p["mixer"], cfg, h, state)
+            if bcache:
+                new_cache = dict(new_cache)
+                new_cache["tm"] = tm_state
+        elif spec.mixer == "mamba2":
+            state = bcache if (bcache and mode != "full") else None
+            out, m_state = S.apply_mamba2(p["mixer"], cfg, h, state)
+            if bcache:
+                new_cache = m_state
+        else:
+            raise ValueError(spec.mixer)
+        x = x + out
+
+        # mlp half-block
+        if spec.mlp is not None:
+            h2 = fusion.apply_norm(p["ln2"], cfg, x)
+            if spec.mlp == "rwkv_cm":
+                xp = (bcache.get("cm_x_prev")
+                      if (bcache and mode != "full") else None)
+                out2, cm_prev = L.apply_rwkv_cm(p["mlp"], cfg, h2, rules, xp)
+                if bcache:
+                    new_cache = dict(new_cache)
+                    new_cache["cm_x_prev"] = cm_prev.astype(
+                        jnp.dtype(cfg.compute_dtype))
+            else:
+                d_ff = (cfg.moe.d_ff_dense if spec.mlp == "dense_first"
+                        else spec.d_ff)
+                kind = ("silu_gated" if spec.mlp == "dense_first"
+                        else spec.mlp)
+                out2 = fusion.apply_ffn(p["mlp"], cfg, h2, rules,
+                                        mlp_type=kind, d_ff=d_ff)
+                if spec.mlp == "moe" and mode == "full":
+                    aux = aux + L.moe_aux_loss(p["mlp"], cfg, h2)
+            x = x + out2
+        if rules is not None:
+            x = logical_constraint(rules, x, self._res_axes(x))
+        return x, new_cache, aux
+
+    def _run_unit(self, ui: int, unit: UnitSpec, params: dict,
+                  x: jax.Array, positions: jax.Array, ucache: dict,
+                  pos, mode: str) -> tuple[jax.Array, dict, jax.Array]:
+        cfg = self.cfg
+        shared_p = params.get("shared_attn")
+        up = params["units"].get(f"u{ui}")
+
+        def body(x, bp, bc):
+            return self._run_block(unit.block, bp, shared_p, x, positions,
+                                   bc, pos, mode)
+
+        if mode == "full" and cfg.remat != "none":
+            policy = (jax.checkpoint_policies.checkpoint_dots
+                      if cfg.remat == "save_dots" else None)
+            body = jax.checkpoint(body, policy=policy)
+
+        if unit.repeats == 1:
+            return body(x, up, ucache)
+
+        if not cfg.scan_layers:
+            aux_t = jnp.zeros((), jnp.float32)
+            ncs = []
+            for r in range(unit.repeats):
+                bp = (None if up is None else
+                      jax.tree.map(lambda a: a[r], up))
+                bc = jax.tree.map(lambda a: a[r], ucache)
+                x, nc, aux = body(x, bp, bc)
+                ncs.append(nc)
+                aux_t = aux_t + aux
+            stacked = (jax.tree.map(lambda *a: jnp.stack(a), *ncs)
+                       if ncs and jax.tree.leaves(ncs[0]) else {})
+            return x, stacked, aux_t
+
+        def scan_body(carry, xs):
+            x, aux_t = carry
+            bp, bc = xs
+            x, nc, aux = body(x, bp, bc)
+            return (x, aux_t + aux), nc
+
+        (x, aux_t), new_cache = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), (up, ucache))
+        return x, new_cache, aux_t
+
+    def _forward(self, params: dict, batch: dict, mode: str,
+                 cache: dict | None, pos) -> tuple[jax.Array, dict,
+                                                   jax.Array]:
+        cfg = self.cfg
+        x, positions = self._embed(params, batch, pos)
+        if cache is None:
+            cache = {f"u{ui}": {} for ui in range(len(self.plan))}
+        new_cache = {}
+        aux_total = jnp.zeros((), jnp.float32)
+        for ui, unit in enumerate(self.plan):
+            x, nc, aux = self._run_unit(
+                ui, unit, params, x, positions, cache[f"u{ui}"], pos, mode)
+            new_cache[f"u{ui}"] = nc
+            aux_total = aux_total + aux
+        x = fusion.apply_norm(params["final_norm"], cfg, x)
+        if mode == "prefill":
+            x = x[:, -1:]
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x,
+                params["embed"]["table"].astype(cfg.compute_dtype))
+        else:
+            logits = jnp.einsum(
+                "bsd,dv->bsv", x,
+                params["lm_head"].astype(cfg.compute_dtype))
+        if self.rules is not None:
+            logits = logical_constraint(
+                self.rules, logits, ("batch", None, "vocab"))
+        return logits, new_cache, aux_total
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def forward(self, params: dict, batch: dict) -> jax.Array:
+        logits, _, _ = self._forward(params, batch, "full", None, None)
+        return logits
+
+    def loss(self, params: dict, batch: dict) -> jax.Array:
+        logits, _, aux = self._forward(params, batch, "full", None, None)
+        labels = batch["labels"]
+        # logsumexp formulation: never materializes full log-probs, so the
+        # (tokens, vocab) working set stays a single (sharded) tensor
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        picked = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+        ll = picked - lse
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(ll)
+        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + 0.01 * aux
+
+    def prefill(self, params: dict, batch: dict, max_len: int
+                ) -> tuple[jax.Array, dict]:
+        """Returns last-token logits + filled caches."""
+        # batch size from any input tensor
+        bsz = jax.tree.leaves(batch)[0].shape[0]
+        cache = self.init_cache(bsz, max_len)
+        logits, new_cache, _ = self._forward(
+            params, batch, "prefill", cache, None)
+        return logits, new_cache
+
+    def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
+                    pos) -> tuple[jax.Array, dict]:
+        """One decode step: tokens (B,1) int32, pos scalar int32 = index the
+        new token is written at (number of tokens already cached)."""
+        if self.cfg.is_encoder:
+            raise ValueError("encoder-only model has no decode step")
+        logits, new_cache, _ = self._forward(
+            params, {"tokens": tokens}, "decode", cache, pos)
+        return logits, new_cache

@@ -1,0 +1,339 @@
+"""Attention-free mixers: RWKV6 (Finch, data-dependent decay) and Mamba2
+(SSD), plus single-step decode recurrences.
+
+Both use the same *chunked hybrid* algorithm: the sequence is split into
+chunks; the intra-chunk contribution is an exact scan over chunk positions
+(vmapped across chunks — parallel), and the inter-chunk contribution is a
+scan over chunks carrying the recurrent state. Every exponential term is of
+the form exp(sum of negative log-decays) <= 1, so the algorithm is stable at
+any sequence length — this is why these archs run the long_500k shape.
+Sequential depth = chunk_size + num_chunks instead of seq_len.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, embed_axis
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 time-mix
+# ---------------------------------------------------------------------------
+def init_rwkv6(b: ParamBuilder, cfg: ModelConfig):
+    D = cfg.d_model
+    H, K = cfg.num_heads, cfg.head_dim
+    r = cfg.ssm.rwkv_lora_rank
+    rd = cfg.ssm.rwkv_decay_lora
+    e = embed_axis(cfg)
+    b.param("mu_x", (D,), (None,), init="zeros")
+    b.param("mu", (5, D), (None, None), init="zeros")        # w,k,v,r,g bases
+    b.param("lora_a", (D, 5 * r), (e, None), scale=0.01)
+    b.param("lora_b", (5, r, D), (None, None, None), scale=0.01)
+    b.param("decay_base", (D,), (None,), init="zeros")
+    b.param("decay_a", (D, rd), (e, None), scale=0.01)
+    b.param("decay_b", (rd, D), (None, None), scale=0.01)
+    b.param("bonus_u", (H, K), ("heads", None), init="zeros")
+    b.param("w_r", (D, H, K), (e, "heads", None))
+    b.param("w_k", (D, H, K), (e, "heads", None))
+    b.param("w_v", (D, H, K), (e, "heads", None))
+    b.param("w_g", (D, D), (e, None))
+    b.param("w_o", (H, K, D), ("heads", None, e))
+    b.param("ln_x_scale", (H, K), ("heads", None), init="ones")
+    b.param("ln_x_bias", (H, K), ("heads", None), init="zeros")
+
+
+def _rwkv6_inputs(p: dict, cfg: ModelConfig, x: jax.Array,
+                  shifted: jax.Array):
+    """Token-shift mixing + projections. x, shifted: (B,S,D).
+    Returns r,k,v (B,S,H,K), logw (B,S,H,K) negative log-decay, g (B,S,D)."""
+    cd = cfg.compute_dtype
+    H, K = cfg.num_heads, cfg.head_dim
+    sx = shifted - x
+    base = x + sx * p["mu_x"].astype(x.dtype)
+    r_lora = jax.nn.tanh(jnp.einsum(
+        "bsd,dr->bsr", base, p["lora_a"].astype(cd)))
+    r_lora = r_lora.reshape(*r_lora.shape[:-1], 5, -1)
+    dyn = jnp.einsum("bsir,ird->bsid", r_lora, p["lora_b"].astype(cd))
+    mixed = x[:, :, None] + sx[:, :, None] * (
+        p["mu"].astype(x.dtype) + dyn)                        # (B,S,5,D)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(5)]
+
+    decay_raw = (p["decay_base"].astype(jnp.float32)
+                 + jnp.einsum("bsd,dr,re->bse", xw.astype(jnp.float32),
+                              p["decay_a"].astype(jnp.float32),
+                              p["decay_b"].astype(jnp.float32)))
+    logw = -jnp.exp(decay_raw)                                # (B,S,D) < 0
+    B, S, _ = x.shape
+    logw = logw.reshape(B, S, H, K)
+    rr = jnp.einsum("bsd,dhk->bshk", xr, p["w_r"].astype(cd))
+    kk = jnp.einsum("bsd,dhk->bshk", xk, p["w_k"].astype(cd))
+    vv = jnp.einsum("bsd,dhk->bshk", xv, p["w_v"].astype(cd))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(cd)))
+    return rr, kk, vv, logw, g
+
+
+def _rwkv6_finish(p: dict, cfg: ModelConfig, y: jax.Array,
+                  g: jax.Array) -> jax.Array:
+    """Per-head groupnorm (ln_x), gate, output projection. y: (B,S,H,K)."""
+    cd = cfg.compute_dtype
+    yf = y.astype(jnp.float32)
+    mean = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mean) * jax.lax.rsqrt(var + 1e-5)
+    yn = yn * p["ln_x_scale"].astype(jnp.float32) \
+        + p["ln_x_bias"].astype(jnp.float32)
+    out = jnp.einsum("bshk,hkd->bsd", yn.astype(cd), p["w_o"].astype(cd))
+    return out * g
+
+
+def wkv6_chunked(r, k, v, logw, u, state0, chunk: int):
+    """Chunked WKV6. r,k,v,logw: (B,S,H,K) [f32 math]; u: (H,K);
+    state0: (B,H,K,K) [key-dim, value-dim]. Returns y (B,S,H,K), state."""
+    B, S, H, K = r.shape
+    assert S % chunk == 0, (S, chunk)
+    N = S // chunk
+    f32 = jnp.float32
+    rc = r.astype(f32).reshape(B, N, chunk, H, K)
+    kc = k.astype(f32).reshape(B, N, chunk, H, K)
+    vc = v.astype(f32).reshape(B, N, chunk, H, K)
+    wc = logw.astype(f32).reshape(B, N, chunk, H, K)
+
+    # ---- intra-chunk: exact scan over chunk positions, parallel over chunks
+    def intra_step(S_loc, inp):
+        rt, kt, vt, wt = inp                                  # (B,N,H,K)
+        # y_t = r_t . S_loc + (r_t . (u*k_t)) v_t
+        y = jnp.einsum("bnhk,bnhkv->bnhv", rt, S_loc)
+        y = y + jnp.einsum("bnhk,bnhk->bnh", rt, u * kt)[..., None] * vt
+        S_loc = jnp.exp(wt)[..., None] * S_loc \
+            + kt[..., None] * vt[..., None, :]
+        return S_loc, y
+
+    xs = (jnp.moveaxis(rc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0), jnp.moveaxis(wc, 2, 0))
+    S_loc0 = jnp.zeros((B, N, H, K, K), f32)
+    S_loc_final, y_intra = jax.lax.scan(intra_step, S_loc0, xs)
+    y_intra = jnp.moveaxis(y_intra, 0, 2)                     # (B,N,c,H,K)
+
+    # ---- inter-chunk: scan over chunks carrying the state
+    cum = jnp.cumsum(wc, axis=2)                              # inclusive
+    cum_excl = cum - wc                                       # exclusive
+    decay_all = jnp.exp(cum[:, :, -1])                        # (B,N,H,K)
+    r_dec = rc * jnp.exp(cum_excl)                            # bounded <=1
+
+    def inter_step(S_carry, inp):
+        r_dec_c, S_loc_c, decay_c = inp                       # per chunk
+        y_inter = jnp.einsum("bchk,bhkv->bchv", r_dec_c, S_carry)
+        S_carry = decay_c[..., None] * S_carry + S_loc_c
+        return S_carry, y_inter
+
+    xs2 = (jnp.moveaxis(r_dec, 1, 0), jnp.moveaxis(S_loc_final, 1, 0),
+           jnp.moveaxis(decay_all, 1, 0))
+    state, y_inter = jax.lax.scan(inter_step, state0.astype(f32), xs2)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                     # (B,N,c,H,K)
+
+    y = (y_intra + y_inter).reshape(B, S, H, K)
+    return y, state
+
+
+def apply_rwkv6(p: dict, cfg: ModelConfig, x: jax.Array,
+                state: dict | None) -> tuple[jax.Array, dict]:
+    """Sequence (train/prefill) or single-step (decode) RWKV6 time-mix.
+    state = {"s": (B,H,K,K) f32, "x_prev": (B,D)} or None (fresh)."""
+    B, S, D = x.shape
+    H, K = cfg.num_heads, cfg.head_dim
+    if state is None:
+        state = init_rwkv6_state(cfg, B)
+    if S == 1:
+        shifted = state["x_prev"][:, None]
+    else:
+        shifted = jnp.concatenate(
+            [state["x_prev"][:, None], x[:, :-1]], axis=1)
+    r, k, v, logw, g = _rwkv6_inputs(p, cfg, x, shifted)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    if S == 1:
+        # exact single-step recurrence
+        rt = r[:, 0].astype(jnp.float32)
+        kt = k[:, 0].astype(jnp.float32)
+        vt = v[:, 0].astype(jnp.float32)
+        wt = logw[:, 0]
+        s = state["s"]
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s) \
+            + jnp.einsum("bhk,bhk->bh", rt, u * kt)[..., None] * vt
+        s = jnp.exp(wt)[..., None] * s + kt[..., None] * vt[..., None, :]
+        y = y[:, None]                                        # (B,1,H,K)
+    else:
+        chunk = min(cfg.ssm.chunk_size, S)
+        if S % chunk != 0:
+            chunk = 1
+            while S % (chunk * 2) == 0 and chunk * 2 <= cfg.ssm.chunk_size:
+                chunk *= 2
+        y, s = wkv6_chunked(r, k, v, logw, u, state["s"], chunk)
+        y = y.reshape(B, S, H, K)
+
+    out = _rwkv6_finish(p, cfg, y.astype(x.dtype), g)
+    return out, {"s": s, "x_prev": x[:, -1]}
+
+
+def init_rwkv6_state(cfg: ModelConfig, batch: int) -> dict:
+    H, K = cfg.num_heads, cfg.head_dim
+    return {"s": jnp.zeros((batch, H, K, K), jnp.float32),
+            "x_prev": jnp.zeros((batch, cfg.d_model),
+                                jnp.dtype(cfg.compute_dtype))}
+
+
+def rwkv6_state_logical() -> dict:
+    return {"s": ("batch", "heads", None, None), "x_prev": ("batch", None)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+def _m2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    heads = d_inner // cfg.ssm.head_dim
+    return d_inner, heads, cfg.ssm.state_dim
+
+
+def init_mamba2(b: ParamBuilder, cfg: ModelConfig):
+    D = cfg.d_model
+    d_inner, H, n = _m2_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    e = embed_axis(cfg)
+    b.param("w_in", (D, d_inner + conv_dim + H), (e, "mlp"))
+    b.param("conv_w", (cfg.ssm.conv_width, conv_dim), (None, None),
+            scale=0.5)
+    b.param("conv_b", (conv_dim,), (None,), init="zeros")
+    b.param("a_log", (H,), (None,), init="zeros")
+    b.param("dt_bias", (H,), (None,), init="zeros")
+    b.param("d_skip", (H,), (None,), init="ones")
+    b.param("norm_scale", (d_inner,), (None,), init="ones")
+    b.param("w_out", (d_inner, D), ("mlp", e))
+
+
+def ssd_chunked(xh, Bm, Cm, dt, a_log, state0, chunk: int):
+    """Chunked SSD. xh: (B,S,H,P) head inputs; Bm,Cm: (B,S,n); dt: (B,S,H);
+    state0: (B,H,P,n). Returns y (B,S,H,P), state."""
+    B, S, H, P = xh.shape
+    n = Bm.shape[-1]
+    N = S // chunk
+    f32 = jnp.float32
+    loga = (-jnp.exp(a_log.astype(f32)) * dt.astype(f32))     # (B,S,H) < 0
+    xc = (xh.astype(f32) * dt.astype(f32)[..., None]) \
+        .reshape(B, N, chunk, H, P)
+    bc = Bm.astype(f32).reshape(B, N, chunk, n)
+    cc = Cm.astype(f32).reshape(B, N, chunk, n)
+    lc = loga.reshape(B, N, chunk, H)
+
+    def intra_step(S_loc, inp):
+        xt, bt, ct, lt = inp                                  # (B,N,...)
+        S_loc = jnp.exp(lt)[..., None, None] * S_loc \
+            + xt[..., None] * bt[:, :, None, None, :]
+        y = jnp.einsum("bnhps,bns->bnhp", S_loc, ct)
+        return S_loc, y
+
+    xs = (jnp.moveaxis(xc, 2, 0), jnp.moveaxis(bc, 2, 0),
+          jnp.moveaxis(cc, 2, 0), jnp.moveaxis(lc, 2, 0))
+    S_loc0 = jnp.zeros((B, N, H, P, n), f32)
+    S_loc_final, y_intra = jax.lax.scan(intra_step, S_loc0, xs)
+    y_intra = jnp.moveaxis(y_intra, 0, 2)                     # (B,N,c,H,P)
+
+    cum = jnp.cumsum(lc, axis=2)                              # inclusive
+    decay_all = jnp.exp(cum[:, :, -1])                        # (B,N,H)
+
+    def inter_step(S_carry, inp):
+        cum_c, c_c, S_loc_c, decay_c = inp
+        # y_inter_t = exp(cum_t) * C_t . S_carry   (state used inclusively)
+        y = jnp.einsum("bchs,bhps->bchp",
+                       jnp.exp(cum_c)[..., None] * c_c[:, :, None, :],
+                       S_carry)
+        S_carry = decay_c[..., None, None] * S_carry + S_loc_c
+        return S_carry, y
+
+    xs2 = (jnp.moveaxis(cum, 1, 0), jnp.moveaxis(cc, 1, 0),
+           jnp.moveaxis(S_loc_final, 1, 0), jnp.moveaxis(decay_all, 1, 0))
+    state, y_inter = jax.lax.scan(inter_step, state0.astype(f32), xs2)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, state
+
+
+def apply_mamba2(p: dict, cfg: ModelConfig, x: jax.Array,
+                 state: dict | None) -> tuple[jax.Array, dict]:
+    """Mamba2 block. state = {"conv": (B,W-1,conv_dim), "ssm": (B,H,P,n)}."""
+    B, S, D = x.shape
+    d_inner, H, n = _m2_dims(cfg)
+    P = cfg.ssm.head_dim
+    W = cfg.ssm.conv_width
+    conv_dim = d_inner + 2 * n
+    cd = cfg.compute_dtype
+    if state is None:
+        state = init_mamba2_state(cfg, B)
+
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
+    z, xBC, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+
+    # causal depthwise conv with carried state
+    xBC_hist = jnp.concatenate([state["conv"].astype(xBC.dtype), xBC], axis=1)
+    new_conv = xBC_hist[:, -(W - 1):]
+    # windowed conv: out[t] = sum_s w[s] * hist[t + s]  (hist len = S + W - 1)
+    conv_out = jnp.zeros_like(xBC)
+    for s in range(W):
+        conv_out = conv_out + xBC_hist[:, s:s + S] \
+            * p["conv_w"][s].astype(xBC.dtype)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(xBC.dtype))
+
+    xh, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    xh = xh.reshape(B, S, H, P)
+
+    if S == 1:
+        lt = (-jnp.exp(p["a_log"].astype(jnp.float32)) * dt[:, 0])  # (B,H)
+        s_new = jnp.exp(lt)[..., None, None] * state["ssm"] \
+            + (xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None])[..., None] \
+            * Bm[:, 0].astype(jnp.float32)[:, None, None, :]
+        y = jnp.einsum("bhps,bs->bhp", s_new,
+                       Cm[:, 0].astype(jnp.float32))[:, None]
+        ssm_state = s_new
+    else:
+        chunk = min(cfg.ssm.chunk_size, S)
+        if S % chunk != 0:
+            chunk = 1
+            while S % (chunk * 2) == 0 and chunk * 2 <= cfg.ssm.chunk_size:
+                chunk *= 2
+        y, ssm_state = ssd_chunked(xh, Bm, Cm, dt, p["a_log"],
+                                   state["ssm"], chunk)
+
+    y = y + p["d_skip"].astype(jnp.float32)[:, None] \
+        * xh.astype(jnp.float32) * 1.0
+    y = y.reshape(B, S, d_inner).astype(cd)
+
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True)
+                            + 1e-6)
+         * p["norm_scale"].astype(jnp.float32)).astype(cd)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+    return out, {"conv": new_conv.astype(state["conv"].dtype),
+                 "ssm": ssm_state}
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int) -> dict:
+    d_inner, H, n = _m2_dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_dim),
+                          jnp.dtype(cfg.compute_dtype)),
+        "ssm": jnp.zeros((batch, H, cfg.ssm.head_dim, n), jnp.float32),
+    }
+
+
+def mamba2_state_logical() -> dict:
+    return {"conv": ("batch", None, "mlp"),
+            "ssm": ("batch", "mlp", None, None)}

@@ -1,0 +1,43 @@
+"""Modality frontends (STUBS per assignment: input_specs() provides
+precomputed patch/frame embeddings) and the MLLM connector.
+
+This mirrors the paper's Fig. 5(a) decomposition: encoder -> connector ->
+backbone, with the paper's profiling insight that encoder+connector are
+<15% of runtime. The connector (MLP projector producing pseudo-tokens) is
+implemented in full — it is one of the "latency-critical kernels" CHIME
+places in the DRAM domain.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, embed_axis
+
+
+def init_frontend(b: ParamBuilder, cfg: ModelConfig):
+    f = cfg.frontend
+    e = embed_axis(cfg)
+    if f.connector == "mlp":
+        b.param("w1", (f.frontend_dim, cfg.d_model), (None, e))
+        b.param("b1", (cfg.d_model,), (None,), init="zeros")
+        b.param("w2", (cfg.d_model, cfg.d_model), (e, None))
+        b.param("b2", (cfg.d_model,), (None,), init="zeros")
+    else:
+        b.param("w1", (f.frontend_dim, cfg.d_model), (None, e))
+        b.param("b1", (cfg.d_model,), (None,), init="zeros")
+
+
+def apply_connector(p: dict, cfg: ModelConfig, feats: jax.Array) -> jax.Array:
+    """Project precomputed frontend embeddings into backbone pseudo-tokens.
+    feats: (B, T, frontend_dim) -> (B, T, d_model)."""
+    cd = cfg.compute_dtype
+    h = jnp.einsum("btf,fd->btd", feats.astype(cd), p["w1"].astype(cd)) \
+        + p["b1"].astype(cd)
+    if "w2" in p:
+        h = jax.nn.gelu(h)
+        h = jnp.einsum("btd,de->bte", h, p["w2"].astype(cd)) \
+            + p["b2"].astype(cd)
+    return h

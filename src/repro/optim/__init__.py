@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, TrainState, adamw_init, adamw_update, clip_by_global_norm,
+    lr_schedule,
+)

@@ -1,0 +1,141 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+MaxText-style: every tensor dimension carries a *logical* axis name; a rule
+table maps logical names to an ordered chain of mesh-axis candidates. A
+candidate binds only if (a) every mesh axis in it exists in the mesh, (b) the
+dimension size is divisible by the product of the candidate axis sizes, and
+(c) none of its mesh axes is already used by another dimension of the same
+tensor. Otherwise the resolver falls through to the next candidate and
+ultimately replicates that dimension.
+
+This is what lets a single config-driven model zoo compile on every
+(arch x shape x mesh) cell: awkward head counts (e.g. starcoder2's 36 Q /
+4 KV heads vs a model axis of 16) degrade gracefully to replication instead
+of erroring, and the roofline analysis then quantifies the cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Each logical axis maps to an ordered chain of candidates. A candidate is a
+# tuple of mesh axis names (sharded over their product) or () for "replicate".
+# "pod" appears jointly with "data" for batch so multi-pod meshes shard the
+# global batch over pods too.
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # data-parallel dims
+    "batch": (("pod", "data"), ("data",)),
+    # sequence: replicated for training activations by default; long-context
+    # decode re-binds kv_seq below (sequence parallelism).
+    "seq": ((),),
+    # Megatron-style sequence parallelism for the residual stream: the
+    # saved layer activations shard their seq dim over 'model' (enabled by
+    # cfg.seq_sharding; XLA inserts the gather/scatter at attention edges)
+    "seq_sp": (("model",), ()),
+    "kv_seq": ((),),
+    # KV-cache sequence dim: long-context decode shards it over 'data'
+    # (batch too small), otherwise over 'model' — GQA kv-head counts (1-8)
+    # rarely divide a 16-way model axis, so sharding the cache's seq dim is
+    # what actually distributes the KV bytes (softmax partials reduce over
+    # the shards via XLA collectives).
+    "kv_seq_shard": (("data",), ("model",), ()),
+    # model-parallel dims
+    "embed": ((),),
+    "fsdp_embed": (("data",), ()),           # ZeRO-3-ish weight storage dim
+    "mlp": (("model",), ()),
+    "heads": (("model",), ()),
+    "kv_heads": (("model",), ()),
+    "qkv_flat": (("model",), ()),
+    "vocab": (("model",), ()),
+    "experts": (("model",), ()),
+    "moe_ff": (("data",), ()),   # expert-FFN dim FSDP (cfg.moe_ff_fsdp)
+    "head_dim": ((),),
+    "state": ((),),
+    # generic never-sharded
+    "none": ((),),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Resolves logical axis names -> PartitionSpec for a given mesh."""
+
+    mesh: Mesh
+    rules: Mapping[str, tuple[tuple[str, ...], ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def with_overrides(self, **over: tuple[tuple[str, ...], ...]) -> "ShardingRules":
+        merged = dict(self.rules)
+        merged.update(over)
+        return ShardingRules(self.mesh, merged)
+
+    def _axis_size(self, axes: tuple[str, ...]) -> int:
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    def _candidate_ok(self, cand: tuple[str, ...], dim: int | None,
+                      used: set[str]) -> bool:
+        for a in cand:
+            if a not in self.mesh.shape or a in used:
+                return False
+        if dim is not None and cand and dim % self._axis_size(cand) != 0:
+            return False
+        return True
+
+    def spec(self, logical: Sequence[str | None],
+             shape: Sequence[int] | None = None) -> P:
+        """Resolve a logical-axis tuple (one entry per tensor dim) to a
+        PartitionSpec, applying the divisibility fallback chain per dim."""
+        if shape is not None and len(shape) != len(logical):
+            raise ValueError(f"logical {logical} vs shape {shape} rank mismatch")
+        used: set[str] = set()
+        out: list[tuple[str, ...] | None] = []
+        for i, name in enumerate(logical):
+            if name is None:
+                out.append(None)
+                continue
+            if name not in self.rules:
+                raise KeyError(f"unknown logical axis {name!r}")
+            dim = None if shape is None else shape[i]
+            chosen: tuple[str, ...] = ()
+            for cand in self.rules[name]:
+                if self._candidate_ok(cand, dim, used):
+                    chosen = cand
+                    break
+            used.update(chosen)
+            if not chosen:
+                out.append(None)
+            elif len(chosen) == 1:
+                out.append(chosen[0])  # type: ignore[arg-type]
+            else:
+                out.append(chosen)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[str | None],
+                 shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+def logical_constraint(rules: ShardingRules, x: jax.Array,
+                       logical: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical names (divisibility-aware)."""
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(logical, x.shape))
+
+
+def tree_shardings(rules: ShardingRules, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + matching ShapeDtypeStructs to a
+    pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sd: rules.sharding(lg, sd.shape),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )

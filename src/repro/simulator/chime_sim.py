@@ -1,0 +1,221 @@
+"""CHIME analytical simulator — the paper-fidelity instrument (§IV).
+
+Simulates end-to-end VQA inference (image -> visual tokens -> prefill ->
+decode) per platform, at the granularity of the fused kernels in Table I,
+with operator placement taken from the SAME MappingPlan the JAX runtime
+executes (core/planner.py). Per kernel:
+
+    t = max(flops / domain.peak_flops, bytes / domain.internal_bw)
+    e = bytes * read_pj_bit + flops * pj_flop (+ write energy for KV/cut
+        tensors, + UCIe energy at the two cut points)
+
+Decode is sequential per the paper's dataflow: attention(t+1) waits for
+FFN(t); exactly AttnOut/FFNOut cross UCIe per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core.planner import plan_for
+from repro.models.counting import kv_bytes_per_token
+from repro.simulator.hardware import CHIME, Platform
+
+
+@dataclasses.dataclass
+class Workload:
+    text_tokens: int = 128
+    output_tokens: int = 488
+    image: bool = True            # 512x512 astronaut (paper default)
+
+
+@dataclasses.dataclass
+class SimResult:
+    platform: str
+    model: str
+    prefill_s: float
+    decode_s: float
+    total_s: float
+    energy_j: float
+    tps: float                    # output tokens / total time
+    tokens_per_j: float
+    avg_power_w: float
+    breakdown: dict
+
+
+def _layer_kernels(cfg: ModelConfig) -> list[dict]:
+    """Per-layer fused kernels with per-token flops/bytes (decode GEMV)."""
+    D = cfg.d_model
+    out = []
+    for unit_plan in plan_for(cfg).layers:
+        for _ in range(unit_plan.repeats):
+            kerns = []
+            if unit_plan.mixer in ("attn", "attn_shared"):
+                qkv = D * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+                    * cfg.head_dim
+                o = cfg.num_heads * cfg.head_dim * D
+                kerns.append(("FUSED_QKV_PROJ", "dram", 2 * qkv, 2 * qkv))
+                kerns.append(("ATTN_OUT_PROJ", "dram", 2 * o, 2 * o))
+                kerns.append(("FUSED_ATTN_STREAM", "dram", 0, 0))  # KV below
+            elif unit_plan.mixer == "mla":
+                m = cfg.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                w = (D * cfg.num_heads * qk + D * m.kv_lora_rank
+                     + D * m.qk_rope_head_dim
+                     + m.kv_lora_rank * cfg.num_heads
+                     * (m.qk_nope_head_dim + m.v_head_dim)
+                     + cfg.num_heads * m.v_head_dim * D)
+                kerns.append(("MLA_PROJ", "dram", 2 * w, 2 * w))
+                kerns.append(("FUSED_ATTN_STREAM", "dram", 0, 0))
+            elif unit_plan.mixer == "rwkv6":
+                w = 3 * D * D + D * D + D * D
+                kerns.append(("RWKV6_TIMEMIX", "dram", 2 * w, 2 * w))
+            elif unit_plan.mixer == "mamba2":
+                d_inner = cfg.ssm.expand * D
+                w = D * (2 * d_inner + 2 * cfg.ssm.state_dim) + d_inner * D
+                kerns.append(("MAMBA2_SSD", "dram", 2 * w, 2 * w))
+            blk = unit_plan
+            has_ffn = any(p.op in ("ffn", "moe_ffn", "channel_mix")
+                          for p in blk.placements)
+            if has_ffn:
+                if cfg.mlp_type == "moe" and cfg.moe:
+                    m = cfg.moe
+                    w = m.top_k * 3 * D * m.d_ff_expert \
+                        + m.num_shared_experts * 3 * D * (
+                            m.d_ff_shared or m.d_ff_expert)
+                elif cfg.mlp_type in ("silu_gated", "gelu_gated"):
+                    w = 3 * D * cfg.d_ff
+                elif cfg.mlp_type == "rwkv_cm":
+                    w = 2 * D * cfg.d_ff + D * D
+                else:
+                    w = 2 * D * cfg.d_ff
+                kerns.append(("FUSED_FFN_ACT", "rram", 2 * w, 2 * w))
+            out.append({"kernels": kerns,
+                        "has_attn": unit_plan.mixer in (
+                            "attn", "attn_shared", "mla"),
+                        "has_ffn": has_ffn})
+    return out
+
+
+def _kernel_time_energy(domain, flops: float, bytes_r: float,
+                        pj_flop: float, weight_dtype_bytes: float = 2.0
+                        ) -> tuple[float, float]:
+    t = max(flops / domain.peak_flops, bytes_r / domain.internal_bw)
+    e = bytes_r * 8 * domain.read_energy_pj_bit * 1e-12 \
+        + flops * pj_flop * 1e-12
+    return t, e
+
+
+def visual_tokens(cfg: ModelConfig) -> int:
+    return cfg.frontend.num_tokens if cfg.frontend else 0
+
+
+def simulate(cfg: ModelConfig, platform: Platform = CHIME,
+             wl: Workload = Workload()) -> SimResult:
+    D = cfg.d_model
+    layers = _layer_kernels(cfg)
+    n_layers = len(layers)
+    vis = visual_tokens(cfg) if wl.image else 0
+    prompt = vis + wl.text_tokens
+
+    dram = platform.domains["dram"]
+    rram = platform.domains["rram"] if "rram" in platform.domains else dram
+    ucie_t_per_cut = (2 * D / platform.cross_domain_bw
+                      if platform.cross_domain_bw else 0.0)
+    ucie_e_per_cut = (2 * D * 8 * platform.cross_domain_pj_bit * 1e-12
+                      if platform.cross_domain_bw else 0.0)
+
+    # ---- decode: per output token t (context grows) -------------------
+    decode_s = 0.0
+    energy = 0.0
+    t_dram = t_rram = t_ucie = t_attn_kv = 0.0
+    busy = {"dram": 0.0, "rram": 0.0}
+    kv_tok = kv_bytes_per_token(cfg)
+    for step in range(wl.output_tokens):
+        ctx = prompt + step
+        tok_t = 0.0
+        for lay in layers:
+            for name, dom_name, flops, bytes_r in lay["kernels"]:
+                dom = dram if dom_name == "dram" else rram
+                if name == "FUSED_ATTN_STREAM":
+                    # stream the KV cache for this layer
+                    bytes_r = kv_tok / max(
+                        sum(1 for l in layers if l["has_attn"]), 1) * ctx
+                    flops = bytes_r  # ~1 MAC per cached byte at fp16
+                t, e = _kernel_time_energy(dom, flops, bytes_r,
+                                           platform.compute_pj_flop)
+                tok_t += t
+                energy += e
+                busy[dom_name] += t
+                if dom_name == "dram" or name == "FUSED_ATTN_STREAM":
+                    if name == "FUSED_ATTN_STREAM":
+                        t_attn_kv += t
+                    else:
+                        t_dram += t
+                else:
+                    t_rram += t
+            if lay["has_ffn"]:
+                tok_t += 2 * ucie_t_per_cut
+                t_ucie += 2 * ucie_t_per_cut
+                energy += 2 * ucie_e_per_cut
+            # KV append write energy (DRAM tier-0; write-once discipline)
+            energy += kv_tok / max(n_layers, 1) * 8 \
+                * dram.write_energy_pj_bit * 1e-12
+        tok_t += platform.layer_overhead_s * n_layers \
+            + platform.fixed_token_overhead_s
+        decode_s += tok_t
+
+    # ---- prefill (+ encoder/connector, paper: <15% of runtime) --------
+    # weights read once per layer, reused across prompt tokens (batched
+    # GEMM); compute scales with prompt length
+    prefill_s = 0.0
+    for lay in layers:
+        for name, dom_name, flops, bytes_r in lay["kernels"]:
+            dom = dram if dom_name == "dram" else rram
+            if name == "FUSED_ATTN_STREAM":
+                flops = 2.0 * prompt * prompt * D
+                bytes_r = prompt * kv_tok / max(n_layers, 1)
+            else:
+                flops = flops * prompt
+            t, e = _kernel_time_energy(dom, flops, bytes_r,
+                                       platform.compute_pj_flop)
+            prefill_s += t
+            energy += e
+            busy[dom_name] += t
+    # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP
+    if wl.image and cfg.frontend is not None:
+        enc_flops = 20e9
+        prefill_s += enc_flops / dram.peak_flops
+        energy += enc_flops * platform.compute_pj_flop * 1e-12
+    prefill_s += platform.layer_overhead_s * n_layers \
+        + platform.fixed_token_overhead_s
+
+    total = prefill_s + decode_s
+    if platform.power_w is not None:
+        # monolithic platform (GPU): board power over wall time
+        energy += platform.power_w * total
+    else:
+        # chiplet platform: NMP dies power-gate when idle (duty-cycled
+        # static power) + always-on uncore/UCIe (paper Fig. 7: ~1 W)
+        from repro.simulator.hardware import CHIME_UNCORE_W
+        energy += dram.static_power_w * busy["dram"] \
+            + rram.static_power_w * busy["rram"] \
+            + CHIME_UNCORE_W * total
+    tps = wl.output_tokens / total
+    return SimResult(
+        platform=platform.name,
+        model=cfg.name,
+        prefill_s=prefill_s,
+        decode_s=decode_s,
+        total_s=total,
+        energy_j=energy,
+        tps=tps,
+        tokens_per_j=wl.output_tokens / energy,
+        avg_power_w=energy / total,
+        breakdown={"dram_s": t_dram, "rram_s": t_rram,
+                   "attn_kv_s": t_attn_kv, "ucie_s": t_ucie,
+                   "overhead_s": platform.layer_overhead_s * n_layers
+                   * wl.output_tokens
+                   + platform.fixed_token_overhead_s * wl.output_tokens},
+    )

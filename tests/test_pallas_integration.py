@@ -1,0 +1,63 @@
+"""Whole-model integration of the Pallas kernel path: with
+REPRO_PALLAS_INTERPRET=1 the fusion registry routes FUSED_ATTN_STREAM /
+FUSED_FFN_ACT / FUSED_NORM through the Pallas kernels (interpret mode on
+CPU); the forward must agree with the pure-jnp path."""
+
+import os
+import subprocess
+import sys
+import pathlib
+
+import numpy as np
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+SCRIPT = r"""
+import os, sys, json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs.base import get_config
+from repro.models import Model
+
+arch = sys.argv[1]
+cfg = get_config(arch, reduced=True).replace(
+    param_dtype="float32", compute_dtype="float32", remat="none")
+model_jnp = Model(cfg)
+params = model_jnp.init(jax.random.PRNGKey(0))
+B, S = 2, 32
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                      cfg.vocab_size)}
+if cfg.frontend is not None and cfg.family != "audio":
+    tv = cfg.frontend.num_tokens
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1),
+                                          (B, S - tv), 0, cfg.vocab_size),
+             "patches": jax.random.normal(jax.random.PRNGKey(2),
+                                          (B, tv, cfg.frontend.frontend_dim))}
+ref = model_jnp.forward(params, batch)
+
+os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+model_k = Model(cfg.replace(use_pallas_kernels=True))
+out = model_k.forward(params, batch)
+err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                            - ref.astype(jnp.float32))))
+rel = err / (float(jnp.max(jnp.abs(ref))) + 1e-9)
+print("RESULT:" + json.dumps({"max_abs": err, "rel": rel}))
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["granite-3-2b", "starcoder2-7b",
+                                  "paligemma-3b"])
+def test_model_forward_pallas_path_matches_jnp(arch):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("REPRO_PALLAS_INTERPRET", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT, arch], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT:")][0]
+    import json
+    res = json.loads(line[len("RESULT:"):])
+    assert res["rel"] < 5e-3, res

@@ -1,0 +1,109 @@
+"""Sharding resolver: unit + hypothesis property tests of the divisibility
+fallback invariants."""
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import DEFAULT_RULES, ShardingRules
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # abstract mesh over 1 real device is fine for spec resolution tests
+    return jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def rules(mesh):
+    return ShardingRules(mesh)
+
+
+def test_divisible_dims_bind(rules):
+    spec = rules.spec(("batch", None, "vocab"), (256, 4096, 49408))
+    assert spec == P("data", None, "model")
+
+
+def test_indivisible_dims_replicate(rules):
+    # 36 heads % 16 != 0 -> replicate that dim
+    spec = rules.spec(("batch", None, "heads", None), (256, 128, 36, 128))
+    assert spec == P("data", None, None, None)
+
+
+def test_axis_conflict_falls_through(rules):
+    # batch takes 'data'; kv_seq_shard then takes 'model'; kv_heads (8)
+    # can neither divide nor reuse 'model' -> replicated
+    spec = rules.spec(("batch", "kv_seq_shard", "kv_heads", None),
+                      (128, 32768, 8, 128))
+    assert spec == P("data", "model", None, None)
+
+
+def test_long_context_batch1_seq_shards(rules):
+    # batch=1 can't shard -> kv_seq takes 'data', heads take 'model'
+    spec = rules.spec(("batch", "kv_seq_shard", "kv_heads", None),
+                      (1, 524288, 32, 64))
+    assert spec == P(None, "data", "model", None)
+
+
+def test_multipod_batch(mesh):
+    mesh3 = jax.sharding.AbstractMesh((2, 16, 16),
+                                      ("pod", "data", "model"))
+    rules3 = ShardingRules(mesh3)
+    spec = rules3.spec(("batch", None), (256, 4096))
+    assert spec == P(("pod", "data"), None)
+
+
+def test_fsdp_embed_binds_data(rules):
+    spec = rules.spec(("fsdp_embed", "mlp"), (18432, 73728))
+    assert spec == P("data", "model")
+
+
+def test_unknown_logical_axis_raises(rules):
+    with pytest.raises(KeyError):
+        rules.spec(("nonsense",), (8,))
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+LOGICAL = st.sampled_from(list(DEFAULT_RULES.keys()))
+DIMS = st.integers(min_value=1, max_value=2 ** 20)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(LOGICAL, DIMS), min_size=1, max_size=5))
+def test_spec_resolution_total_and_divisible(entries):
+    """For ANY combination of logical axes and dim sizes the resolver must
+    (a) never raise, (b) only bind mesh axes whose product divides the dim,
+    (c) never bind one mesh axis to two dims."""
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rules = ShardingRules(mesh)
+    logical = tuple(e[0] for e in entries)
+    shape = tuple(e[1] for e in entries)
+    spec = rules.spec(logical, shape)
+    used = []
+    for dim, binding in zip(shape, tuple(spec)):
+        if binding is None:
+            continue
+        axes = binding if isinstance(binding, tuple) else (binding,)
+        prod = 1
+        for a in axes:
+            prod *= mesh.shape[a]
+            used.append(a)
+        assert dim % prod == 0, (logical, shape, spec)
+    assert len(used) == len(set(used)), (logical, shape, spec)
+
+
+@settings(max_examples=100, deadline=None)
+@given(DIMS, DIMS)
+def test_batch_vocab_consistency(b, v):
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    rules = ShardingRules(mesh)
+    spec = rules.spec(("batch", "vocab"), (b, v))
+    if b % 16 == 0:
+        assert tuple(spec)[0] == "data"
+    if v % 16 == 0:
+        assert tuple(spec)[1] == "model"
