@@ -69,11 +69,14 @@ def apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rules,
 # ---------------------------------------------------------------------------
 def apply_attention_seq(p: dict, cfg: ModelConfig, x: jax.Array,
                         positions: jax.Array, rules, causal: bool,
-                        build_cache: bool = False, max_len: int = 0
-                        ) -> tuple[jax.Array, dict | None]:
+                        build_cache: bool = False, max_len: int = 0,
+                        length=None) -> tuple[jax.Array, dict | None]:
     """Full-sequence attention (train / prefill / encoder). When
     ``build_cache``, the post-RoPE K/V are absorbed into KV stores
-    (flat or CHIME-tiered per cfg.kv_policy)."""
+    (flat or CHIME-tiered per cfg.kv_policy). ``length`` (traced scalar,
+    default S) is the number of VALID prompt tokens: the serving engine
+    right-pads prompts to a bucket length, and the tiered store's hot ring
+    and validity masks must follow the true length, not the padded shape."""
     from repro.core import kv_tiers as KT
     q, k, v = A.qkv_proj(p, cfg, x, positions, rules)
     S = x.shape[1]
@@ -87,11 +90,12 @@ def apply_attention_seq(p: dict, cfg: ModelConfig, x: jax.Array,
             scores_dtype=jnp.dtype(cfg.attn_scores_dtype))
     cache = None
     if build_cache:
+        ln = S if length is None else length
         cache = {
             "k": KT.store_from_full(k, cfg.kv_policy, cfg.kv_hot_window,
-                                    S, max_len),
+                                    ln, max_len),
             "v": KT.store_from_full(v, cfg.kv_policy, cfg.kv_hot_window,
-                                    S, max_len),
+                                    ln, max_len),
         }
     return A.attn_out(p, cfg, o, rules), cache
 
@@ -128,8 +132,8 @@ def apply_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
 # ---------------------------------------------------------------------------
 def apply_mla_seq(p: dict, cfg: ModelConfig, x: jax.Array,
                   positions: jax.Array, rules, causal: bool,
-                  build_cache: bool = False, max_len: int = 0
-                  ) -> tuple[jax.Array, dict | None]:
+                  build_cache: bool = False, max_len: int = 0,
+                  length=None) -> tuple[jax.Array, dict | None]:
     from repro.core import kv_tiers as KT
     S = x.shape[1]
     c_kv, k_rope = A.mla_latents(p, cfg, x, positions)
@@ -139,11 +143,12 @@ def apply_mla_seq(p: dict, cfg: ModelConfig, x: jax.Array,
                           absorbed=cfg.mla_absorbed)
     cache = None
     if build_cache:
+        ln = S if length is None else length
         cache = {
             "c_kv": KT.store_from_full(c_kv, cfg.kv_policy,
-                                       cfg.kv_hot_window, S, max_len),
+                                       cfg.kv_hot_window, ln, max_len),
             "k_rope": KT.store_from_full(k_rope, cfg.kv_policy,
-                                         cfg.kv_hot_window, S, max_len),
+                                         cfg.kv_hot_window, ln, max_len),
         }
     return out, cache
 

@@ -37,8 +37,11 @@ def init_tiered(batch: int, max_len: int, inner: tuple[int, ...],
         "cold_q": jnp.zeros((batch, max_len) + inner, jnp.int8),
         "cold_scale": jnp.ones((batch, max_len) + inner[:-1] + (1,),
                                jnp.float32),
+        # per-sequence (= per serving slot) endurance counters, so a
+        # multi-request pool can prove writes<=1-per-cold-slot for each
+        # occupancy independently and reset them on slot recycling
         "writes": jnp.zeros(
-            ((max_len + ENDURANCE_BLOCK - 1) // ENDURANCE_BLOCK,),
+            (batch, (max_len + ENDURANCE_BLOCK - 1) // ENDURANCE_BLOCK),
             jnp.int32),
     }
 
@@ -49,7 +52,7 @@ def tiered_logical(inner_logical: tuple[str | None, ...]) -> dict:
         "hot": ("batch", None) + inner_logical,
         "cold_q": seq_ax,
         "cold_scale": ("batch", "kv_seq_shard") + inner_logical[:-1] + (None,),
-        "writes": (None,),
+        "writes": ("batch", None),
     }
 
 
@@ -85,7 +88,7 @@ def tiered_from_full(full: jax.Array, hot_window: int, length,
                                         W)["writes"])
     n_cold_blocks = jnp.maximum(length - W, 0) // ENDURANCE_BLOCK
     writes = jnp.where(
-        jnp.arange(writes.shape[0]) < n_cold_blocks, 1, writes)
+        jnp.arange(writes.shape[1])[None, :] < n_cold_blocks, 1, writes)
     return {"hot": hot, "cold_q": cold_q, "cold_scale": cold_scale,
             "writes": writes}
 
@@ -113,7 +116,7 @@ def tiered_append(cache: dict, new: jax.Array, pos) -> dict:
     hot = jax.lax.dynamic_update_slice_in_dim(
         cache["hot"], new.astype(cache["hot"].dtype), slot, axis=1)
     blk = safe_evict // ENDURANCE_BLOCK
-    writes = cache["writes"].at[blk].add(
+    writes = cache["writes"].at[:, blk].add(
         jnp.where(do_evict, 1, 0))
     return {"hot": hot, "cold_q": cold_q, "cold_scale": cold_scale,
             "writes": writes}
@@ -202,6 +205,34 @@ def store_read(store: dict, pos, dtype=jnp.bfloat16
 
 
 def endurance_report(cache: dict) -> dict:
+    """Aggregate endurance counters. ``writes`` is (batch, n_blocks): each
+    entry counts cold-slot writes binned by endurance block for that
+    sequence (serving: that pool slot)."""
     w = cache["writes"]
     return {"max_writes_per_block": jnp.max(w),
-            "total_cold_writes": jnp.sum(w)}
+            "total_cold_writes": jnp.sum(w),
+            "per_slot_writes": jnp.sum(w, axis=tuple(range(1, w.ndim)))}
+
+
+def expected_block_writes(n_blocks: int, hot_window: int, prefill_len,
+                          total_len) -> jax.Array:
+    """Expected per-block write count for ONE sequence that absorbed
+    ``prefill_len`` tokens via the one-shot cold write (tiered_from_full)
+    and then decoded up to ``total_len`` total tokens via tiered_append.
+
+    The one-shot prefill counts 1 per *full* cold block; each decode
+    eviction counts 1 per position. A cache whose counters exceed this
+    vector anywhere has written some cold slot more than once — the
+    endurance violation the RRAM tier forbids.
+    """
+    W = hot_window
+    n_cold_prefill = jnp.maximum(prefill_len - W, 0)
+    full_blocks = n_cold_prefill // ENDURANCE_BLOCK
+    blk = jnp.arange(n_blocks)
+    lo, hi = blk * ENDURANCE_BLOCK, (blk + 1) * ENDURANCE_BLOCK
+    # decode evictions cover positions [prefill_len - W, total_len - W)
+    ev_lo = jnp.maximum(prefill_len - W, 0)
+    ev_hi = jnp.maximum(total_len - W, 0)
+    appends = jnp.clip(jnp.minimum(hi, ev_hi) - jnp.maximum(lo, ev_lo),
+                       0, ENDURANCE_BLOCK)
+    return jnp.where(blk < full_blocks, 1, 0) + appends

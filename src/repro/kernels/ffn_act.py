@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _act(h, kind: str):
     if kind == "silu_gated":
@@ -96,7 +98,7 @@ def ffn_act(x: jax.Array, w_up: jax.Array, w_gate: jax.Array | None,
         out_specs=pl.BlockSpec((block_m, D), lambda mi, fi: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_up, wg, w_down)
@@ -172,7 +174,7 @@ def ffn_act_int8(x: jax.Array, w_up_q: jax.Array, w_up_scale: jax.Array,
         out_specs=pl.BlockSpec((block_m, D), lambda mi, fi: (mi, 0)),
         out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_up_q, w_up_scale.reshape(1, F), w_down_q,

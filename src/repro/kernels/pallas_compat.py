@@ -1,0 +1,13 @@
+"""Version compatibility for Pallas TPU lowering parameters.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; the
+kernels use whichever this jax exposes so the same BlockSpecs lower on
+both old and new toolchains.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

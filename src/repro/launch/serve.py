@@ -1,7 +1,17 @@
-"""Batched serving driver: prefill + decode with the CHIME tiered KV cache.
+"""Serving CLI: a thin front-end over the continuous-batching engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch paligemma-3b \
-        --reduced --batch 4 --prompt-len 32 --gen 16 --kv-policy tiered
+        --reduced --requests 8 --concurrency 4 --prompt-len 32 --gen 16 \
+        --kv-policy tiered
+
+`generate` below is the single-request reference path (prefill + one
+sequence of decode steps); the engine's per-slot decode is numerically
+identical to it, and tests/test_serving.py holds the two to exact token
+agreement.
+
+The engine currently serves single-host (no mesh/pjit); the seed CLI's
+--production-mesh path was retired with the batch driver and sharded
+serving is tracked as a roadmap item.
 """
 
 from __future__ import annotations
@@ -13,11 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.core import kv_tiers as KT
-from repro.data import DataConfig, SyntheticPipeline
-from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models import Model
-from repro.sharding import ShardingRules
 
 
 def generate(model: Model, params, batch: dict, prompt_len: int,
@@ -43,54 +49,65 @@ def generate(model: Model, params, batch: dict, prompt_len: int,
 
 
 def main(argv=None):
+    from repro.serving import (Engine, aggregate_metrics,
+                               make_synthetic_requests,
+                               simulated_efficiency)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paligemma-3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--concurrency", type=int, default=4,
+                    help="decode slots (continuous-batching width)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--kv-policy", default="tiered",
                     choices=["flat", "tiered"])
     ap.add_argument("--hot-window", type=int, default=16)
-    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="KV pool length per slot (0 = prompt+gen)")
+    ap.add_argument("--image-every", type=int, default=0,
+                    help="every k-th request is a VQA request (0 = none)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
         param_dtype="float32", compute_dtype="float32", remat="none",
         kv_policy=args.kv_policy, kv_hot_window=args.hot_window)
-    mesh = (make_production_mesh() if args.production_mesh
-            else make_local_mesh())
-    rules = ShardingRules(mesh)
-    model = Model(cfg, rules)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # VQA requests occupy cfg.frontend.num_tokens visual positions on top
+    # of (at least one) text token — size the pool for the larger of the
+    # two request shapes
+    vis = (cfg.frontend.num_tokens
+           if args.image_every and cfg.frontend is not None else 0)
+    max_len = args.max_len or (max(args.prompt_len, vis + 1) + args.gen)
 
-    pipe = SyntheticPipeline(cfg, DataConfig(args.batch, args.prompt_len))
-    batch = pipe.host_slice(0)
-    batch.pop("labels", None)
-    batch.pop("loss_mask", None)
+    engine = Engine(model, params, num_slots=args.concurrency,
+                    max_len=max_len)
+    reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
+                                   args.gen, image_every=args.image_every)
+    t0 = time.time()
+    done = engine.run(reqs)
+    wall = time.time() - t0
 
-    with mesh:
-        params = model.init(jax.random.PRNGKey(0))
-        t0 = time.time()
-        toks, cache = generate(model, params, batch, args.prompt_len,
-                               args.gen)
-        dt = time.time() - t0
-        total = args.batch * args.gen
-        print(f"[serve] arch={args.arch} kv={args.kv_policy} "
-              f"generated {toks.shape} in {dt:.2f}s "
-              f"({total / dt:.1f} tok/s incl. compile)")
-        if args.kv_policy == "tiered":
-            # endurance report from the first attention layer's K store
-            for ucache in jax.tree.leaves(
-                    {k: v for k, v in cache.items()},
-                    is_leaf=lambda x: isinstance(x, dict) and "hot" in x):
-                if isinstance(ucache, dict) and "hot" in ucache:
-                    rep = KT.endurance_report(ucache)
-                    print(f"[serve] cold-tier writes: total="
-                          f"{int(rep['total_cold_writes'])} "
-                          f"max/block={int(rep['max_writes_per_block'])}")
-                    break
-        print("[serve] sample token ids:", toks[0, :12].tolist())
-        return toks
+    m = aggregate_metrics(done, wall)
+    print(f"[serve] arch={args.arch} kv={args.kv_policy} "
+          f"slots={args.concurrency}: {m['requests']} requests, "
+          f"{m['total_tokens']} tokens in {wall:.2f}s "
+          f"({m['tok_per_s']:.1f} tok/s incl. compile; "
+          f"mean ttft {m['mean_ttft_s'] * 1e3:.0f} ms, "
+          f"p95 latency {m['p95_latency_s']:.2f} s)")
+    if args.kv_policy == "tiered":
+        rep = engine.endurance_report()
+        print(f"[serve] endurance: max writes/cold-slot="
+              f"{rep['max_writes_per_cold_slot']:.2f} "
+              f"(write-once {'OK' if rep['write_once_ok'] else 'VIOLATED'})")
+    sim = simulated_efficiency(cfg, done)
+    print(f"[serve] simulated on {sim['platform']}: "
+          f"{sim['sim_tokens_per_j']:.1f} tok/J, "
+          f"{sim['sim_energy_j']:.3f} J total")
+    print("[serve] sample token ids:", done[0].generated[:12])
+    return done
 
 
 if __name__ == "__main__":

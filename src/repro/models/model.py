@@ -302,7 +302,8 @@ class Model:
 
     def _run_block(self, spec: BlockSpec, bp: dict, shared_p: dict | None,
                    x: jax.Array, positions: jax.Array, bcache: dict,
-                   pos, mode: str) -> tuple[jax.Array, dict, jax.Array]:
+                   pos, mode: str, plen=None
+                   ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
         rules = self.rules
         aux = jnp.zeros((), jnp.float32)
@@ -323,7 +324,8 @@ class Model:
                 out, nc = fusion.apply_attention_seq(
                     p["mixer"], cfg, h, positions, rules,
                     causal=not cfg.is_encoder,
-                    build_cache=build_cache and bool(bcache), max_len=ml)
+                    build_cache=build_cache and bool(bcache), max_len=ml,
+                    length=plen)
                 if nc is not None:
                     new_cache = nc
         elif spec.mixer == "mla":
@@ -337,7 +339,8 @@ class Model:
                 out, nc = fusion.apply_mla_seq(
                     p["mixer"], cfg, h, positions, rules,
                     causal=not cfg.is_encoder,
-                    build_cache=build_cache and bool(bcache), max_len=ml)
+                    build_cache=build_cache and bool(bcache), max_len=ml,
+                    length=plen)
                 if nc is not None:
                     new_cache = nc
         elif spec.mixer == "rwkv6":
@@ -382,14 +385,15 @@ class Model:
 
     def _run_unit(self, ui: int, unit: UnitSpec, params: dict,
                   x: jax.Array, positions: jax.Array, ucache: dict,
-                  pos, mode: str) -> tuple[jax.Array, dict, jax.Array]:
+                  pos, mode: str, plen=None
+                  ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
         shared_p = params.get("shared_attn")
         up = params["units"].get(f"u{ui}")
 
         def body(x, bp, bc):
             return self._run_block(unit.block, bp, shared_p, x, positions,
-                                   bc, pos, mode)
+                                   bc, pos, mode, plen)
 
         if mode == "full" and cfg.remat != "none":
             policy = (jax.checkpoint_policies.checkpoint_dots
@@ -424,8 +428,8 @@ class Model:
         return x, new_cache, aux_t
 
     def _forward(self, params: dict, batch: dict, mode: str,
-                 cache: dict | None, pos) -> tuple[jax.Array, dict,
-                                                   jax.Array]:
+                 cache: dict | None, pos, plen=None
+                 ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
         x, positions = self._embed(params, batch, pos)
         if cache is None:
@@ -434,12 +438,17 @@ class Model:
         aux_total = jnp.zeros((), jnp.float32)
         for ui, unit in enumerate(self.plan):
             x, nc, aux = self._run_unit(
-                ui, unit, params, x, positions, cache[f"u{ui}"], pos, mode)
+                ui, unit, params, x, positions, cache[f"u{ui}"], pos, mode,
+                plen)
             new_cache[f"u{ui}"] = nc
             aux_total = aux_total + aux
         x = fusion.apply_norm(params["final_norm"], cfg, x)
         if mode == "prefill":
-            x = x[:, -1:]
+            if plen is None:
+                x = x[:, -1:]
+            else:
+                # right-padded prompt: the "last token" is at plen - 1
+                x = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
         if cfg.tie_embeddings:
             logits = jnp.einsum(
                 "bsd,vd->bsv", x,
@@ -475,14 +484,17 @@ class Model:
         loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         return loss + 0.01 * aux
 
-    def prefill(self, params: dict, batch: dict, max_len: int
-                ) -> tuple[jax.Array, dict]:
-        """Returns last-token logits + filled caches."""
+    def prefill(self, params: dict, batch: dict, max_len: int,
+                length=None) -> tuple[jax.Array, dict]:
+        """Returns last-token logits + filled caches. ``length`` (traced
+        scalar) is the count of valid prompt tokens when the batch is
+        right-padded to a serving bucket; None means the full sequence is
+        valid (seed behaviour)."""
         # batch size from any input tensor
         bsz = jax.tree.leaves(batch)[0].shape[0]
         cache = self.init_cache(bsz, max_len)
         logits, new_cache, _ = self._forward(
-            params, batch, "prefill", cache, None)
+            params, batch, "prefill", cache, None, plen=length)
         return logits, new_cache
 
     def decode_step(self, params: dict, tokens: jax.Array, cache: dict,

@@ -1,0 +1,29 @@
+"""Continuous-batching serving engine over a multi-request tiered KV pool.
+
+CHIME's decode economics (paper §III-C) come from keeping the memory
+hierarchy full: the DRAM chiplet streams a hot bf16 window per sequence
+while the write-once RRAM tier holds the int8 cold prefix. One request at a
+time leaves both domains idle most of the step. This package turns the
+single-request `launch/serve.py` path into a serving engine:
+
+* `request.py`   — request/timing dataclasses and the FCFS stream
+* `kv_pool.py`   — slot-indexed multi-request extension of core/kv_tiers
+* `scheduler.py` — FCFS + capacity-aware admission against the DRAM/RRAM
+                   byte budgets of simulator/hardware.py
+* `engine.py`    — interleaved prefill/decode step loop (one jitted decode
+                   over all slots; static shapes so jit compiles once)
+* `metrics.py`   — per-request latency + aggregate tok/s + simulated
+                   tokens/J via simulator/chime_sim.py cost terms
+"""
+
+from repro.serving.engine import Engine
+from repro.serving.kv_pool import TieredKVPool, slot_kv_bytes
+from repro.serving.metrics import aggregate_metrics, simulated_efficiency
+from repro.serving.request import Request, make_synthetic_requests
+from repro.serving.scheduler import CapacityBudget, FCFSScheduler
+
+__all__ = [
+    "Engine", "TieredKVPool", "slot_kv_bytes", "aggregate_metrics",
+    "simulated_efficiency", "Request", "make_synthetic_requests",
+    "CapacityBudget", "FCFSScheduler",
+]

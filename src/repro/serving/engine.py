@@ -1,0 +1,249 @@
+"""Continuous-batching engine: interleaved prefill admission + one jitted
+decode step over all slots.
+
+Step anatomy (one `Engine.step()` call):
+
+  1. admission — while a slot is free AND the FCFS scheduler's capacity
+     budgets admit another resident request, prefill the queue head
+     (right-padded to a shape bucket so jit reuses traces) and overwrite a
+     pool slot with its fresh per-request tiered cache;
+  2. decode — ONE jitted call advances every slot: the per-slot decode is
+     the ordinary `Model.decode_step` vmapped over the slot axis, so each
+     slot attends its own hot ring + cold tier at its own position. Slot
+     shapes are static; jit compiles once per engine.
+  3. retire — slots whose request hit EOS or max_new_tokens are freed for
+     recycling; inactive slots' cache writes are masked out, so endurance
+     counters only ever reflect real occupancies.
+
+Greedy decoding (matches `launch.serve.generate`); tokens stream to each
+request's ``on_token`` callback as they are produced.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving import kv_pool as KVP
+from repro.serving.kv_pool import TieredKVPool, slot_kv_bytes
+from repro.serving.request import FINISHED, RUNNING, Request
+from repro.serving.scheduler import CapacityBudget, FCFSScheduler
+from repro.simulator.hardware import CHIME
+
+
+def bucket_len(n: int, minimum: int = 8) -> int:
+    """Next power of two >= n (>= minimum): bounds jit retraces to
+    O(log max_prompt) prefill shapes."""
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+class Engine:
+    """Continuous-batching serving engine over a TieredKVPool."""
+
+    def __init__(self, model, params, num_slots: int, max_len: int,
+                 scheduler: FCFSScheduler | None = None,
+                 platform=CHIME, clock=time.perf_counter):
+        cfg = model.cfg
+        if cfg.is_encoder:
+            raise ValueError("encoder-only model cannot be served")
+        if num_slots < 1:
+            raise ValueError("engine needs at least one decode slot")
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.clock = clock
+        self.pool = TieredKVPool(model, num_slots, max_len)
+        hot_b, cold_b = slot_kv_bytes(model, max_len)
+        if scheduler is None:
+            scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
+                                      hot_b, cold_b)
+        self.scheduler = scheduler
+        if scheduler.max_concurrent < 1:
+            raise ValueError(
+                f"one slot's KV state ({hot_b} hot + {cold_b} cold bytes) "
+                f"exceeds the domain budgets; nothing can be admitted")
+        # num_slots beyond the byte budgets is allowed but idle: admission
+        # is gated per-request by the scheduler, so effective concurrency
+        # is min(num_slots, scheduler.max_concurrent)
+        # recurrent (SSM) prefill states are cumulative over the whole
+        # padded sequence, so those architectures need exact-length prefill
+        self._exact_prefill = any(
+            u.block.mixer in ("rwkv6", "mamba2") for u in model.plan)
+
+        # ---- per-slot host state -------------------------------------
+        self._slot_req: list[Request | None] = [None] * num_slots
+        self._tok = np.zeros((num_slots, 1), np.int32)
+        self._pos = np.zeros((num_slots,), np.int32)
+        self._active = np.zeros((num_slots,), bool)
+        # lengths of the CURRENT/LAST occupant (endurance audit input)
+        self._slot_prefill_len = [0] * num_slots
+        self._slot_total_len = [0] * num_slots
+        self.finished: list[Request] = []
+        self._next_rid = 0
+
+        # ---- jitted programs -----------------------------------------
+        axes = self.pool.axes
+
+        def slot_step(p, tok, cache, pos):
+            c1 = KVP.tree_expand(cache, axes)
+            logits, nc = model.decode_step(p, tok[None], c1, pos)
+            ntok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+            return ntok, KVP.tree_squeeze(nc, axes)
+
+        vm = jax.vmap(slot_step, in_axes=(None, 0, axes, 0),
+                      out_axes=(0, axes))
+
+        def step(p, toks, cache, pos, active):
+            ntoks, nc = vm(p, toks, cache, pos)
+
+            def sel(n, o, a):
+                shp = [1] * n.ndim
+                shp[a] = n.shape[a]
+                return jnp.where(active.reshape(shp), n, o)
+
+            # inactive slots keep their old cache verbatim: no phantom
+            # appends, no endurance-counter drift while a slot is parked
+            return ntoks, jax.tree.map(sel, nc, cache, axes)
+
+        self._step = jax.jit(step)
+
+        def prefill(p, batch, length):
+            logits, cache = model.prefill(p, batch, max_len, length)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return tok[0], cache
+
+        self._prefill = jax.jit(prefill)
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        if req.total_len > self.max_len:
+            raise ValueError(
+                f"request needs {req.total_len} positions > pool max_len "
+                f"{self.max_len}")
+        if req.rid is None or req.rid < 0:
+            req.rid = self._next_rid
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        req.arrival_s = self.clock()
+        self.scheduler.submit(req)
+        return req
+
+    def _make_batch(self, req: Request) -> dict:
+        s = int(req.tokens.shape[0])
+        vis = 0 if req.patches is None else int(req.patches.shape[0])
+        if self._exact_prefill:
+            target = s
+        else:
+            # bucket the text tail, but never pad the prefill sequence
+            # (visual tokens + text) past the pool's slot length
+            target = max(min(bucket_len(s), self.max_len - vis), s)
+        pad = target - s
+        toks = np.concatenate(
+            [np.asarray(req.tokens, np.int32),
+             np.zeros((pad,), np.int32)])[None]
+        batch = {"tokens": jnp.asarray(toks)}
+        if req.patches is not None:
+            batch["patches"] = jnp.asarray(
+                np.asarray(req.patches,
+                           np.float32)[None])
+        return batch
+
+    # ------------------------------------------------------------------
+    # the step loop
+    # ------------------------------------------------------------------
+    def _admit(self) -> list[tuple[int, int, bool]]:
+        events = []
+        while self.pool.free_slots:
+            req = self.scheduler.next_request(self.pool.active_slots)
+            if req is None:
+                break
+            batch = self._make_batch(req)
+            length = req.prompt_len
+            tok, cache = self._prefill(self.params, batch,
+                                       jnp.asarray(length, jnp.int32))
+            req.first_token_s = self.clock()
+            req.status = RUNNING
+            req.emit(int(tok))
+            if req.finished_by(int(tok)):
+                self._finish(req)        # 1-token request: never lands
+                events.append((req.rid, int(tok), True))
+                continue
+            events.append((req.rid, int(tok), False))
+            slot = self.pool.alloc()
+            self.pool.insert(cache, slot)
+            req.slot = slot
+            self._slot_req[slot] = req
+            self._slot_prefill_len[slot] = length
+            self._slot_total_len[slot] = length
+            self._tok[slot, 0] = int(tok)
+            self._pos[slot] = length
+            self._active[slot] = True
+        return events
+
+    def _finish(self, req: Request):
+        req.status = FINISHED
+        req.finish_s = self.clock()
+        self.finished.append(req)
+
+    def _retire(self, slot: int):
+        req = self._slot_req[slot]
+        self._finish(req)
+        self._slot_req[slot] = None
+        self._active[slot] = False
+        req.slot = -1
+        self.pool.free(slot)
+
+    def step(self) -> list[tuple[int, int, bool]]:
+        """Admit + decode one token on every active slot. Returns streamed
+        events: (rid, token, done)."""
+        events = self._admit()
+        if not self._active.any():
+            return events
+        ntoks, self.pool.cache = self._step(
+            self.params, jnp.asarray(self._tok), self.pool.cache,
+            jnp.asarray(self._pos), jnp.asarray(self._active))
+        ntoks = np.asarray(ntoks)
+        for slot in np.nonzero(self._active)[0]:
+            req = self._slot_req[slot]
+            tok = int(ntoks[slot])
+            req.emit(tok)
+            self._pos[slot] += 1
+            self._slot_total_len[slot] += 1
+            self._tok[slot, 0] = tok
+            done = req.finished_by(tok)
+            events.append((req.rid, tok, done))
+            if done:
+                self._retire(int(slot))
+        return events
+
+    def run(self, requests=None, max_steps: int | None = None
+            ) -> list[Request]:
+        """Drain: submit ``requests`` (if given) and step until queue and
+        slots are empty. Returns the finished requests in completion
+        order."""
+        for r in requests or ():
+            self.submit(r)
+        start = len(self.finished)
+        steps = 0
+        while self.scheduler.pending or self.pool.active_slots:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(f"engine did not drain in {max_steps} "
+                                   f"steps")
+        return self.finished[start:]
+
+    # ------------------------------------------------------------------
+    # reports
+    # ------------------------------------------------------------------
+    def endurance_report(self) -> dict:
+        W = min(self.model.cfg.kv_hot_window, self.max_len)
+        return self.pool.endurance_report(
+            self._slot_prefill_len, self._slot_total_len, W)

@@ -1,0 +1,156 @@
+"""Slot-indexed multi-request KV pool over the CHIME tiered stores.
+
+The pool is the model's ordinary decode cache (`Model.init_cache`) with the
+batch axis reinterpreted as *serving slots*: slot s holds the tiered
+DRAM-hot / RRAM-cold KV state of whichever request currently occupies it.
+Slot admission overwrites the slot with a freshly prefilled per-request
+cache — including its per-slot endurance counters, which is what preserves
+the writes<=1-per-cold-slot RRAM discipline across slot recycling.
+
+Cache pytree layout (from Model.init_cache): per scan-unit subtrees whose
+leaves carry the slot axis at position 0, or 1 for scanned units (leading
+layer-repeat axis). `batch_axes` materializes that axis index per leaf so
+insert/reset/vmap all address the slot dimension uniformly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kv_tiers as KT
+
+
+def batch_axes(model, cache: dict) -> dict:
+    """Tree matching ``cache`` whose leaves give the slot-axis index."""
+    axes = {}
+    for ui, unit in enumerate(model.plan):
+        a = 1 if unit.repeats > 1 else 0
+        axes[f"u{ui}"] = jax.tree.map(lambda _: a, cache[f"u{ui}"])
+    return axes
+
+
+def tree_expand(tree: dict, axes: dict) -> dict:
+    """Re-insert a size-1 slot axis (inside a vmap body)."""
+    return jax.tree.map(lambda l, a: jnp.expand_dims(l, a), tree, axes)
+
+
+def tree_squeeze(tree: dict, axes: dict) -> dict:
+    return jax.tree.map(lambda l, a: jnp.squeeze(l, axis=a), tree, axes)
+
+
+def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
+    """(dram_hot_bytes, rram_cold_bytes) of ONE slot's cache.
+
+    Hot ring, flat stores and SSM states live in the DRAM domain; the int8
+    cold tier (+ its scales) is the RRAM budget. Endurance counters are
+    bookkeeping, not capacity.
+    """
+    shapes, _ = model.cache_spec(1, max_len)
+    hot = cold = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nbytes = 1
+        for d in leaf.shape:
+            nbytes *= d
+        nbytes *= jnp.dtype(leaf.dtype).itemsize
+        if key == "writes":
+            continue
+        if key in ("cold_q", "cold_scale"):
+            cold += nbytes
+        else:
+            hot += nbytes
+    return hot, cold
+
+
+class TieredKVPool:
+    """Fixed set of decode slots over a shared tiered cache pytree."""
+
+    def __init__(self, model, num_slots: int, max_len: int):
+        self.model = model
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.cache = model.init_cache(num_slots, max_len)
+        self.axes = batch_axes(model, self.cache)
+        self._zero_slot = model.init_cache(1, max_len)
+        self._free = list(range(num_slots))
+
+        def _insert(pool, req_cache, slot):
+            return jax.tree.map(
+                lambda p, r, a: jax.lax.dynamic_update_slice_in_dim(
+                    p, r.astype(p.dtype), slot, axis=a),
+                pool, req_cache, self.axes)
+
+        self._insert = jax.jit(_insert)
+
+    # ---- slot bookkeeping (host side) --------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active_slots(self) -> int:
+        return self.num_slots - len(self._free)
+
+    def alloc(self) -> int:
+        return self._free.pop(0)
+
+    def free(self, slot: int):
+        assert 0 <= slot < self.num_slots and slot not in self._free
+        self._free.append(slot)
+        self._free.sort()
+
+    # ---- cache ops ---------------------------------------------------
+    def insert(self, req_cache: dict, slot):
+        """Overwrite slot ``slot`` with a batch-1 per-request cache (this
+        is also the endurance-counter reset on recycling)."""
+        self.cache = self._insert(self.cache, req_cache,
+                                  jnp.asarray(slot, jnp.int32))
+
+    def reset(self, slot):
+        """Zero a slot (explicit scrub; admission overwrites anyway)."""
+        self.insert(self._zero_slot, slot)
+
+    # ---- endurance audit ---------------------------------------------
+    def worst_case_writes(self) -> jax.Array | None:
+        """Elementwise max of every tiered store's per-slot endurance
+        counters -> (num_slots, n_blocks), or None if nothing is tiered."""
+        worst = None
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]:
+            key = path[-1].key if hasattr(path[-1], "key") else ""
+            if key != "writes":
+                continue
+            w = leaf
+            if w.ndim == 3:              # (repeats, slots, blocks)
+                w = jnp.max(w, axis=0)
+            worst = w if worst is None else jnp.maximum(worst, w)
+        return worst
+
+    def endurance_report(self, prefill_lens, total_lens,
+                         hot_window: int) -> dict:
+        """Audit writes<=1-per-cold-slot for the CURRENT occupants.
+
+        ``prefill_lens``/``total_lens``: per-slot token counts of the
+        request that last occupied each slot (0 for never-used slots). A
+        slot whose counters exceed the analytic expectation for its own
+        occupancy was recycled without reset — the RRAM endurance
+        violation this report exists to catch.
+        """
+        worst = self.worst_case_writes()
+        if worst is None:
+            return {"tiered": False, "write_once_ok": True,
+                    "max_writes_per_cold_slot": 0.0}
+        nb = worst.shape[1]
+        expected = jnp.stack([
+            KT.expected_block_writes(nb, hot_window, int(p), int(t))
+            for p, t in zip(prefill_lens, total_lens)])
+        excess = worst - expected
+        ratio = worst / jnp.maximum(expected, 1)
+        ratio = jnp.where((expected == 0) & (worst > 0), jnp.inf, ratio)
+        return {
+            "tiered": True,
+            "write_once_ok": bool(jnp.all(excess <= 0)),
+            "max_writes_per_cold_slot": float(jnp.max(ratio)),
+            "total_cold_writes": int(jnp.sum(worst)),
+        }

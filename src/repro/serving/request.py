@@ -1,0 +1,95 @@
+"""Request dataclasses for the serving engine.
+
+A request is a prompt (text token ids, optionally preceded by visual
+patch embeddings for VQA traffic) plus decode limits. The engine mutates
+the runtime fields in place as the request moves queue -> slot -> done.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+QUEUED = "queued"
+RUNNING = "running"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                       # (S_text,) int32 prompt ids
+    max_new_tokens: int
+    patches: Optional[np.ndarray] = None     # (T_vis, frontend_dim) or None
+    eos_id: Optional[int] = None
+    on_token: Optional[Callable[["Request", int], Any]] = None
+
+    # -- runtime state (engine-owned) ----------------------------------
+    status: str = QUEUED
+    slot: int = -1
+    generated: list = dataclasses.field(default_factory=list)
+    arrival_s: float = 0.0
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+
+    @property
+    def prompt_len(self) -> int:
+        """Backbone positions consumed by the prompt (visual + text)."""
+        vis = 0 if self.patches is None else self.patches.shape[0]
+        return vis + int(self.tokens.shape[0])
+
+    @property
+    def has_image(self) -> bool:
+        return self.patches is not None
+
+    @property
+    def total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    def emit(self, token: int):
+        self.generated.append(int(token))
+        if self.on_token is not None:
+            self.on_token(self, int(token))
+
+    def finished_by(self, token: int) -> bool:
+        """True if emitting ``token`` completes the request."""
+        if self.eos_id is not None and int(token) == self.eos_id:
+            return True
+        return self.n_generated >= self.max_new_tokens
+
+
+def make_synthetic_requests(cfg, n: int, prompt_len: int, gen_len: int,
+                            seed: int = 0, image_every: int = 0,
+                            jitter: int = 0) -> list[Request]:
+    """A reproducible request stream for benchmarks/examples. Every
+    ``image_every``-th request is a VQA request (visual patches + a text
+    tail) when the config has a vision frontend; ``jitter`` varies prompt
+    lengths +-jitter tokens to exercise bucketing."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        plen = prompt_len
+        if jitter:
+            plen = max(1, prompt_len + int(rng.integers(-jitter,
+                                                        jitter + 1)))
+        patches = None
+        if image_every and cfg.frontend is not None \
+                and i % image_every == 0:
+            tv = cfg.frontend.num_tokens
+            patches = rng.standard_normal(
+                (tv, cfg.frontend.frontend_dim)).astype(np.float32)
+            plen = max(1, plen - tv)
+        toks = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        out.append(Request(rid=i, tokens=toks, max_new_tokens=gen_len,
+                           patches=patches))
+    return out

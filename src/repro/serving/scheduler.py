@@ -1,0 +1,94 @@
+"""FCFS + capacity-aware admission control.
+
+CHIME's two memory domains cap concurrency independently: every admitted
+request pins a bf16 hot ring (+ recurrent states) in the M3D DRAM stack
+and an int8 cold prefix (+ scales) in the write-once RRAM tier. The
+scheduler derives byte budgets from the `simulator/hardware.py` domain
+capacities and admits the queue head only while BOTH domains have room —
+so a bigger hot window or longer max_len genuinely buys fewer concurrent
+requests, the same trade the paper's Table III/IV capacities impose.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+from repro.serving.request import Request
+from repro.simulator.hardware import CHIME, Platform
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityBudget:
+    """KV byte budgets per memory domain."""
+    dram_bytes: float
+    rram_bytes: float
+
+    @classmethod
+    def from_platform(cls, platform: Platform = CHIME,
+                      kv_fraction: float = 0.5) -> "CapacityBudget":
+        """Reserve ``kv_fraction`` of each domain for KV state (the rest
+        holds weights and activations; the paper keeps FFN weights
+        resident in RRAM and attention weights in DRAM)."""
+        dram = platform.domains["dram"].capacity_bytes * kv_fraction
+        rram_dom = platform.domains.get("rram", platform.domains["dram"])
+        rram = rram_dom.capacity_bytes * kv_fraction
+        return cls(dram, rram)
+
+    def max_concurrent(self, hot_bytes_per_slot: int,
+                       cold_bytes_per_slot: int) -> int:
+        """Largest slot count both domains can hold simultaneously."""
+        lim = float("inf")
+        if hot_bytes_per_slot > 0:
+            lim = min(lim, self.dram_bytes // hot_bytes_per_slot)
+        if cold_bytes_per_slot > 0:
+            lim = min(lim, self.rram_bytes // cold_bytes_per_slot)
+        return int(lim) if lim != float("inf") else 2 ** 30
+
+    def admits(self, n_resident: int, hot_bytes_per_slot: int,
+               cold_bytes_per_slot: int) -> bool:
+        """Can an (n_resident+1)-th request's KV state fit?"""
+        return ((n_resident + 1) * hot_bytes_per_slot <= self.dram_bytes
+                and (n_resident + 1) * cold_bytes_per_slot
+                <= self.rram_bytes)
+
+
+class FCFSScheduler:
+    """First-come-first-served queue gated by the capacity budget.
+
+    Strictly FCFS: if the head of the queue does not fit, nothing is
+    admitted (no starvation of large requests by small ones).
+    """
+
+    def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
+                 cold_bytes_per_slot: int):
+        self.budget = budget
+        self.hot_bytes_per_slot = hot_bytes_per_slot
+        self.cold_bytes_per_slot = cold_bytes_per_slot
+        self._queue: collections.deque[Request] = collections.deque()
+        self.admitted = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def max_concurrent(self) -> int:
+        return self.budget.max_concurrent(self.hot_bytes_per_slot,
+                                          self.cold_bytes_per_slot)
+
+    def can_admit(self, n_active: int) -> bool:
+        return bool(self._queue) and self.budget.admits(
+            n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot)
+
+    def next_request(self, n_active: int) -> Request | None:
+        """Pop the queue head iff both domain budgets admit one more
+        resident request."""
+        if not self.can_admit(n_active):
+            return None
+        self.admitted += 1
+        return self._queue.popleft()

@@ -111,6 +111,59 @@ def visual_tokens(cfg: ModelConfig) -> int:
     return cfg.frontend.num_tokens if cfg.frontend else 0
 
 
+def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
+                      layers: list[dict] | None = None
+                      ) -> tuple[float, float, dict]:
+    """Analytical (time_s, energy_j, breakdown) of ONE decode step at
+    context length ``ctx`` — the per-step cost term. `simulate` sums it
+    over a growing context; the serving metrics feed it measured per-slot
+    step counts instead."""
+    if layers is None:
+        layers = _layer_kernels(cfg)
+    n_layers = len(layers)
+    dram = platform.domains["dram"]
+    rram = platform.domains["rram"] if "rram" in platform.domains else dram
+    D = cfg.d_model
+    ucie_t_per_cut = (2 * D / platform.cross_domain_bw
+                      if platform.cross_domain_bw else 0.0)
+    ucie_e_per_cut = (2 * D * 8 * platform.cross_domain_pj_bit * 1e-12
+                      if platform.cross_domain_bw else 0.0)
+    kv_tok = kv_bytes_per_token(cfg)
+    n_attn = max(sum(1 for l in layers if l["has_attn"]), 1)
+    tok_t = energy = 0.0
+    br = {"dram_s": 0.0, "rram_s": 0.0, "attn_kv_s": 0.0, "ucie_s": 0.0,
+          "busy_dram": 0.0, "busy_rram": 0.0}
+    for lay in layers:
+        for name, dom_name, flops, bytes_r in lay["kernels"]:
+            dom = dram if dom_name == "dram" else rram
+            if name == "FUSED_ATTN_STREAM":
+                # stream the KV cache for this layer
+                bytes_r = kv_tok / n_attn * ctx
+                flops = bytes_r  # ~1 MAC per cached byte at fp16
+            t, e = _kernel_time_energy(dom, flops, bytes_r,
+                                       platform.compute_pj_flop)
+            tok_t += t
+            energy += e
+            br["busy_" + dom_name] += t
+            if dom_name == "dram" or name == "FUSED_ATTN_STREAM":
+                if name == "FUSED_ATTN_STREAM":
+                    br["attn_kv_s"] += t
+                else:
+                    br["dram_s"] += t
+            else:
+                br["rram_s"] += t
+        if lay["has_ffn"]:
+            tok_t += 2 * ucie_t_per_cut
+            br["ucie_s"] += 2 * ucie_t_per_cut
+            energy += 2 * ucie_e_per_cut
+        # KV append write energy (DRAM tier-0; write-once discipline)
+        energy += kv_tok / max(n_layers, 1) * 8 \
+            * dram.write_energy_pj_bit * 1e-12
+    tok_t += platform.layer_overhead_s * n_layers \
+        + platform.fixed_token_overhead_s
+    return tok_t, energy, br
+
+
 def simulate(cfg: ModelConfig, platform: Platform = CHIME,
              wl: Workload = Workload()) -> SimResult:
     D = cfg.d_model
@@ -133,38 +186,16 @@ def simulate(cfg: ModelConfig, platform: Platform = CHIME,
     busy = {"dram": 0.0, "rram": 0.0}
     kv_tok = kv_bytes_per_token(cfg)
     for step in range(wl.output_tokens):
-        ctx = prompt + step
-        tok_t = 0.0
-        for lay in layers:
-            for name, dom_name, flops, bytes_r in lay["kernels"]:
-                dom = dram if dom_name == "dram" else rram
-                if name == "FUSED_ATTN_STREAM":
-                    # stream the KV cache for this layer
-                    bytes_r = kv_tok / max(
-                        sum(1 for l in layers if l["has_attn"]), 1) * ctx
-                    flops = bytes_r  # ~1 MAC per cached byte at fp16
-                t, e = _kernel_time_energy(dom, flops, bytes_r,
-                                           platform.compute_pj_flop)
-                tok_t += t
-                energy += e
-                busy[dom_name] += t
-                if dom_name == "dram" or name == "FUSED_ATTN_STREAM":
-                    if name == "FUSED_ATTN_STREAM":
-                        t_attn_kv += t
-                    else:
-                        t_dram += t
-                else:
-                    t_rram += t
-            if lay["has_ffn"]:
-                tok_t += 2 * ucie_t_per_cut
-                t_ucie += 2 * ucie_t_per_cut
-                energy += 2 * ucie_e_per_cut
-            # KV append write energy (DRAM tier-0; write-once discipline)
-            energy += kv_tok / max(n_layers, 1) * 8 \
-                * dram.write_energy_pj_bit * 1e-12
-        tok_t += platform.layer_overhead_s * n_layers \
-            + platform.fixed_token_overhead_s
+        tok_t, tok_e, br = decode_token_cost(cfg, platform, prompt + step,
+                                             layers)
         decode_s += tok_t
+        energy += tok_e
+        t_dram += br["dram_s"]
+        t_rram += br["rram_s"]
+        t_attn_kv += br["attn_kv_s"]
+        t_ucie += br["ucie_s"]
+        busy["dram"] += br["busy_dram"]
+        busy["rram"] += br["busy_rram"]
 
     # ---- prefill (+ encoder/connector, paper: <15% of runtime) --------
     # weights read once per layer, reused across prompt tokens (batched

@@ -1,0 +1,230 @@
+"""Serving subsystem: capacity-aware admission, slot recycling +
+endurance-counter reset, engine-vs-generate token parity, KV pool
+mechanics, streaming + metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.serve import generate
+from repro.models import Model
+from repro.serving import (CapacityBudget, Engine, FCFSScheduler, Request,
+                           aggregate_metrics, make_synthetic_requests,
+                           simulated_efficiency, slot_kv_bytes)
+from repro.serving.kv_pool import TieredKVPool
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
+    cfg = get_config(arch, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        kv_policy=kv_policy, kv_hot_window=hot_window)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, p)
+                    .astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(specs)]
+
+
+# ---------------------------------------------------------------------------
+# scheduler / capacity budgets
+# ---------------------------------------------------------------------------
+def test_capacity_budget_limits_concurrency():
+    b = CapacityBudget(dram_bytes=1000, rram_bytes=10_000)
+    assert b.max_concurrent(hot_bytes_per_slot=300,
+                            cold_bytes_per_slot=100) == 3  # DRAM-bound
+    assert b.max_concurrent(300, 4000) == 2                # RRAM-bound
+    assert b.admits(1, 300, 100) and not b.admits(3, 300, 100)
+
+
+def test_scheduler_is_fcfs_and_capacity_gated():
+    b = CapacityBudget(dram_bytes=200, rram_bytes=200)
+    sched = FCFSScheduler(b, hot_bytes_per_slot=100, cold_bytes_per_slot=50)
+    r = _requests(get_config("granite-3-2b", reduced=True),
+                  [(4, 2), (4, 2), (4, 2)])
+    for q in r:
+        sched.submit(q)
+    assert sched.next_request(0).rid == 0
+    assert sched.next_request(1).rid == 1
+    assert sched.next_request(2) is None     # DRAM budget full at 2
+    assert sched.pending == 1
+    assert sched.next_request(1).rid == 2    # room again after a retire
+
+
+def test_engine_admission_respects_byte_budgets():
+    """Slots beyond the domain budgets stay idle: with a budget that fits
+    exactly 2 resident requests, a 4-slot engine never runs more than 2."""
+    cfg, model, params = _model()
+    hot_b, cold_b = slot_kv_bytes(model, max_len=24)
+    budget = CapacityBudget(dram_bytes=2 * hot_b, rram_bytes=2 * cold_b)
+    sched = FCFSScheduler(budget, hot_b, cold_b)
+    eng = Engine(model, params, num_slots=4, max_len=24, scheduler=sched)
+    for r in _requests(cfg, [(8, 6)] * 5):
+        eng.submit(r)
+    peak = 0
+    for _ in range(200):
+        eng.step()
+        peak = max(peak, eng.pool.active_slots)
+        if not (eng.scheduler.pending or eng.pool.active_slots):
+            break
+    assert peak == 2
+    assert len(eng.finished) == 5
+    assert all(r.n_generated == 6 for r in eng.finished)
+
+
+def test_engine_rejects_oversized_request():
+    cfg, model, params = _model()
+    eng = Engine(model, params, num_slots=2, max_len=16)
+    (req,) = _requests(cfg, [(12, 8)])       # 20 positions > 16
+    with pytest.raises(ValueError):
+        eng.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# KV pool mechanics
+# ---------------------------------------------------------------------------
+def test_pool_insert_places_request_cache_in_slot():
+    cfg, model, params = _model()
+    pool = TieredKVPool(model, num_slots=3, max_len=24)
+    batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None]}
+    _, req_cache = jax.jit(
+        lambda p, b: model.prefill(p, b, 24))(params, batch)
+    pool.insert(req_cache, 1)
+
+    def slot_of(leaf, a):
+        return jax.lax.dynamic_slice_in_dim(leaf, 1, 1, axis=a)
+
+    got = jax.tree.map(slot_of, pool.cache, pool.axes)
+    for g, want in zip(jax.tree.leaves(got), jax.tree.leaves(req_cache)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(want))
+
+
+def test_pool_reset_restores_initial_slot_state():
+    cfg, model, params = _model()
+    pool = TieredKVPool(model, num_slots=2, max_len=24)
+    batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None]}
+    _, req_cache = jax.jit(
+        lambda p, b: model.prefill(p, b, 24))(params, batch)
+    pool.insert(req_cache, 0)
+    fresh = model.init_cache(1, 24)
+    changed = any(
+        not np.array_equal(
+            np.asarray(jax.lax.dynamic_slice_in_dim(leaf, 0, 1, axis=a)),
+            np.asarray(want))
+        for leaf, a, want in zip(jax.tree.leaves(pool.cache),
+                                 jax.tree.leaves(pool.axes),
+                                 jax.tree.leaves(fresh)))
+    assert changed
+    pool.reset(0)
+    for leaf, a, want in zip(jax.tree.leaves(pool.cache),
+                             jax.tree.leaves(pool.axes),
+                             jax.tree.leaves(fresh)):
+        s = jax.lax.dynamic_slice_in_dim(leaf, 0, 1, axis=a)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(want))
+
+
+def test_slot_recycling_resets_endurance_counters():
+    """Serve two requests sequentially through ONE slot: after recycling,
+    the slot's endurance counters must equal what the SECOND occupancy
+    alone would produce (writes<=1 per cold slot), not the sum."""
+    cfg, model, params = _model(hot_window=4)
+    eng = Engine(model, params, num_slots=1, max_len=32)
+    eng.run(_requests(cfg, [(8, 10), (8, 10)]))
+    rep = eng.endurance_report()
+    assert rep["tiered"] and rep["write_once_ok"]
+    assert rep["max_writes_per_cold_slot"] <= 1.0
+    # occupancy 2: 8-token prefill then 9 decode appends (10 generated
+    # tokens, the last is never fed back); with W=4 evictions cover
+    # positions [4, 13) -> 9 writes in block 0 — NOT 18, which is what a
+    # recycle without counter reset would leave behind
+    worst = np.asarray(eng.pool.worst_case_writes())
+    assert worst[0, 0] == 9
+    assert worst[0, 1:].sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# engine vs single-request reference
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_policy", ["tiered", "flat"])
+def test_engine_matches_generate_per_request(kv_policy):
+    """Continuous batching must be a pure scheduling change: every
+    request's tokens equal the single-request generate() path, including
+    prompts that land in a padded admission bucket (13 -> 16)."""
+    cfg, model, params = _model(kv_policy=kv_policy)
+    specs = [(16, 8), (13, 8), (8, 6), (16, 4)]
+    reqs = _requests(cfg, specs, seed=3)
+    eng = Engine(model, params, num_slots=2, max_len=24)
+    eng.run(reqs, max_steps=200)
+    for r, (p, g) in zip(reqs, specs):
+        toks, _ = generate(model, params, {"tokens": r.tokens[None]}, p, g)
+        assert r.generated == toks[0].tolist(), r.rid
+
+
+def test_engine_matches_generate_mla():
+    cfg, model, params = _model("deepseek-v2-lite")
+    reqs = _requests(cfg, [(16, 6), (16, 6), (16, 6)], seed=5)
+    eng = Engine(model, params, num_slots=2, max_len=24)
+    eng.run(reqs, max_steps=200)
+    for r in reqs:
+        toks, _ = generate(model, params, {"tokens": r.tokens[None]}, 16, 6)
+        assert r.generated == toks[0].tolist(), r.rid
+
+
+def test_engine_mixed_image_text_stream():
+    cfg, model, params = _model("mobilevlm-1.7b", hot_window=16)
+    reqs = make_synthetic_requests(cfg, 3, prompt_len=20, gen_len=4,
+                                   seed=2, image_every=2)
+    assert any(r.has_image for r in reqs) \
+        and any(not r.has_image for r in reqs)
+    eng = Engine(model, params, num_slots=2, max_len=32)
+    done = eng.run(reqs, max_steps=100)
+    assert len(done) == 3
+    assert all(r.n_generated == 4 for r in done)
+    assert eng.endurance_report()["write_once_ok"]
+
+
+def test_one_token_request_finishes_at_admission_with_event():
+    """A request satisfied by its prefill token never occupies a slot,
+    but still streams its (rid, token, done=True) event."""
+    cfg, model, params = _model()
+    eng = Engine(model, params, num_slots=2, max_len=16)
+    eng.submit(_requests(cfg, [(8, 1)])[0])
+    events = eng.step()
+    assert len(events) == 1
+    rid, tok, done = events[0]
+    assert rid == 0 and done
+    assert eng.finished and eng.finished[0].generated == [tok]
+    assert eng.pool.active_slots == 0
+
+
+# ---------------------------------------------------------------------------
+# streaming + metrics
+# ---------------------------------------------------------------------------
+def test_streaming_order_and_metrics():
+    cfg, model, params = _model()
+    reqs = _requests(cfg, [(8, 5), (8, 5), (8, 5)], seed=9)
+    events = []
+    for r in reqs:
+        r.on_token = lambda req, tok: events.append((req.rid, tok))
+    eng = Engine(model, params, num_slots=2, max_len=16)
+    done = eng.run(reqs)
+    # every request streamed exactly its generated tokens, in order
+    for r in reqs:
+        assert [t for rid, t in events if rid == r.rid] == r.generated
+    m = aggregate_metrics(done, wall_s=1.0)
+    assert m["requests"] == 3 and m["total_tokens"] == 15
+    assert m["tok_per_s"] == pytest.approx(15.0)
+    assert all(r.first_token_s <= r.finish_s for r in done)
+    sim = simulated_efficiency(cfg, done)
+    assert sim["sim_tokens_per_j"] > 0
+    assert sim["sim_energy_j"] > 0

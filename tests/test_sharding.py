@@ -3,8 +3,10 @@ fallback invariants."""
 
 import jax
 import pytest
-from hypothesis import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.sharding import DEFAULT_RULES, ShardingRules
 
