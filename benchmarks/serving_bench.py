@@ -2,45 +2,88 @@
 shared tiered KV pool actually buy aggregate tok/s?
 
     PYTHONPATH=src python benchmarks/serving_bench.py --concurrency 8
+    PYTHONPATH=src python benchmarks/serving_bench.py --backend sharded
 
 For each slot count in {1, --concurrency} the bench drains the SAME
 request stream (2x the slot count, so slots recycle) through a fresh
-engine twice — the first pass pays jit compilation, the second is timed —
-and reports aggregate decode throughput, per-request latency, the
-simulated CHIME tokens/J for the served trace, and the endurance audit
-(write-once discipline must survive slot recycling).
+engine twice — the first pass pays jit compilation, the second is timed
+step-by-step — and reports aggregate decode throughput, per-request and
+per-step (p50/p95) latency, the simulated CHIME tokens/J for the served
+trace, and the endurance audit (write-once discipline must survive slot
+recycling). Results append to the BENCH json trajectory at
+``experiments/bench/serving.json`` so successive PRs can be compared.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
 import time
 
 import jax
+import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import Model
-from repro.serving import (Engine, aggregate_metrics,
+from repro.serving import (Engine, aggregate_metrics, make_backend,
                            make_synthetic_requests, simulated_efficiency)
 
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
+    / "experiments" / "bench" / "serving.json"
 
-def bench_one(model, params, cfg, concurrency: int, n_requests: int,
-              prompt_len: int, gen: int, max_len: int) -> dict:
-    engine = Engine(model, params, num_slots=concurrency, max_len=max_len)
+
+def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
+              n_requests: int, prompt_len: int, gen: int, max_len: int,
+              mesh=None) -> dict:
+    backend = make_backend(backend_kind, model, params,
+                           num_slots=concurrency, max_len=max_len,
+                           mesh=mesh)
+    engine = Engine(backend)
 
     def stream(seed):
         return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
                                        seed=seed)
 
     engine.run(stream(0))                      # warm-up: pays compilation
+    for r in stream(1):
+        engine.submit(r)
+    step_s = []
     t0 = time.perf_counter()
-    done = engine.run(stream(1))
+    start = len(engine.finished)
+    while engine.scheduler.pending or engine.pool.active_slots:
+        ts = time.perf_counter()
+        engine.step()
+        step_s.append(time.perf_counter() - ts)
     wall = time.perf_counter() - t0
+    done = engine.finished[start:]
     m = aggregate_metrics(done, wall)
+    m["backend"] = backend_kind
     m["concurrency"] = concurrency
+    m["steps"] = len(step_s)
+    m["p50_step_s"] = float(np.percentile(step_s, 50))
+    m["p95_step_s"] = float(np.percentile(step_s, 95))
     m["endurance"] = engine.endurance_report()
     m["sim"] = simulated_efficiency(cfg, done)
     return m
+
+
+def append_bench_json(record: dict, path: pathlib.Path = BENCH_JSON):
+    """Append one run record to the serving BENCH trajectory. Tolerates a
+    truncated/corrupt file (starts fresh) and replaces atomically so an
+    interrupted run can't wedge future ones."""
+    path.parent.mkdir(parents=True, exist_ok=True)
+    history = []
+    if path.exists():
+        try:
+            history = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            print(f"[bench] WARNING: {path} is corrupt; starting a "
+                  f"fresh trajectory")
+    history.append(record)
+    tmp = path.with_suffix(".json.tmp")
+    tmp.write_text(json.dumps(history, indent=1, sort_keys=True) + "\n")
+    tmp.replace(path)
 
 
 def main(argv=None):
@@ -48,6 +91,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--full", action="store_true",
                     help="full-size config (default: reduced)")
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "sharded"])
+    ap.add_argument("--mesh", default="local",
+                    help="sharded backend mesh (see launch.mesh.get_mesh)")
     ap.add_argument("--concurrency", type=int, default=8)
     ap.add_argument("--requests", type=int, default=0,
                     help="requests per run (0 = 2x concurrency)")
@@ -56,6 +103,8 @@ def main(argv=None):
     ap.add_argument("--kv-policy", default="tiered",
                     choices=["flat", "tiered"])
     ap.add_argument("--hot-window", type=int, default=8)
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip appending to the BENCH json trajectory")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=not args.full).replace(
@@ -65,16 +114,23 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     n_requests = args.requests or 2 * args.concurrency
     max_len = args.prompt_len + args.gen
+    mesh = None
+    if args.backend == "sharded":
+        from repro.launch.mesh import get_mesh
+        mesh = get_mesh(args.mesh)
 
     print(f"[bench] arch={args.arch} kv={args.kv_policy} "
+          f"backend={args.backend} "
           f"requests={n_requests} prompt={args.prompt_len} gen={args.gen}")
     results = []
     for c in sorted({1, args.concurrency}):
-        r = bench_one(model, params, cfg, c, n_requests,
-                      args.prompt_len, args.gen, max_len)
+        r = bench_one(model, params, cfg, args.backend, c, n_requests,
+                      args.prompt_len, args.gen, max_len, mesh=mesh)
         results.append(r)
         rep = r["endurance"]
         print(f"[bench] concurrency={c:3d}: {r['tok_per_s']:8.1f} tok/s  "
+              f"step p50={r['p50_step_s'] * 1e3:.1f}ms "
+              f"p95={r['p95_step_s'] * 1e3:.1f}ms  "
               f"mean_latency={r['mean_latency_s']:.3f}s  "
               f"sim={r['sim']['sim_tokens_per_j']:.1f} tok/J  "
               f"endurance max writes/block="
@@ -85,6 +141,16 @@ def main(argv=None):
                                                 1e-9)
         print(f"[bench] aggregate throughput x{speedup:.2f} at "
               f"concurrency {args.concurrency} vs 1")
+    if not args.no_json:
+        append_bench_json({
+            "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "arch": args.arch,
+            "kv_policy": args.kv_policy,
+            "prompt_len": args.prompt_len,
+            "gen": args.gen,
+            "runs": results,
+        })
+        print(f"[bench] appended to {BENCH_JSON}")
     return results
 
 

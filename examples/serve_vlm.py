@@ -19,7 +19,7 @@ from repro.configs.base import get_config
 from repro.core import kv_tiers as KT
 from repro.launch.serve import generate
 from repro.models import Model
-from repro.serving import (Engine, aggregate_metrics,
+from repro.serving import (Engine, LocalBackend, aggregate_metrics,
                            make_synthetic_requests, simulated_efficiency)
 
 
@@ -56,8 +56,9 @@ def serve_mixed_stream(n_requests: int = 8, concurrency: int = 4,
     cfg = make_cfg("tiered")
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, num_slots=concurrency,
-                    max_len=prompt + gen + 8)
+    backend = LocalBackend(model, params, num_slots=concurrency,
+                           max_len=prompt + gen + 8)
+    engine = Engine(backend)
     # every 2nd request is VQA (patches + text tail), the rest pure text,
     # with prompt-length jitter to exercise the admission buckets
     reqs = make_synthetic_requests(cfg, n_requests, prompt, gen, seed=7,

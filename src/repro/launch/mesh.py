@@ -26,3 +26,21 @@ def make_local_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the same axis names — lets every pjit code path
     run unmodified in tests on CPU."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def get_mesh(name: str) -> jax.sharding.Mesh:
+    """CLI-facing mesh resolver: 'local' | 'production' | 'multipod' |
+    an explicit 'DxM' shape (e.g. '4x2' = data=4, model=2 over the first
+    8 visible devices)."""
+    if name == "local":
+        return make_local_mesh()
+    if name == "production":
+        return make_production_mesh()
+    if name == "multipod":
+        return make_production_mesh(multi_pod=True)
+    try:
+        d, m = (int(p) for p in name.split("x"))
+        return jax.make_mesh((d, m), ("data", "model"))
+    except ValueError:
+        raise ValueError(f"unknown mesh {name!r} (want local | production "
+                         f"| multipod | DxM)") from None

@@ -9,9 +9,12 @@ sequence of decode steps); the engine's per-slot decode is numerically
 identical to it, and tests/test_serving.py holds the two to exact token
 agreement.
 
-The engine currently serves single-host (no mesh/pjit); the seed CLI's
---production-mesh path was retired with the batch driver and sharded
-serving is tracked as a roadmap item.
+Execution strategy is picked by --backend: 'local' runs the single-host
+vmapped decode, 'sharded' runs the same step under pjit on a --mesh
+(local | production | multipod | DxM) with params sharded by the model's
+rules and the KV pool slots over 'data' / cold kv_seq over 'model'.
+tests/test_serving_sharded.py holds the two backends to exact token
+parity.
 """
 
 from __future__ import annotations
@@ -49,13 +52,21 @@ def generate(model: Model, params, batch: dict, prompt_len: int,
 
 
 def main(argv=None):
-    from repro.serving import (Engine, aggregate_metrics,
+    from repro.launch.mesh import get_mesh
+    from repro.serving import (Engine, aggregate_metrics, make_backend,
                                make_synthetic_requests,
                                simulated_efficiency)
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="paligemma-3b")
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--backend", default="local",
+                    choices=["local", "sharded"],
+                    help="executor: single-host vmapped decode or "
+                         "pjit-sharded over --mesh")
+    ap.add_argument("--mesh", default="local",
+                    help="sharded backend mesh: local | production | "
+                         "multipod | DxM (e.g. 4x2)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--concurrency", type=int, default=4,
                     help="decode slots (continuous-batching width)")
@@ -82,8 +93,11 @@ def main(argv=None):
            if args.image_every and cfg.frontend is not None else 0)
     max_len = args.max_len or (max(args.prompt_len, vis + 1) + args.gen)
 
-    engine = Engine(model, params, num_slots=args.concurrency,
-                    max_len=max_len)
+    backend = make_backend(
+        args.backend, model, params, num_slots=args.concurrency,
+        max_len=max_len,
+        mesh=get_mesh(args.mesh) if args.backend == "sharded" else None)
+    engine = Engine(backend)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
                                    args.gen, image_every=args.image_every)
     t0 = time.time()
@@ -92,6 +106,7 @@ def main(argv=None):
 
     m = aggregate_metrics(done, wall)
     print(f"[serve] arch={args.arch} kv={args.kv_policy} "
+          f"backend={args.backend} "
           f"slots={args.concurrency}: {m['requests']} requests, "
           f"{m['total_tokens']} tokens in {wall:.2f}s "
           f"({m['tok_per_s']:.1f} tok/s incl. compile; "

@@ -99,10 +99,7 @@ def batch_shardings(cfg: ModelConfig, shape: ShapeSpec,
 
 def cache_shardings(model: Model, rules: ShardingRules, batch: int,
                     max_len: int):
-    shapes, logical = model.cache_spec(batch, max_len)
-    return jax.tree.map(
-        lambda sd, ax: rules.sharding(ax, sd.shape), shapes, logical,
-        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return model.cache_shardings(rules, batch, max_len)
 
 
 def replicated(rules: ShardingRules):

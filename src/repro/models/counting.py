@@ -89,13 +89,34 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     return n
 
 
-def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
-    """KV-cache bytes appended per generated token (all layers)."""
+def kv_elems_per_token(cfg: ModelConfig) -> int:
+    """Cache elements appended per generated token (all layers): GQA K+V
+    rows and MLA latents. This is the single source of truth for KV byte
+    math — the simulator's `kv_bytes_per_token` cost terms and the serving
+    pool's `slot_kv_bytes` capacity admission both derive from it, so the
+    two can never drift."""
     total = 0
     for mixer, _, _ in _block_specs(cfg):
         if mixer in ("attn", "attn_shared"):
-            total += 2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+            total += 2 * cfg.num_kv_heads * cfg.head_dim
         elif mixer == "mla":
-            total += (cfg.mla.kv_lora_rank
-                      + cfg.mla.qk_rope_head_dim) * dtype_bytes
+            total += cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
     return total
+
+
+def kv_scale_elems_per_token(cfg: ModelConfig) -> int:
+    """float32 quant-scale elements per token in the tiered cold store:
+    one per (token, kv-head) for each of K and V, one per MLA latent
+    store (scales are per-token over the trailing feature dim)."""
+    total = 0
+    for mixer, _, _ in _block_specs(cfg):
+        if mixer in ("attn", "attn_shared"):
+            total += 2 * cfg.num_kv_heads
+        elif mixer == "mla":
+            total += 2
+    return total
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """KV-cache bytes appended per generated token (all layers)."""
+    return kv_elems_per_token(cfg) * dtype_bytes

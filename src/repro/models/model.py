@@ -29,7 +29,7 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import vision as V
-from repro.sharding import ShardingRules, logical_constraint
+from repro.sharding import ShardingRules, logical_constraint, tree_shardings
 
 MAX_LEARNED_POS = 32_768
 
@@ -261,6 +261,15 @@ class Model:
                     is_leaf=lambda x: isinstance(x, tuple))
             shapes[f"u{ui}"], logical[f"u{ui}"] = shp, lg
         return shapes, logical
+
+    def cache_shardings(self, rules: ShardingRules, batch: int,
+                        max_len: int):
+        """NamedSharding tree for a ``batch``-slot decode cache: the slot
+        axis resolves over 'data', cold kv_seq / kv heads over 'model'
+        (divisibility permitting) — the layout the sharded serving
+        backend pins its KV pool to."""
+        shapes, logical = self.cache_spec(batch, max_len)
+        return tree_shardings(rules, logical, shapes)
 
     # ------------------------------------------------------------------
     # forward

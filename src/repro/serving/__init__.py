@@ -7,23 +7,34 @@ time leaves both domains idle most of the step. This package turns the
 single-request `launch/serve.py` path into a serving engine:
 
 * `request.py`   — request/timing dataclasses and the FCFS stream
-* `kv_pool.py`   — slot-indexed multi-request extension of core/kv_tiers
+* `kv_pool.py`   — model-free slot pool: `KVPoolState` (explicit typed
+                   pytree) + host-side slot bookkeeping + endurance audit
 * `scheduler.py` — FCFS + capacity-aware admission against the DRAM/RRAM
                    byte budgets of simulator/hardware.py
-* `engine.py`    — interleaved prefill/decode step loop (one jitted decode
-                   over all slots; static shapes so jit compiles once)
+* `backend.py`   — the `InferenceBackend` executor seam: `LocalBackend`
+                   (single-host vmapped decode) and `ShardedBackend`
+                   (pjit over a launch/mesh.py mesh; params sharded by
+                   the model's rules, KV pool slots over 'data', cold
+                   kv_seq/heads over 'model')
+* `engine.py`    — interleaved prefill/decode step loop over a backend
+                   (one jitted decode over all slots; static shapes so
+                   the backend compiles once)
 * `metrics.py`   — per-request latency + aggregate tok/s + simulated
                    tokens/J via simulator/chime_sim.py cost terms
 """
 
+from repro.serving.backend import (InferenceBackend, LocalBackend,
+                                   ShardedBackend, make_backend)
 from repro.serving.engine import Engine
-from repro.serving.kv_pool import TieredKVPool, slot_kv_bytes
+from repro.serving.kv_pool import (KVPoolState, TieredKVPool,
+                                   slot_kv_bytes)
 from repro.serving.metrics import aggregate_metrics, simulated_efficiency
 from repro.serving.request import Request, make_synthetic_requests
 from repro.serving.scheduler import CapacityBudget, FCFSScheduler
 
 __all__ = [
-    "Engine", "TieredKVPool", "slot_kv_bytes", "aggregate_metrics",
-    "simulated_efficiency", "Request", "make_synthetic_requests",
-    "CapacityBudget", "FCFSScheduler",
+    "Engine", "InferenceBackend", "KVPoolState", "LocalBackend",
+    "ShardedBackend", "TieredKVPool", "aggregate_metrics", "make_backend",
+    "make_synthetic_requests", "simulated_efficiency", "slot_kv_bytes",
+    "Request", "CapacityBudget", "FCFSScheduler",
 ]

@@ -1,0 +1,255 @@
+"""Backend-executor seam: `InferenceBackend` is the protocol the serving
+engine drives, decoupling scheduling from execution strategy.
+
+A backend owns three things the engine must never reach into directly:
+
+  * the parameters (placed however the backend likes — host, one device,
+    or pjit-sharded over a mesh),
+  * the KV pool layout, handed out as an explicit typed pytree
+    (`kv_pool.KVPoolState`) rather than a model-aware object, and
+  * the jitted `prefill(batch, length)` / `decode_step(toks, state, pos,
+    active)` entry points plus the slot-insert arithmetic.
+
+Two implementations ship:
+
+  * `LocalBackend` — the single-host vmapped path (the seed engine's
+    jitted closures, extracted verbatim): one jit-compiled step advances
+    every slot, each slot attending its own hot ring + cold tier at its
+    own position.
+  * `ShardedBackend` — the same step jaxpr executed under pjit on a
+    `launch/mesh.py` mesh: params are placed by the model's
+    `param_shardings` rules and the KV pool by `Model.cache_shardings`
+    (slots -> 'data', cold kv_seq / kv heads -> 'model', divisibility
+    permitting). The decode jaxpr is built from a rules-free model twin
+    and the layout is pinned with sharding constraints at the jit
+    boundaries only, so a 1-device mesh is token-for-token identical to
+    `LocalBackend` (tests/test_serving_sharded.py holds both meshes to
+    exact parity).
+
+The engine, scheduler, metrics and endurance audit run unmodified on
+either backend; this seam is where later scale-out work (multi-host,
+async prefill, disaggregated tiers) plugs in.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.serving.kv_pool import (KVPoolState, TieredKVPool, batch_axes,
+                                   slot_kv_bytes, tree_expand, tree_squeeze)
+from repro.sharding import ShardingRules
+
+
+@runtime_checkable
+class InferenceBackend(Protocol):
+    """What the engine needs from an executor. Any object with this
+    surface can serve; the engine never touches model internals."""
+
+    num_slots: int            # decode slots the pool is laid out for
+    max_len: int              # per-slot KV length
+    hot_window: int           # effective hot-ring length (endurance audit)
+    requires_exact_prefill: bool   # recurrent states forbid padded buckets
+
+    def slot_kv_bytes(self) -> tuple[int, int]:
+        """(dram_hot, rram_cold) bytes one resident request pins."""
+        ...
+
+    def make_pool(self) -> TieredKVPool:
+        """Fresh slot pool wired to this backend's insert arithmetic."""
+        ...
+
+    def prefill(self, batch: dict, length: int
+                ) -> tuple[jax.Array, dict]:
+        """Prefill one request -> (first greedy token, batch-1 cache)."""
+        ...
+
+    def decode_step(self, toks, state: KVPoolState, pos, active
+                    ) -> tuple[jax.Array, KVPoolState]:
+        """One greedy token on every active slot; inactive slots' cache
+        is kept verbatim (no phantom appends, no endurance drift)."""
+        ...
+
+    def insert(self, state: KVPoolState, req_cache: dict, slot
+               ) -> KVPoolState:
+        """Overwrite slot ``slot`` with a batch-1 per-request cache."""
+        ...
+
+
+class _JittedBackend:
+    """Shared scaffolding: validates the config, derives the slot-axis
+    tree, and builds the three jitted programs (step / prefill / insert).
+    Subclasses steer placement via `_place` and `_constrain`."""
+
+    def __init__(self, model: Model, params, num_slots: int, max_len: int):
+        cfg = model.cfg
+        if cfg.is_encoder:
+            raise ValueError("encoder-only model cannot be served")
+        if num_slots is None or max_len is None:
+            raise TypeError("backend needs num_slots and max_len")
+        if num_slots < 1:
+            raise ValueError("backend needs at least one decode slot")
+        self.model = model
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.hot_window = min(cfg.kv_hot_window, max_len)
+        # recurrent (SSM) prefill states are cumulative over the whole
+        # padded sequence, so those architectures need exact-length prefill
+        self.requires_exact_prefill = any(
+            u.block.mixer in ("rwkv6", "mamba2") for u in model.plan)
+        shapes, _ = model.cache_spec(num_slots, max_len)
+        self._axes = batch_axes(model, shapes)
+        self._zero_slot = None
+        self._step = jax.jit(self._build_step())
+        self._prefill = jax.jit(self._build_prefill())
+        self._insert = jax.jit(self._build_insert())
+
+    # ---- placement hooks (ShardedBackend overrides) ------------------
+    def _place(self, cache: dict) -> dict:
+        return cache
+
+    def _constrain(self, cache: dict) -> dict:
+        return cache
+
+    # ---- jitted program builders -------------------------------------
+    def _build_step(self):
+        model, axes = self.model, self._axes
+
+        def slot_step(p, tok, cache, pos):
+            c1 = tree_expand(cache, axes)
+            logits, nc = model.decode_step(p, tok[None], c1, pos)
+            ntok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+            return ntok, tree_squeeze(nc, axes)
+
+        vm = jax.vmap(slot_step, in_axes=(None, 0, axes, 0),
+                      out_axes=(0, axes))
+
+        def step(p, toks, cache, pos, active):
+            ntoks, nc = vm(p, toks, cache, pos)
+
+            def sel(n, o, a):
+                shp = [1] * n.ndim
+                shp[a] = n.shape[a]
+                return jnp.where(active.reshape(shp), n, o)
+
+            # inactive slots keep their old cache verbatim: no phantom
+            # appends, no endurance-counter drift while a slot is parked
+            return ntoks, self._constrain(
+                jax.tree.map(sel, nc, cache, axes))
+
+        return step
+
+    def _build_prefill(self):
+        model, max_len = self.model, self.max_len
+
+        def prefill(p, batch, length):
+            logits, cache = model.prefill(p, batch, max_len, length)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            return tok[0], cache
+
+        return prefill
+
+    def _build_insert(self):
+        axes = self._axes
+
+        def insert(pool, req_cache, slot):
+            out = jax.tree.map(
+                lambda p, r, a: jax.lax.dynamic_update_slice_in_dim(
+                    p, r.astype(p.dtype), slot, axis=a),
+                pool, req_cache, axes)
+            return self._constrain(out)
+
+        return insert
+
+    # ---- InferenceBackend surface ------------------------------------
+    def slot_kv_bytes(self) -> tuple[int, int]:
+        return slot_kv_bytes(self.model, self.max_len)
+
+    def init_pool(self) -> KVPoolState:
+        cache = self._place(
+            self.model.init_cache(self.num_slots, self.max_len))
+        return KVPoolState(cache=cache, axes=self._axes)
+
+    def fresh_slot(self) -> dict:
+        """Batch-1 zero cache (explicit slot scrub); built once, reused —
+        insert is functional, so sharing the tree is safe."""
+        if self._zero_slot is None:
+            self._zero_slot = self.model.init_cache(1, self.max_len)
+        return self._zero_slot
+
+    def make_pool(self) -> TieredKVPool:
+        return TieredKVPool(self.init_pool(), self.insert, self.fresh_slot)
+
+    def prefill(self, batch: dict, length) -> tuple[jax.Array, dict]:
+        return self._prefill(self.params, batch,
+                             jnp.asarray(length, jnp.int32))
+
+    def decode_step(self, toks, state: KVPoolState, pos, active
+                    ) -> tuple[jax.Array, KVPoolState]:
+        ntoks, cache = self._step(
+            self.params, jnp.asarray(toks), state.cache,
+            jnp.asarray(pos), jnp.asarray(active))
+        return ntoks, KVPoolState(cache=cache, axes=state.axes)
+
+    def insert(self, state: KVPoolState, req_cache: dict, slot
+               ) -> KVPoolState:
+        cache = self._insert(state.cache, req_cache,
+                             jnp.asarray(slot, jnp.int32))
+        return KVPoolState(cache=cache, axes=state.axes)
+
+
+class LocalBackend(_JittedBackend):
+    """Single-host vmapped executor: the seed engine's decode path,
+    extracted. Params and pool live wherever jax's default device is."""
+
+
+class ShardedBackend(_JittedBackend):
+    """pjit executor over a device mesh.
+
+    Params are committed to the model's `param_shardings` resolution and
+    the KV pool to `Model.cache_shardings` (slots -> 'data' axis, cold
+    kv_seq / kv heads -> 'model' axis, with the resolver's divisibility
+    fallback). The decode/prefill jaxpr is built from a rules-free model
+    twin — identical to `LocalBackend`'s — and the pool layout is pinned
+    by `with_sharding_constraint` at the step/insert outputs, so XLA's
+    SPMD partitioner steers the interior while a 1-device mesh stays
+    numerically identical to the local path.
+    """
+
+    def __init__(self, model: Model, params, num_slots: int, max_len: int,
+                 mesh: jax.sharding.Mesh | None = None,
+                 rules: ShardingRules | None = None):
+        if mesh is None:
+            from repro.launch.mesh import make_local_mesh
+            mesh = make_local_mesh()
+        # rules-free twin: the step jaxpr matches LocalBackend exactly;
+        # sharding enters only at the jit boundaries below
+        if model.rules is not None:
+            model = Model(model.cfg)
+        self.mesh = mesh
+        self.rules = rules or ShardingRules(mesh)
+        self._pool_sh = model.cache_shardings(self.rules, num_slots,
+                                              max_len)
+        params = jax.device_put(params,
+                                model.param_shardings(self.rules))
+        super().__init__(model, params, num_slots, max_len)
+
+    def _place(self, cache: dict) -> dict:
+        return jax.device_put(cache, self._pool_sh)
+
+    def _constrain(self, cache: dict) -> dict:
+        return jax.lax.with_sharding_constraint(cache, self._pool_sh)
+
+
+def make_backend(kind: str, model: Model, params, *, num_slots: int,
+                 max_len: int, mesh=None) -> InferenceBackend:
+    """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
+    if kind == "local":
+        return LocalBackend(model, params, num_slots, max_len)
+    if kind == "sharded":
+        return ShardedBackend(model, params, num_slots, max_len, mesh=mesh)
+    raise ValueError(f"unknown backend kind {kind!r}")

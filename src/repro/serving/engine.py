@@ -1,4 +1,4 @@
-"""Continuous-batching engine: interleaved prefill admission + one jitted
+"""Continuous-batching engine: interleaved prefill admission + one backend
 decode step over all slots.
 
 Step anatomy (one `Engine.step()` call):
@@ -7,28 +7,30 @@ Step anatomy (one `Engine.step()` call):
      budgets admit another resident request, prefill the queue head
      (right-padded to a shape bucket so jit reuses traces) and overwrite a
      pool slot with its fresh per-request tiered cache;
-  2. decode — ONE jitted call advances every slot: the per-slot decode is
-     the ordinary `Model.decode_step` vmapped over the slot axis, so each
-     slot attends its own hot ring + cold tier at its own position. Slot
-     shapes are static; jit compiles once per engine.
+  2. decode — ONE backend call advances every slot: `backend.decode_step`
+     runs the jitted per-slot decode (vmapped locally, pjit-sharded on a
+     mesh) so each slot attends its own hot ring + cold tier at its own
+     position. Slot shapes are static; the backend compiles once.
   3. retire — slots whose request hit EOS or max_new_tokens are freed for
      recycling; inactive slots' cache writes are masked out, so endurance
      counters only ever reflect real occupancies.
 
-Greedy decoding (matches `launch.serve.generate`); tokens stream to each
-request's ``on_token`` callback as they are produced.
+The engine is execution-agnostic: it talks to an
+`serving.backend.InferenceBackend` and a model-free `TieredKVPool`, so
+scheduling, metrics and the endurance audit run unmodified on the local
+vmapped backend and the pjit-sharded one. Greedy decoding (matches
+`launch.serve.generate`); tokens stream to each request's ``on_token``
+callback as they are produced.
 """
 
 from __future__ import annotations
 
 import time
+import warnings
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.serving import kv_pool as KVP
-from repro.serving.kv_pool import TieredKVPool, slot_kv_bytes
+from repro.serving.backend import InferenceBackend, LocalBackend
 from repro.serving.request import FINISHED, RUNNING, Request
 from repro.serving.scheduler import CapacityBudget, FCFSScheduler
 from repro.simulator.hardware import CHIME
@@ -44,22 +46,26 @@ def bucket_len(n: int, minimum: int = 8) -> int:
 
 
 class Engine:
-    """Continuous-batching serving engine over a TieredKVPool."""
+    """Continuous-batching serving engine over an InferenceBackend."""
 
-    def __init__(self, model, params, num_slots: int, max_len: int,
+    def __init__(self, backend, params=None, num_slots: int | None = None,
+                 max_len: int | None = None,
                  scheduler: FCFSScheduler | None = None,
                  platform=CHIME, clock=time.perf_counter):
-        cfg = model.cfg
-        if cfg.is_encoder:
-            raise ValueError("encoder-only model cannot be served")
-        if num_slots < 1:
-            raise ValueError("engine needs at least one decode slot")
-        self.model = model
-        self.params = params
-        self.max_len = max_len
+        if params is not None or num_slots is not None or max_len is not None:
+            # one-release compat shim: Engine(model, params, num_slots=,
+            # max_len=) builds the local backend the seed engine inlined
+            warnings.warn(
+                "Engine(model, params, num_slots=..., max_len=...) is "
+                "deprecated; build a serving.backend (LocalBackend / "
+                "ShardedBackend) and pass Engine(backend) instead",
+                DeprecationWarning, stacklevel=2)
+            backend = LocalBackend(backend, params, num_slots, max_len)
+        self.backend: InferenceBackend = backend
+        self.max_len = backend.max_len
         self.clock = clock
-        self.pool = TieredKVPool(model, num_slots, max_len)
-        hot_b, cold_b = slot_kv_bytes(model, max_len)
+        self.pool = backend.make_pool()
+        hot_b, cold_b = backend.slot_kv_bytes()
         if scheduler is None:
             scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
                                       hot_b, cold_b)
@@ -71,54 +77,18 @@ class Engine:
         # num_slots beyond the byte budgets is allowed but idle: admission
         # is gated per-request by the scheduler, so effective concurrency
         # is min(num_slots, scheduler.max_concurrent)
-        # recurrent (SSM) prefill states are cumulative over the whole
-        # padded sequence, so those architectures need exact-length prefill
-        self._exact_prefill = any(
-            u.block.mixer in ("rwkv6", "mamba2") for u in model.plan)
 
         # ---- per-slot host state -------------------------------------
-        self._slot_req: list[Request | None] = [None] * num_slots
-        self._tok = np.zeros((num_slots, 1), np.int32)
-        self._pos = np.zeros((num_slots,), np.int32)
-        self._active = np.zeros((num_slots,), bool)
+        n = backend.num_slots
+        self._slot_req: list[Request | None] = [None] * n
+        self._tok = np.zeros((n, 1), np.int32)
+        self._pos = np.zeros((n,), np.int32)
+        self._active = np.zeros((n,), bool)
         # lengths of the CURRENT/LAST occupant (endurance audit input)
-        self._slot_prefill_len = [0] * num_slots
-        self._slot_total_len = [0] * num_slots
+        self._slot_prefill_len = [0] * n
+        self._slot_total_len = [0] * n
         self.finished: list[Request] = []
         self._next_rid = 0
-
-        # ---- jitted programs -----------------------------------------
-        axes = self.pool.axes
-
-        def slot_step(p, tok, cache, pos):
-            c1 = KVP.tree_expand(cache, axes)
-            logits, nc = model.decode_step(p, tok[None], c1, pos)
-            ntok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
-            return ntok, KVP.tree_squeeze(nc, axes)
-
-        vm = jax.vmap(slot_step, in_axes=(None, 0, axes, 0),
-                      out_axes=(0, axes))
-
-        def step(p, toks, cache, pos, active):
-            ntoks, nc = vm(p, toks, cache, pos)
-
-            def sel(n, o, a):
-                shp = [1] * n.ndim
-                shp[a] = n.shape[a]
-                return jnp.where(active.reshape(shp), n, o)
-
-            # inactive slots keep their old cache verbatim: no phantom
-            # appends, no endurance-counter drift while a slot is parked
-            return ntoks, jax.tree.map(sel, nc, cache, axes)
-
-        self._step = jax.jit(step)
-
-        def prefill(p, batch, length):
-            logits, cache = model.prefill(p, batch, max_len, length)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            return tok[0], cache
-
-        self._prefill = jax.jit(prefill)
 
     # ------------------------------------------------------------------
     # request intake
@@ -138,7 +108,7 @@ class Engine:
     def _make_batch(self, req: Request) -> dict:
         s = int(req.tokens.shape[0])
         vis = 0 if req.patches is None else int(req.patches.shape[0])
-        if self._exact_prefill:
+        if self.backend.requires_exact_prefill:
             target = s
         else:
             # bucket the text tail, but never pad the prefill sequence
@@ -148,11 +118,11 @@ class Engine:
         toks = np.concatenate(
             [np.asarray(req.tokens, np.int32),
              np.zeros((pad,), np.int32)])[None]
-        batch = {"tokens": jnp.asarray(toks)}
+        # plain numpy: the backend's jitted prefill places these however
+        # its execution strategy requires
+        batch = {"tokens": toks}
         if req.patches is not None:
-            batch["patches"] = jnp.asarray(
-                np.asarray(req.patches,
-                           np.float32)[None])
+            batch["patches"] = np.asarray(req.patches, np.float32)[None]
         return batch
 
     # ------------------------------------------------------------------
@@ -166,8 +136,7 @@ class Engine:
                 break
             batch = self._make_batch(req)
             length = req.prompt_len
-            tok, cache = self._prefill(self.params, batch,
-                                       jnp.asarray(length, jnp.int32))
+            tok, cache = self.backend.prefill(batch, length)
             req.first_token_s = self.clock()
             req.status = RUNNING
             req.emit(int(tok))
@@ -206,9 +175,8 @@ class Engine:
         events = self._admit()
         if not self._active.any():
             return events
-        ntoks, self.pool.cache = self._step(
-            self.params, jnp.asarray(self._tok), self.pool.cache,
-            jnp.asarray(self._pos), jnp.asarray(self._active))
+        ntoks, self.pool.state = self.backend.decode_step(
+            self._tok, self.pool.state, self._pos, self._active)
         ntoks = np.asarray(ntoks)
         for slot in np.nonzero(self._active)[0]:
             req = self._slot_req[slot]
@@ -244,6 +212,6 @@ class Engine:
     # reports
     # ------------------------------------------------------------------
     def endurance_report(self) -> dict:
-        W = min(self.model.cfg.kv_hot_window, self.max_len)
         return self.pool.endurance_report(
-            self._slot_prefill_len, self._slot_total_len, W)
+            self._slot_prefill_len, self._slot_total_len,
+            self.backend.hot_window)

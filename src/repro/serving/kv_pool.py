@@ -1,4 +1,4 @@
-"""Slot-indexed multi-request KV pool over the CHIME tiered stores.
+"""Slot-indexed multi-request KV pool state over the CHIME tiered stores.
 
 The pool is the model's ordinary decode cache (`Model.init_cache`) with the
 batch axis reinterpreted as *serving slots*: slot s holds the tiered
@@ -6,6 +6,14 @@ DRAM-hot / RRAM-cold KV state of whichever request currently occupies it.
 Slot admission overwrites the slot with a freshly prefilled per-request
 cache — including its per-slot endurance counters, which is what preserves
 the writes<=1-per-cold-slot RRAM discipline across slot recycling.
+
+This module is deliberately model-free: the cache layout lives in
+`KVPoolState`, an explicit typed pytree (cache tree + static slot-axis
+index per leaf), and `TieredKVPool` is pure host-side slot bookkeeping
+over that state. The jitted cache arithmetic (insert / decode-step) is
+owned by the executing `serving.backend.InferenceBackend`, which is what
+lets the same pool run on the single-device vmapped path and on a
+pjit-sharded mesh unmodified.
 
 Cache pytree layout (from Model.init_cache): per scan-unit subtrees whose
 leaves carry the slot axis at position 0, or 1 for scanned units (leading
@@ -15,10 +23,42 @@ insert/reset/vmap all address the slot dimension uniformly.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import kv_tiers as KT
+from repro.models.counting import kv_elems_per_token, kv_scale_elems_per_token
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVPoolState:
+    """Explicit pytree of a multi-slot KV pool.
+
+    ``cache``: the slot-batched cache tree (arrays, or ShapeDtypeStructs
+    for abstract use). ``axes``: a matching tree of ints giving each
+    leaf's slot-axis index — static metadata, so a KVPoolState flows
+    through jit/pjit with only the cache as traced children.
+    """
+
+    cache: dict
+    axes: dict
+
+    @property
+    def num_slots(self) -> int:
+        leaf = jax.tree.leaves(self.cache)[0]
+        return leaf.shape[jax.tree.leaves(self.axes)[0]]
+
+    def tree_flatten(self):
+        axes_leaves, axes_def = jax.tree_util.tree_flatten(self.axes)
+        return (self.cache,), (tuple(axes_leaves), axes_def)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        axes = jax.tree_util.tree_unflatten(aux[1], list(aux[0]))
+        return cls(cache=children[0], axes=axes)
 
 
 def batch_axes(model, cache: dict) -> dict:
@@ -39,49 +79,71 @@ def tree_squeeze(tree: dict, axes: dict) -> dict:
     return jax.tree.map(lambda l, a: jnp.squeeze(l, axis=a), tree, axes)
 
 
+# keys of the sequence-store leaves inside a block cache; anything else
+# (SSM states, rwkv token-mix state, cm_x_prev) is per-slot fixed-size
+# DRAM state
+_STORE_KEYS = frozenset({"hot", "cold_q", "cold_scale", "writes", "flat"})
+
+
 def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
     """(dram_hot_bytes, rram_cold_bytes) of ONE slot's cache.
 
     Hot ring, flat stores and SSM states live in the DRAM domain; the int8
     cold tier (+ its scales) is the RRAM budget. Endurance counters are
-    bookkeeping, not capacity.
+    bookkeeping, not capacity. The sequence-store sizes derive from
+    `models/counting.kv_elems_per_token` — the same per-token element
+    count behind the simulator's `kv_bytes_per_token` cost terms — so
+    capacity admission and simulated efficiency share one KV byte math.
     """
+    cfg = model.cfg
+    cd = jnp.dtype(cfg.compute_dtype).itemsize
+    seq_elems = kv_elems_per_token(cfg)
     shapes, _ = model.cache_spec(1, max_len)
-    hot = cold = 0
+    state_bytes = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
         key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
-        nbytes = 1
+        if key in _STORE_KEYS:
+            continue
+        nbytes = jnp.dtype(leaf.dtype).itemsize
         for d in leaf.shape:
             nbytes *= d
-        nbytes *= jnp.dtype(leaf.dtype).itemsize
-        if key == "writes":
-            continue
-        if key in ("cold_q", "cold_scale"):
-            cold += nbytes
-        else:
-            hot += nbytes
-    return hot, cold
+        state_bytes += nbytes
+    if cfg.kv_policy == "tiered":
+        W = min(cfg.kv_hot_window, max_len)
+        hot = seq_elems * W * cd + state_bytes
+        cold = (seq_elems * max_len * jnp.dtype(jnp.int8).itemsize
+                + kv_scale_elems_per_token(cfg) * max_len
+                * jnp.dtype(jnp.float32).itemsize)
+    else:
+        hot = seq_elems * max_len * cd + state_bytes
+        cold = 0
+    return int(hot), int(cold)
 
 
 class TieredKVPool:
-    """Fixed set of decode slots over a shared tiered cache pytree."""
+    """Host-side slot bookkeeping over an explicit `KVPoolState`.
 
-    def __init__(self, model, num_slots: int, max_len: int):
-        self.model = model
-        self.num_slots = num_slots
-        self.max_len = max_len
-        self.cache = model.init_cache(num_slots, max_len)
-        self.axes = batch_axes(model, self.cache)
-        self._zero_slot = model.init_cache(1, max_len)
-        self._free = list(range(num_slots))
+    Model-free by construction: the state layout and the jitted insert
+    arithmetic come from the backend (`backend.make_pool()` wires them
+    up), so the pool neither knows nor cares whether its arrays live on
+    one device or a pjit mesh.
+    """
 
-        def _insert(pool, req_cache, slot):
-            return jax.tree.map(
-                lambda p, r, a: jax.lax.dynamic_update_slice_in_dim(
-                    p, r.astype(p.dtype), slot, axis=a),
-                pool, req_cache, self.axes)
+    def __init__(self, state: KVPoolState, insert_fn, fresh_slot_fn):
+        self.state = state
+        self._insert_fn = insert_fn        # (state, req_cache, slot) -> state
+        self._fresh_slot = fresh_slot_fn   # () -> batch-1 zero cache
+        self.num_slots = state.num_slots
+        self._free = list(range(self.num_slots))
 
-        self._insert = jax.jit(_insert)
+    # ---- views -------------------------------------------------------
+    @property
+    def cache(self) -> dict:
+        return self.state.cache
+
+    @property
+    def axes(self) -> dict:
+        return self.state.axes
 
     # ---- slot bookkeeping (host side) --------------------------------
     @property
@@ -104,12 +166,11 @@ class TieredKVPool:
     def insert(self, req_cache: dict, slot):
         """Overwrite slot ``slot`` with a batch-1 per-request cache (this
         is also the endurance-counter reset on recycling)."""
-        self.cache = self._insert(self.cache, req_cache,
-                                  jnp.asarray(slot, jnp.int32))
+        self.state = self._insert_fn(self.state, req_cache, slot)
 
     def reset(self, slot):
         """Zero a slot (explicit scrub; admission overwrites anyway)."""
-        self.insert(self._zero_slot, slot)
+        self.insert(self._fresh_slot(), slot)
 
     # ---- endurance audit ---------------------------------------------
     def worst_case_writes(self) -> jax.Array | None:
@@ -117,7 +178,7 @@ class TieredKVPool:
         counters -> (num_slots, n_blocks), or None if nothing is tiered."""
         worst = None
         for path, leaf in jax.tree_util.tree_flatten_with_path(
-                self.cache)[0]:
+                self.state.cache)[0]:
             key = path[-1].key if hasattr(path[-1], "key") else ""
             if key != "writes":
                 continue

@@ -1,6 +1,6 @@
 """Serving subsystem: capacity-aware admission, slot recycling +
 endurance-counter reset, engine-vs-generate token parity, KV pool
-mechanics, streaming + metrics."""
+mechanics, backend API + compat shim, streaming + metrics."""
 
 import jax
 import jax.numpy as jnp
@@ -10,10 +10,11 @@ import pytest
 from repro.configs.base import get_config
 from repro.launch.serve import generate
 from repro.models import Model
-from repro.serving import (CapacityBudget, Engine, FCFSScheduler, Request,
-                           aggregate_metrics, make_synthetic_requests,
-                           simulated_efficiency, slot_kv_bytes)
-from repro.serving.kv_pool import TieredKVPool
+from repro.models.counting import kv_bytes_per_token
+from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
+                           LocalBackend, Request, aggregate_metrics,
+                           make_synthetic_requests, simulated_efficiency,
+                           slot_kv_bytes)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -25,6 +26,10 @@ def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+def _engine(model, params, num_slots, max_len, **kw) -> Engine:
+    return Engine(LocalBackend(model, params, num_slots, max_len), **kw)
 
 
 def _requests(cfg, specs, seed=0):
@@ -68,7 +73,7 @@ def test_engine_admission_respects_byte_budgets():
     hot_b, cold_b = slot_kv_bytes(model, max_len=24)
     budget = CapacityBudget(dram_bytes=2 * hot_b, rram_bytes=2 * cold_b)
     sched = FCFSScheduler(budget, hot_b, cold_b)
-    eng = Engine(model, params, num_slots=4, max_len=24, scheduler=sched)
+    eng = _engine(model, params, 4, 24, scheduler=sched)
     for r in _requests(cfg, [(8, 6)] * 5):
         eng.submit(r)
     peak = 0
@@ -84,10 +89,48 @@ def test_engine_admission_respects_byte_budgets():
 
 def test_engine_rejects_oversized_request():
     cfg, model, params = _model()
-    eng = Engine(model, params, num_slots=2, max_len=16)
+    eng = _engine(model, params, 2, 16)
     (req,) = _requests(cfg, [(12, 8)])       # 20 positions > 16
     with pytest.raises(ValueError):
         eng.submit(req)
+
+
+# ---------------------------------------------------------------------------
+# KV byte math: admission vs simulator single source of truth
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["granite-3-2b", "deepseek-v2-lite",
+                                  "zamba2-1.2b", "rwkv6-7b"])
+@pytest.mark.parametrize("kv_policy", ["tiered", "flat"])
+def test_slot_kv_bytes_matches_cache_spec(arch, kv_policy):
+    """slot_kv_bytes derives from counting.kv_elems_per_token; it must
+    equal an exact byte walk of the real cache layout, or capacity
+    admission and the simulator's cost terms have drifted."""
+    cfg = get_config(arch, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32",
+        kv_policy=kv_policy, kv_hot_window=8)
+    model = Model(cfg)
+    max_len = 24
+    shapes, _ = model.cache_spec(1, max_len)
+    hot = cold = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if key == "writes":
+            continue
+        nbytes = jnp.dtype(leaf.dtype).itemsize
+        for d in leaf.shape:
+            nbytes *= d
+        if key in ("cold_q", "cold_scale"):
+            cold += nbytes
+        else:
+            hot += nbytes
+    assert slot_kv_bytes(model, max_len) == (hot, cold)
+    if kv_policy == "flat":
+        # flat hot bytes = simulator per-token bytes x length + SSM state
+        per_tok = kv_bytes_per_token(
+            cfg, jnp.dtype(cfg.compute_dtype).itemsize)
+        assert hot >= per_tok * max_len
+        if arch in ("granite-3-2b", "deepseek-v2-lite"):
+            assert hot == per_tok * max_len
 
 
 # ---------------------------------------------------------------------------
@@ -95,7 +138,7 @@ def test_engine_rejects_oversized_request():
 # ---------------------------------------------------------------------------
 def test_pool_insert_places_request_cache_in_slot():
     cfg, model, params = _model()
-    pool = TieredKVPool(model, num_slots=3, max_len=24)
+    pool = LocalBackend(model, params, 3, 24).make_pool()
     batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None]}
     _, req_cache = jax.jit(
         lambda p, b: model.prefill(p, b, 24))(params, batch)
@@ -111,7 +154,7 @@ def test_pool_insert_places_request_cache_in_slot():
 
 def test_pool_reset_restores_initial_slot_state():
     cfg, model, params = _model()
-    pool = TieredKVPool(model, num_slots=2, max_len=24)
+    pool = LocalBackend(model, params, 2, 24).make_pool()
     batch = {"tokens": jnp.arange(8, dtype=jnp.int32)[None]}
     _, req_cache = jax.jit(
         lambda p, b: model.prefill(p, b, 24))(params, batch)
@@ -138,7 +181,7 @@ def test_slot_recycling_resets_endurance_counters():
     the slot's endurance counters must equal what the SECOND occupancy
     alone would produce (writes<=1 per cold slot), not the sum."""
     cfg, model, params = _model(hot_window=4)
-    eng = Engine(model, params, num_slots=1, max_len=32)
+    eng = _engine(model, params, 1, 32)
     eng.run(_requests(cfg, [(8, 10), (8, 10)]))
     rep = eng.endurance_report()
     assert rep["tiered"] and rep["write_once_ok"]
@@ -163,7 +206,7 @@ def test_engine_matches_generate_per_request(kv_policy):
     cfg, model, params = _model(kv_policy=kv_policy)
     specs = [(16, 8), (13, 8), (8, 6), (16, 4)]
     reqs = _requests(cfg, specs, seed=3)
-    eng = Engine(model, params, num_slots=2, max_len=24)
+    eng = _engine(model, params, 2, 24)
     eng.run(reqs, max_steps=200)
     for r, (p, g) in zip(reqs, specs):
         toks, _ = generate(model, params, {"tokens": r.tokens[None]}, p, g)
@@ -173,7 +216,7 @@ def test_engine_matches_generate_per_request(kv_policy):
 def test_engine_matches_generate_mla():
     cfg, model, params = _model("deepseek-v2-lite")
     reqs = _requests(cfg, [(16, 6), (16, 6), (16, 6)], seed=5)
-    eng = Engine(model, params, num_slots=2, max_len=24)
+    eng = _engine(model, params, 2, 24)
     eng.run(reqs, max_steps=200)
     for r in reqs:
         toks, _ = generate(model, params, {"tokens": r.tokens[None]}, 16, 6)
@@ -186,7 +229,7 @@ def test_engine_mixed_image_text_stream():
                                    seed=2, image_every=2)
     assert any(r.has_image for r in reqs) \
         and any(not r.has_image for r in reqs)
-    eng = Engine(model, params, num_slots=2, max_len=32)
+    eng = _engine(model, params, 2, 32)
     done = eng.run(reqs, max_steps=100)
     assert len(done) == 3
     assert all(r.n_generated == 4 for r in done)
@@ -197,7 +240,7 @@ def test_one_token_request_finishes_at_admission_with_event():
     """A request satisfied by its prefill token never occupies a slot,
     but still streams its (rid, token, done=True) event."""
     cfg, model, params = _model()
-    eng = Engine(model, params, num_slots=2, max_len=16)
+    eng = _engine(model, params, 2, 16)
     eng.submit(_requests(cfg, [(8, 1)])[0])
     events = eng.step()
     assert len(events) == 1
@@ -205,6 +248,34 @@ def test_one_token_request_finishes_at_admission_with_event():
     assert rid == 0 and done
     assert eng.finished and eng.finished[0].generated == [tok]
     assert eng.pool.active_slots == 0
+
+
+# ---------------------------------------------------------------------------
+# backend API + compat shim
+# ---------------------------------------------------------------------------
+def test_engine_compat_shim_warns_and_matches_backend_path():
+    """One-release shim: Engine(model, params, num_slots=, max_len=)
+    still serves, warns DeprecationWarning, and produces the exact same
+    tokens as the explicit LocalBackend construction."""
+    cfg, model, params = _model()
+    specs = [(8, 5), (13, 5)]
+    with pytest.warns(DeprecationWarning):
+        old_eng = Engine(model, params, num_slots=2, max_len=24)
+    old = old_eng.run(_requests(cfg, specs, seed=11), max_steps=100)
+    new = _engine(model, params, 2, 24).run(
+        _requests(cfg, specs, seed=11), max_steps=100)
+    assert ([r.generated for r in sorted(old, key=lambda r: r.rid)]
+            == [r.generated for r in sorted(new, key=lambda r: r.rid)])
+
+
+def test_backend_rejects_encoder_and_zero_slots():
+    cfg, model, params = _model()
+    with pytest.raises(ValueError):
+        LocalBackend(model, params, 0, 16)
+    enc_cfg = get_config("hubert-xlarge", reduced=True)
+    enc_model = Model(enc_cfg)
+    with pytest.raises(ValueError):
+        LocalBackend(enc_model, None, 1, 16)
 
 
 # ---------------------------------------------------------------------------
@@ -216,7 +287,7 @@ def test_streaming_order_and_metrics():
     events = []
     for r in reqs:
         r.on_token = lambda req, tok: events.append((req.rid, tok))
-    eng = Engine(model, params, num_slots=2, max_len=16)
+    eng = _engine(model, params, 2, 16)
     done = eng.run(reqs)
     # every request streamed exactly its generated tokens, in order
     for r in reqs:

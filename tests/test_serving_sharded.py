@@ -1,0 +1,161 @@
+"""Sharded/local backend parity: the pjit `ShardedBackend` must be a pure
+placement change. Every test holds it to EXACT token equality with
+`LocalBackend` — on the 1-device `make_local_mesh` always, and on 8 fake
+CPU devices either in-process (when the host platform was forced to 8
+devices, as the CI multi-device job does) or via a subprocess re-exec.
+
+Run the multi-device path directly with:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest -q tests/test_serving_sharded.py
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import Model
+from repro.serving import (Engine, LocalBackend, Request, ShardedBackend,
+                           make_synthetic_requests)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
+    cfg = get_config(arch, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        kv_policy=kv_policy, kv_hot_window=hot_window)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, specs, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, p)
+                    .astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(specs)]
+
+
+def _mesh():
+    """Mesh over every visible device: (1, 1) locally; on a forced
+    8-device host platform, slots shard over 'data' and the cold kv_seq
+    over 'model'."""
+    n = jax.device_count()
+    if n == 1:
+        return make_local_mesh()
+    m = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+def _generated(done):
+    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+
+
+def _run_parity(arch, specs, *, kv_policy="tiered", num_slots=4,
+                max_len=24, seed=3, image_every=0):
+    cfg, model, params = _model(arch, kv_policy=kv_policy)
+    if image_every:
+        reqs = lambda: make_synthetic_requests(   # noqa: E731
+            cfg, len(specs), prompt_len=specs[0][0], gen_len=specs[0][1],
+            seed=seed, image_every=image_every)
+    else:
+        reqs = lambda: _requests(cfg, specs, seed=seed)  # noqa: E731
+    local = Engine(LocalBackend(model, params, num_slots, max_len))
+    sharded = Engine(ShardedBackend(model, params, num_slots, max_len,
+                                    mesh=_mesh()))
+    got_l = _generated(local.run(reqs(), max_steps=400))
+    got_s = _generated(sharded.run(reqs(), max_steps=400))
+    assert got_l == got_s, f"{arch}: sharded decode diverged from local"
+    # the audit must hold on the sharded pool too (per-slot counters
+    # survive pjit placement and slot recycling)
+    if kv_policy == "tiered":
+        assert sharded.endurance_report()["write_once_ok"]
+    return got_l
+
+
+# ---------------------------------------------------------------------------
+# exact parity on whatever devices this process has (1 locally, 8 in the
+# CI multi-device job)
+# ---------------------------------------------------------------------------
+def test_sharded_matches_local_gqa_tiered_padded_buckets():
+    """GQA + tiered KV + a padded admission bucket (13 -> 16) + slot
+    recycling (6 requests through 4 slots)."""
+    out = _run_parity("granite-3-2b",
+                      [(16, 8), (13, 8), (8, 6), (16, 4), (13, 6), (8, 8)])
+    assert len(out) == 6
+
+
+def test_sharded_matches_local_mla():
+    _run_parity("deepseek-v2-lite", [(16, 6), (13, 6), (16, 4), (8, 6)])
+
+
+def test_sharded_matches_local_flat_policy():
+    _run_parity("granite-3-2b", [(16, 6), (13, 6), (8, 4), (16, 4)],
+                kv_policy="flat")
+
+
+def test_sharded_matches_local_vlm_mixed_stream():
+    """VQA + text mixed stream: visual patches ride through the sharded
+    prefill path too."""
+    _run_parity("mobilevlm-1.7b", [(20, 4)] * 3, num_slots=2, max_len=32,
+                image_every=2, seed=2)
+
+
+def test_sharded_pool_state_is_committed_to_mesh():
+    """The pool cache must actually live on the backend's mesh sharding
+    (not fall back to single-device default placement)."""
+    _, model, params = _model()
+    b = ShardedBackend(model, params, 4, 24, mesh=_mesh())
+    state = b.init_pool()
+    shardings = jax.tree.leaves(b._pool_sh)
+    leaves = jax.tree.leaves(state.cache)
+    assert len(shardings) == len(leaves)
+    for leaf, want in zip(leaves, shardings):
+        assert leaf.sharding == want
+
+
+# ---------------------------------------------------------------------------
+# forced 8-device host platform (subprocess: XLA flags must be set before
+# jax initializes, so an in-process re-init is impossible)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_sharded_parity_on_8_fake_cpu_devices():
+    if jax.device_count() >= 8:
+        pytest.skip("already on a multi-device host platform; the "
+                    "in-process parity tests above cover it")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["JAX_PLATFORM_NAME"] = "cpu"
+    env["PYTHONPATH"] = (str(REPO / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, __file__, "--eight-device-selfcheck"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"8-device parity selfcheck failed:\n{proc.stdout}\n{proc.stderr}")
+    assert "PARITY OK on 8 devices" in proc.stdout
+
+
+def _eight_device_selfcheck():
+    n = jax.device_count()
+    assert n == 8, f"expected 8 forced host devices, got {n}"
+    _run_parity("granite-3-2b", [(16, 8), (13, 8), (8, 6), (16, 4)])
+    print("PARITY OK on 8 devices")
+
+
+if __name__ == "__main__":
+    if "--eight-device-selfcheck" in sys.argv:
+        _eight_device_selfcheck()
