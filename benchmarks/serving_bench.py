@@ -3,15 +3,24 @@ shared tiered KV pool actually buy aggregate tok/s?
 
     PYTHONPATH=src python benchmarks/serving_bench.py --concurrency 8
     PYTHONPATH=src python benchmarks/serving_bench.py --backend sharded
+    # mixed long-VQA stream, chunked prefill (Sarathi-style):
+    PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
+        --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8
 
 For each slot count in {1, --concurrency} the bench drains the SAME
 request stream (2x the slot count, so slots recycle) through a fresh
 engine twice — the first pass pays jit compilation, the second is timed
 step-by-step — and reports aggregate decode throughput, per-request and
-per-step (p50/p95) latency, the simulated CHIME tokens/J for the served
-trace, and the endurance audit (write-once discipline must survive slot
-recycling). Results append to the BENCH json trajectory at
-``experiments/bench/serving.json`` so successive PRs can be compared.
+per-step (p50/p95) latency, TTFT/TBT percentiles, the simulated CHIME
+tokens/J for the served trace, and the endurance audit (write-once
+discipline must survive slot recycling). Steps that decode are timed
+separately (decode-BEARING: some request waited on the step for its
+next token, whether or not a prefill chunk co-ran): with --chunk-tokens
+their p95 is bounded by one small chunk, while whole-prompt admission
+(chunk 0) drags every co-resident request's next token behind a full
+prompt. Results append
+to the BENCH json trajectory at ``experiments/bench/serving.json`` so
+successive PRs can be compared.
 """
 
 from __future__ import annotations
@@ -35,34 +44,56 @@ BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
 
 def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
               n_requests: int, prompt_len: int, gen: int, max_len: int,
-              mesh=None) -> dict:
+              mesh=None, chunk_tokens: int | None = None,
+              token_budget: int | None = None,
+              image_every: int = 0) -> dict:
     backend = make_backend(backend_kind, model, params,
                            num_slots=concurrency, max_len=max_len,
                            mesh=mesh)
-    engine = Engine(backend)
+
+    def fresh_engine():
+        # verbatim: None consults the env knobs, explicit 0 disables
+        return Engine(backend, chunk_tokens=chunk_tokens,
+                      token_budget=token_budget)
 
     def stream(seed):
         return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
-                                       seed=seed)
+                                       seed=seed, image_every=image_every)
 
-    engine.run(stream(0))                      # warm-up: pays compilation
+    fresh_engine().run(stream(0))              # warm-up: pays compilation
+    engine = fresh_engine()                    # timed pass: clean stats
     for r in stream(1):
         engine.submit(r)
-    step_s = []
+    step_s, decode_step_s = [], []
     t0 = time.perf_counter()
     start = len(engine.finished)
-    while engine.scheduler.pending or engine.pool.active_slots:
+    while not engine.idle:
+        decodes_before = engine.stats["decode_steps"]
         ts = time.perf_counter()
         engine.step()
-        step_s.append(time.perf_counter() - ts)
+        dt = time.perf_counter() - ts
+        step_s.append(dt)
+        if engine.stats["decode_steps"] > decodes_before:
+            # decode-heavy step: some request waited on it for its next
+            # token — the TBT tail chunked prefill exists to bound
+            decode_step_s.append(dt)
     wall = time.perf_counter() - t0
     done = engine.finished[start:]
     m = aggregate_metrics(done, wall)
     m["backend"] = backend_kind
     m["concurrency"] = concurrency
+    # record what the engine RESOLVED (CLI flag or REPRO_SERVE_* env), so
+    # env-forced chunked runs are distinguishable in the trajectory
+    m["chunk_tokens"] = engine.scheduler.chunk_tokens or 0
+    m["token_budget"] = engine.scheduler.token_budget or 0
+    m["image_every"] = image_every
     m["steps"] = len(step_s)
     m["p50_step_s"] = float(np.percentile(step_s, 50))
     m["p95_step_s"] = float(np.percentile(step_s, 95))
+    if decode_step_s:
+        m["decode_steps_timed"] = len(decode_step_s)
+        m["p95_decode_step_s"] = float(np.percentile(decode_step_s, 95))
+    m["engine_stats"] = dict(engine.stats)
     m["endurance"] = engine.endurance_report()
     m["sim"] = simulated_efficiency(cfg, done)
     return m
@@ -103,6 +134,15 @@ def main(argv=None):
     ap.add_argument("--kv-policy", default="tiered",
                     choices=["flat", "tiered"])
     ap.add_argument("--hot-window", type=int, default=8)
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill chunk cap (0 = whole prompts "
+                         "even under REPRO_SERVE_CHUNK_TOKENS; default: "
+                         "consult the env knob)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget (0 = unbounded; "
+                         "default: env knob / derived)")
+    ap.add_argument("--image-every", type=int, default=0,
+                    help="every k-th request is a VQA request (0 = none)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip appending to the BENCH json trajectory")
     args = ap.parse_args(argv)
@@ -113,25 +153,32 @@ def main(argv=None):
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n_requests = args.requests or 2 * args.concurrency
-    max_len = args.prompt_len + args.gen
+    vis = (cfg.frontend.num_tokens
+           if args.image_every and cfg.frontend is not None else 0)
+    max_len = max(args.prompt_len, vis + 1) + args.gen
     mesh = None
     if args.backend == "sharded":
         from repro.launch.mesh import get_mesh
         mesh = get_mesh(args.mesh)
 
     print(f"[bench] arch={args.arch} kv={args.kv_policy} "
-          f"backend={args.backend} "
+          f"backend={args.backend} chunk={args.chunk_tokens or 0} "
           f"requests={n_requests} prompt={args.prompt_len} gen={args.gen}")
     results = []
     for c in sorted({1, args.concurrency}):
         r = bench_one(model, params, cfg, args.backend, c, n_requests,
-                      args.prompt_len, args.gen, max_len, mesh=mesh)
+                      args.prompt_len, args.gen, max_len, mesh=mesh,
+                      chunk_tokens=args.chunk_tokens,
+                      token_budget=args.token_budget,
+                      image_every=args.image_every)
         results.append(r)
         rep = r["endurance"]
         print(f"[bench] concurrency={c:3d}: {r['tok_per_s']:8.1f} tok/s  "
               f"step p50={r['p50_step_s'] * 1e3:.1f}ms "
-              f"p95={r['p95_step_s'] * 1e3:.1f}ms  "
-              f"mean_latency={r['mean_latency_s']:.3f}s  "
+              f"p95={r['p95_step_s'] * 1e3:.1f}ms "
+              f"decode p95={r.get('p95_decode_step_s', 0.0) * 1e3:.1f}ms  "
+              f"ttft p95={r['ttft_p95_s'] * 1e3:.1f}ms "
+              f"tbt p95={r.get('tbt_p95_s', 0.0) * 1e3:.1f}ms  "
               f"sim={r['sim']['sim_tokens_per_j']:.1f} tok/J  "
               f"endurance max writes/block="
               f"{rep['max_writes_per_cold_slot']:.2f} "
@@ -148,6 +195,8 @@ def main(argv=None):
             "kv_policy": args.kv_policy,
             "prompt_len": args.prompt_len,
             "gen": args.gen,
+            "chunk_tokens": results[-1]["chunk_tokens"],
+            "image_every": args.image_every,
             "runs": results,
         })
         print(f"[bench] appended to {BENCH_JSON}")

@@ -5,7 +5,12 @@
 2. the continuous-batching engine serving a MIXED stream of image+text
    requests through a shared multi-request tiered KV pool — VQA requests
    carry visual patches, chat requests are text-only, and the scheduler
-   admits them FCFS under the DRAM/RRAM byte budgets.
+   admits them FCFS under the DRAM/RRAM byte budgets, and
+
+3. chunked prefill on a long-vision-prompt mixed stream: a large VQA
+   prompt streams into its pool slot in fixed-size chunks while
+   already-running chat requests keep emitting tokens between chunks
+   (the per-step trace prints the overlap).
 
     PYTHONPATH=src python examples/serve_vlm.py
 """
@@ -19,8 +24,9 @@ from repro.configs.base import get_config
 from repro.core import kv_tiers as KT
 from repro.launch.serve import generate
 from repro.models import Model
-from repro.serving import (Engine, LocalBackend, aggregate_metrics,
-                           make_synthetic_requests, simulated_efficiency)
+from repro.serving import (Engine, LocalBackend, Request,
+                           aggregate_metrics, make_synthetic_requests,
+                           simulated_efficiency)
 
 
 def make_cfg(kv_policy: str):
@@ -87,6 +93,55 @@ def serve_mixed_stream(n_requests: int = 8, concurrency: int = 4,
           f"{streamed[:6]}")
 
 
+def serve_chunked_long_vqa(chunk_tokens: int = 8, gen: int = 12):
+    """Chunked prefill keeping decode slots live: short chat requests are
+    already decoding when a LONG VQA prompt (full visual span + text tail)
+    arrives; with --chunk-tokens-style chunking the big prompt streams
+    into its pool slot a few positions per step and the chat requests
+    keep emitting tokens between chunks — the per-step trace below shows
+    decode events flowing while the prefill is still in flight."""
+    cfg = make_cfg("tiered")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tv = cfg.frontend.num_tokens
+    long_prompt = tv + 16                       # visual span + text tail
+    backend = LocalBackend(model, params, num_slots=3,
+                           max_len=long_prompt + gen)
+    engine = Engine(backend, chunk_tokens=chunk_tokens)
+    rng = jax.random.PRNGKey(1)
+    import numpy as np
+    nrng = np.random.default_rng(5)
+    chats = [Request(rid=i, tokens=nrng.integers(
+        0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=gen)
+        for i in range(2)]
+    vqa = Request(
+        rid=9, max_new_tokens=gen,
+        tokens=nrng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+        patches=np.asarray(jax.random.normal(
+            rng, (tv, cfg.frontend.frontend_dim)), np.float32))
+    for r in chats:
+        engine.submit(r)
+    engine.step()                               # chats admitted + decoding
+    engine.submit(vqa)                          # long prompt arrives
+    overlap_steps = 0
+    while not engine.idle:
+        before = engine.stats["prefill_chunks"]
+        events = engine.step()
+        chunked = engine.stats["prefill_chunks"] > before
+        decode_evs = [e for e in events if e[0] != vqa.rid]
+        if chunked and decode_evs:
+            overlap_steps += 1
+        if chunked or decode_evs:
+            print(f"[chunked] step {engine.stats['steps']:3d}: "
+                  f"prefill@{9 if chunked else '-'} "
+                  f"decode events {decode_evs[:4]}")
+    print(f"[chunked] {overlap_steps} steps decoded chat tokens WHILE the "
+          f"{long_prompt}-position VQA prompt prefilled "
+          f"({engine.stats['prefill_chunks']} chunks of <= {chunk_tokens})")
+    assert overlap_steps > 0
+    assert all(r.n_generated == gen for r in engine.finished)
+
+
 def main():
     toks_flat, _ = run("flat")
     toks_tier, cache = run("tiered")
@@ -104,6 +159,7 @@ def main():
                   f"max per block {int(rep['max_writes_per_block'])}")
             break
     serve_mixed_stream()
+    serve_chunked_long_vqa()
 
 
 if __name__ == "__main__":

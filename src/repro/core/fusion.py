@@ -44,11 +44,11 @@ def _use_pallas(cfg: ModelConfig) -> bool:
 # FUSED_FFN_ACT
 # ---------------------------------------------------------------------------
 def apply_ffn(p: dict, cfg: ModelConfig, x: jax.Array, rules,
-              mlp_type: str | None = None, d_ff: int | None = None
-              ) -> jax.Array:
+              mlp_type: str | None = None, d_ff: int | None = None,
+              dropless_moe: bool = False) -> jax.Array:
     kind = mlp_type or cfg.mlp_type
     if kind == "moe":
-        return L.apply_moe(p, cfg, x, rules)
+        return L.apply_moe(p, cfg, x, rules, dropless=dropless_moe)
     if kind == "rwkv_cm":
         raise ValueError("rwkv_cm is stateful; handled in model block")
     if isinstance(p.get("w_up"), QTensor):
@@ -98,6 +98,50 @@ def apply_attention_seq(p: dict, cfg: ModelConfig, x: jax.Array,
                                     ln, max_len),
         }
     return A.attn_out(p, cfg, o, rules), cache
+
+
+def apply_attention_extend(p: dict, cfg: ModelConfig, x: jax.Array,
+                           positions: jax.Array, cache: dict, pos, length,
+                           rules, commit: bool
+                           ) -> tuple[jax.Array, dict]:
+    """Chunk-resumable prefill attention (serving `Model.extend`).
+
+    ``cache`` is the workspace form {"k_ws","v_ws"}: full-precision
+    (B, max_len, Hkv, D) buffers accumulating the post-RoPE K/V of every
+    chunk so far. The chunk's queries (absolute positions ``positions`` =
+    pos + arange(C)) attend causally over the workspace — the exact rows
+    of the whole-prompt attention matrix, at full precision, which is what
+    makes chunked prefill token-for-token identical to `Model.prefill`.
+
+    With ``commit`` (the prompt's final chunk) the workspace is folded
+    into the regular flat/CHIME-tiered stores via the same
+    `store_from_full` whole-prompt prefill uses, so the committed cache is
+    bit-identical too. ``length`` counts the chunk's VALID rows: rows
+    beyond it are padding whose K/V land past the committed length and are
+    never attendable."""
+    from repro.core import kv_tiers as KT
+    q, k, v = A.qkv_proj(p, cfg, x, positions, rules)
+    kf = jax.lax.dynamic_update_slice(
+        cache["k_ws"], k.astype(cache["k_ws"].dtype), (0, pos, 0, 0))
+    vf = jax.lax.dynamic_update_slice(
+        cache["v_ws"], v.astype(cache["v_ws"].dtype), (0, pos, 0, 0))
+    kj = jnp.arange(kf.shape[1])[None, :]
+    mask = (kj <= positions[0][:, None])[None, None]   # (1,1,C,max_len)
+    o = A.gqa_scores_softmax_pv(
+        q, kf, vf, mask, rules=rules,
+        scores_dtype=jnp.dtype(cfg.attn_scores_dtype),
+        kv_logical=("batch", "kv_seq_shard", "heads", None))
+    out = A.attn_out(p, cfg, o, rules)
+    if commit:
+        ln = pos + (x.shape[1] if length is None else length)
+        max_len = kf.shape[1]
+        return out, {
+            "k": KT.store_from_full(kf, cfg.kv_policy, cfg.kv_hot_window,
+                                    ln, max_len),
+            "v": KT.store_from_full(vf, cfg.kv_policy, cfg.kv_hot_window,
+                                    ln, max_len),
+        }
+    return out, {"k_ws": kf, "v_ws": vf}
 
 
 def apply_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
@@ -151,6 +195,37 @@ def apply_mla_seq(p: dict, cfg: ModelConfig, x: jax.Array,
                                          cfg.kv_hot_window, ln, max_len),
         }
     return out, cache
+
+
+def apply_mla_extend(p: dict, cfg: ModelConfig, x: jax.Array,
+                     positions: jax.Array, cache: dict, pos, length,
+                     rules, commit: bool) -> tuple[jax.Array, dict]:
+    """Chunk-resumable MLA prefill: the workspace {"c_kv_ws","k_rope_ws"}
+    accumulates full-precision latents; the chunk attends causally over it
+    (exact rows of `apply_mla_seq`), and ``commit`` folds the workspace
+    into the flat/tiered latent stores via `store_from_full`."""
+    from repro.core import kv_tiers as KT
+    c_kv, k_rope = A.mla_latents(p, cfg, x, positions)
+    q_nope, q_rope = A.mla_queries(p, cfg, x, positions)
+    cf = jax.lax.dynamic_update_slice(
+        cache["c_kv_ws"], c_kv.astype(cache["c_kv_ws"].dtype), (0, pos, 0))
+    rf = jax.lax.dynamic_update_slice(
+        cache["k_rope_ws"], k_rope.astype(cache["k_rope_ws"].dtype),
+        (0, pos, 0))
+    kj = jnp.arange(cf.shape[1])[None, :]
+    mask = (kj <= positions[0][:, None])[None, None]
+    out = A.mla_attention(p, cfg, q_nope, q_rope, cf, rf, mask,
+                          absorbed=cfg.mla_absorbed)
+    if commit:
+        ln = pos + (x.shape[1] if length is None else length)
+        max_len = cf.shape[1]
+        return out, {
+            "c_kv": KT.store_from_full(cf, cfg.kv_policy,
+                                       cfg.kv_hot_window, ln, max_len),
+            "k_rope": KT.store_from_full(rf, cfg.kv_policy,
+                                         cfg.kv_hot_window, ln, max_len),
+        }
+    return out, {"c_kv_ws": cf, "k_rope_ws": rf}
 
 
 def apply_mla_decode(p: dict, cfg: ModelConfig, x: jax.Array,

@@ -15,6 +15,12 @@ vmapped decode, 'sharded' runs the same step under pjit on a --mesh
 rules and the KV pool slots over 'data' / cold kv_seq over 'model'.
 tests/test_serving_sharded.py holds the two backends to exact token
 parity.
+
+--chunk-tokens N enables Sarathi-style chunked prefill: prompts stream
+into their pool slot in N-token chunks through the backend's unified
+`extend_step`, so decode slots keep emitting between chunks instead of
+stalling for a whole (vision) prompt. Chunked and whole-prompt prefill
+are token-for-token identical (tests/test_serving_chunked.py).
 """
 
 from __future__ import annotations
@@ -79,6 +85,16 @@ def main(argv=None):
                     help="KV pool length per slot (0 = prompt+gen)")
     ap.add_argument("--image-every", type=int, default=0,
                     help="every k-th request is a VQA request (0 = none)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: cap a prefill chunk at this "
+                         "many tokens (0 = whole-prompt chunks, even if "
+                         "REPRO_SERVE_CHUNK_TOKENS is set; default: "
+                         "consult the env knob)")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget split between decode "
+                         "slots and prefill chunks (0 = unbounded; "
+                         "default: consult REPRO_SERVE_TOKEN_BUDGET, "
+                         "else chunk+slots when chunking)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
@@ -97,7 +113,10 @@ def main(argv=None):
         args.backend, model, params, num_slots=args.concurrency,
         max_len=max_len,
         mesh=get_mesh(args.mesh) if args.backend == "sharded" else None)
-    engine = Engine(backend)
+    # pass through verbatim: None consults the env knobs, an explicit 0
+    # disables (Engine treats 0 as the disable sentinel)
+    engine = Engine(backend, chunk_tokens=args.chunk_tokens,
+                    token_budget=args.token_budget)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
                                    args.gen, image_every=args.image_every)
     t0 = time.time()
@@ -110,8 +129,13 @@ def main(argv=None):
           f"slots={args.concurrency}: {m['requests']} requests, "
           f"{m['total_tokens']} tokens in {wall:.2f}s "
           f"({m['tok_per_s']:.1f} tok/s incl. compile; "
-          f"mean ttft {m['mean_ttft_s'] * 1e3:.0f} ms, "
+          f"ttft p95 {m['ttft_p95_s'] * 1e3:.0f} ms, "
+          f"tbt p95 {m.get('tbt_p95_s', 0.0) * 1e3:.0f} ms, "
           f"p95 latency {m['p95_latency_s']:.2f} s)")
+    if args.chunk_tokens:
+        s = engine.stats
+        print(f"[serve] chunked prefill: {s['prefill_chunks']} chunks / "
+              f"{s['extend_calls']} extend calls over {s['steps']} steps")
     if args.kv_policy == "tiered":
         rep = engine.endurance_report()
         print(f"[serve] endurance: max writes/cold-slot="

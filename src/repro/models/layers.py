@@ -276,7 +276,8 @@ def init_moe(b: ParamBuilder, cfg: ModelConfig):
         init_mlp(sb, cfg, d_ff=m.d_ff_shared, mlp_type="silu_gated")
 
 
-def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array, rules) -> jax.Array:
+def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array, rules,
+              dropless: bool = False) -> jax.Array:
     """Top-k routed experts with per-expert capacity, sort-based dispatch.
 
     Dispatch layout: tokens are sorted by assigned expert and scattered into
@@ -284,6 +285,17 @@ def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array, rules) -> jax.Array:
     parallelism) — XLA materializes the all-to-all at the shard boundary.
     Overflow beyond capacity C is dropped (weights renormalized), matching
     capacity-factor MoE training systems.
+
+    ``dropless`` (the inference/serving path) sets the capacity to the
+    worst case instead: capacity competition couples every token in the
+    batch, so a dropped token depends on WHICH other tokens share its
+    forward — that would make chunked prefill diverge from whole-prompt
+    prefill. With no drops, routing is per-token independent and any
+    chunking of a prompt is bit-identical. Cost: the (E, T, D) worst-case
+    buffer inflates the dispatch einsums ~E/(k*capacity_factor)x over
+    the capacity path — acceptable at serving chunk sizes; a sorted
+    segment-GEMM over the T*k occupied rows is the known optimization if
+    full-size MoE prefill throughput ever matters here.
     """
     from repro.sharding import logical_constraint
     m = cfg.moe
@@ -300,10 +312,14 @@ def apply_moe(p: dict, cfg: ModelConfig, x: jax.Array, rules) -> jax.Array:
 
     k = m.top_k
     E = m.num_experts
-    cap = max(int(T * k / E * m.capacity_factor), 1)
-    # round capacity to MXU-aligned multiple where it matters
-    if cap >= 128:
-        cap = ((cap + 127) // 128) * 128
+    if dropless:
+        # worst case: every token's top-k lands on one expert
+        cap = T
+    else:
+        cap = max(int(T * k / E * m.capacity_factor), 1)
+        # round capacity to MXU-aligned multiple where it matters
+        if cap >= 128:
+            cap = ((cap + 127) // 128) * 128
 
     flat_expert = gate_idx.reshape(-1)                      # (T*k,)
     flat_token = jnp.repeat(jnp.arange(T), k)               # (T*k,)

@@ -272,10 +272,79 @@ class Model:
         return tree_shardings(rules, logical, shapes)
 
     # ------------------------------------------------------------------
+    # extend (chunked-prefill) caches
+    # ------------------------------------------------------------------
+    def _block_extend_abstract(self, spec: BlockSpec, batch: int,
+                               max_len: int) -> tuple[Any, Any]:
+        """(shape tree, logical tree) of one block's chunk-resumable
+        extend state. Attention/MLA blocks carry a full-precision
+        workspace (the accumulated post-RoPE K/V / latents of the chunks
+        so far — the same tensor whole-prompt prefill materializes
+        transiently); recurrent blocks' regular decode states are already
+        chunk-resumable and are reused verbatim."""
+        cfg = self.cfg
+        cd = jnp.dtype(cfg.compute_dtype)
+        if spec.mixer in ("attn", "attn_shared"):
+            inner = (cfg.num_kv_heads, cfg.head_dim)
+            shp = {"k_ws": jnp.zeros((batch, max_len) + inner, cd),
+                   "v_ws": jnp.zeros((batch, max_len) + inner, cd)}
+            ax = ("batch", "kv_seq_shard", "kv_heads", None)
+            lg = {"k_ws": ax, "v_ws": ax}
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            shp = {"c_kv_ws": jnp.zeros((batch, max_len, m.kv_lora_rank),
+                                        cd),
+                   "k_rope_ws": jnp.zeros(
+                       (batch, max_len, m.qk_rope_head_dim), cd)}
+            lg = {"c_kv_ws": ("batch", "kv_seq_shard", None),
+                  "k_rope_ws": ("batch", "kv_seq_shard", None)}
+        else:
+            shp, lg = self._block_cache_abstract(spec, batch, max_len)
+        return shp, lg
+
+    def init_extend_cache(self, batch: int, max_len: int) -> dict:
+        """Fresh (zero) chunk-resumable prefill state for `extend`."""
+        cache = {}
+        for ui, unit in enumerate(self.plan):
+            shp, _ = self._block_extend_abstract(unit.block, batch, max_len)
+            if unit.repeats > 1:
+                shp = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (unit.repeats,) + a.shape), shp)
+            cache[f"u{ui}"] = shp
+        return cache
+
+    def extend_spec(self, batch: int, max_len: int) -> tuple[dict, dict]:
+        """(ShapeDtypeStruct tree, logical tree) for the extend state."""
+        shapes, logical = {}, {}
+        for ui, unit in enumerate(self.plan):
+            shp, lg = self._block_extend_abstract(unit.block, batch,
+                                                  max_len)
+            shp = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), shp)
+            if unit.repeats > 1:
+                shp = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(
+                        (unit.repeats,) + s.shape, s.dtype), shp)
+                lg = jax.tree.map(
+                    lambda ax: (None,) + ax, lg,
+                    is_leaf=lambda x: isinstance(x, tuple))
+            shapes[f"u{ui}"], logical[f"u{ui}"] = shp, lg
+        return shapes, logical
+
+    def extend_shardings(self, rules: ShardingRules, batch: int,
+                         max_len: int):
+        """NamedSharding tree for the extend state (workspace kv_seq over
+        'model', divisibility permitting) — what the sharded backend pins
+        its in-flight prefill lane to."""
+        shapes, logical = self.extend_spec(batch, max_len)
+        return tree_shardings(rules, logical, shapes)
+
+    # ------------------------------------------------------------------
     # forward
     # ------------------------------------------------------------------
-    def _embed(self, params: dict, batch: dict, pos) -> tuple[jax.Array,
-                                                              jax.Array]:
+    def _embed(self, params: dict, batch: dict, pos,
+               ramp: bool = False) -> tuple[jax.Array, jax.Array]:
         cfg = self.cfg
         cd = jnp.dtype(cfg.compute_dtype)
         if cfg.family == "audio":
@@ -283,15 +352,23 @@ class Model:
         elif cfg.frontend is not None and "patches" in batch:
             vis = V.apply_connector(params["frontend"], cfg,
                                     batch["patches"])
-            txt = jnp.take(params["embed"]["table"], batch["tokens"],
-                           axis=0).astype(cd)
-            x = jnp.concatenate([vis, txt], axis=1)
+            if "tokens" in batch:
+                txt = jnp.take(params["embed"]["table"], batch["tokens"],
+                               axis=0).astype(cd)
+                x = jnp.concatenate([vis, txt], axis=1)
+            else:
+                # patches-only extend chunk (a VQA prompt's visual span)
+                x = vis
         else:
             x = jnp.take(params["embed"]["table"], batch["tokens"],
                          axis=0).astype(cd)
         B, Sq = x.shape[:2]
         if pos is None:
             positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        elif ramp:
+            # extend chunk: rows sit at absolute positions pos..pos+Sq-1
+            positions = jnp.broadcast_to(
+                pos + jnp.arange(Sq, dtype=jnp.int32), (B, Sq))
         else:
             positions = jnp.full((B, Sq), pos, jnp.int32)
         if cfg.pos_emb == "learned":
@@ -311,18 +388,27 @@ class Model:
 
     def _run_block(self, spec: BlockSpec, bp: dict, shared_p: dict | None,
                    x: jax.Array, positions: jax.Array, bcache: dict,
-                   pos, mode: str, plen=None
+                   pos, mode: str, plen=None, commit: bool = False
                    ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
         rules = self.rules
         aux = jnp.zeros((), jnp.float32)
         p = shared_p if spec.mixer == "attn_shared" else bp
         build_cache = (mode == "prefill")
+        # extend dispatches on the cache form: workspace dicts ({"k_ws"} /
+        # {"c_kv_ws"}) mean chunk-resumable prefill; the regular store form
+        # means a committed request, where extend-by-1 IS the decode step
+        ext_prefill = mode == "extend" and bcache is not None and (
+            "k_ws" in bcache or "c_kv_ws" in bcache)
         # pre-norm -> mixer -> residual
         h = fusion.apply_norm(p["ln1"], cfg, x)
         new_cache = dict(bcache) if bcache else {}
         if spec.mixer in ("attn", "attn_shared"):
-            if mode == "decode":
+            if mode == "extend" and ext_prefill:
+                out, new_cache = fusion.apply_attention_extend(
+                    p["mixer"], cfg, h, positions, bcache, pos, plen,
+                    rules, commit)
+            elif mode == "decode" or mode == "extend":
                 out, nc = fusion.apply_attention_decode(
                     p["mixer"], cfg, h, bcache, pos, rules)
                 new_cache = nc
@@ -338,7 +424,11 @@ class Model:
                 if nc is not None:
                     new_cache = nc
         elif spec.mixer == "mla":
-            if mode == "decode":
+            if mode == "extend" and ext_prefill:
+                out, new_cache = fusion.apply_mla_extend(
+                    p["mixer"], cfg, h, positions, bcache, pos, plen,
+                    rules, commit)
+            elif mode == "decode" or mode == "extend":
                 out, new_cache = fusion.apply_mla_decode(
                     p["mixer"], cfg, h, bcache, pos, rules)
             else:
@@ -383,8 +473,12 @@ class Model:
                         else spec.d_ff)
                 kind = ("silu_gated" if spec.mlp == "dense_first"
                         else spec.mlp)
+                # inference routing is dropless: capacity competition
+                # couples tokens across the batch, which would make
+                # chunked prefill depend on the chunking
                 out2 = fusion.apply_ffn(p["mlp"], cfg, h2, rules,
-                                        mlp_type=kind, d_ff=d_ff)
+                                        mlp_type=kind, d_ff=d_ff,
+                                        dropless_moe=(mode != "full"))
                 if spec.mlp == "moe" and mode == "full":
                     aux = aux + L.moe_aux_loss(p["mlp"], cfg, h2)
             x = x + out2
@@ -394,7 +488,7 @@ class Model:
 
     def _run_unit(self, ui: int, unit: UnitSpec, params: dict,
                   x: jax.Array, positions: jax.Array, ucache: dict,
-                  pos, mode: str, plen=None
+                  pos, mode: str, plen=None, commit: bool = False
                   ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
         shared_p = params.get("shared_attn")
@@ -402,7 +496,7 @@ class Model:
 
         def body(x, bp, bc):
             return self._run_block(unit.block, bp, shared_p, x, positions,
-                                   bc, pos, mode, plen)
+                                   bc, pos, mode, plen, commit)
 
         if mode == "full" and cfg.remat != "none":
             policy = (jax.checkpoint_policies.checkpoint_dots
@@ -437,10 +531,11 @@ class Model:
         return x, new_cache, aux_t
 
     def _forward(self, params: dict, batch: dict, mode: str,
-                 cache: dict | None, pos, plen=None
+                 cache: dict | None, pos, plen=None, commit: bool = False
                  ) -> tuple[jax.Array, dict, jax.Array]:
         cfg = self.cfg
-        x, positions = self._embed(params, batch, pos)
+        x, positions = self._embed(params, batch, pos,
+                                   ramp=(mode == "extend"))
         if cache is None:
             cache = {f"u{ui}": {} for ui in range(len(self.plan))}
         new_cache = {}
@@ -448,15 +543,15 @@ class Model:
         for ui, unit in enumerate(self.plan):
             x, nc, aux = self._run_unit(
                 ui, unit, params, x, positions, cache[f"u{ui}"], pos, mode,
-                plen)
+                plen, commit)
             new_cache[f"u{ui}"] = nc
             aux_total = aux_total + aux
         x = fusion.apply_norm(params["final_norm"], cfg, x)
-        if mode == "prefill":
+        if mode in ("prefill", "extend"):
             if plen is None:
                 x = x[:, -1:]
             else:
-                # right-padded prompt: the "last token" is at plen - 1
+                # right-padded prompt/chunk: the last VALID row is plen - 1
                 x = jax.lax.dynamic_slice_in_dim(x, plen - 1, 1, axis=1)
         if cfg.tie_embeddings:
             logits = jnp.einsum(
@@ -506,12 +601,42 @@ class Model:
             params, batch, "prefill", cache, None, plen=length)
         return logits, new_cache
 
+    def extend(self, params: dict, batch: dict, cache: dict, pos,
+               length=None, commit: bool = False
+               ) -> tuple[jax.Array, dict]:
+        """Multi-token cache extension — the unified serving entry point.
+
+        Processes a chunk of the sequence whose rows sit at absolute
+        positions ``pos .. pos + C - 1`` (C from the batch shape; the
+        first ``length`` rows are valid, the rest padding). Generalizes
+        the two-phase serving surface:
+
+        * chunked prefill — ``cache`` is the workspace form from
+          `init_extend_cache`: the chunk attends the accumulated
+          full-precision workspace causally, so any chunking of a prompt
+          is token-for-token identical to whole-prompt `prefill`.
+          ``commit=True`` on the final chunk folds the workspace into the
+          regular flat/CHIME-tiered stores (ready to scatter into a pool
+          slot); recurrent (SSM/RWKV) states are chunk-resumable as-is
+          and pass through. Recurrent architectures need exact-length,
+          `cfg.ssm.chunk_size`-aligned chunks (see
+          `InferenceBackend.requires_exact_prefill` / `chunk_unit`).
+        * decode — ``cache`` in the committed store form with a 1-token
+          batch is exactly `decode_step` (append at ``pos``, attend the
+          tiered/flat stores).
+
+        Returns (logits of the last valid row (B,1,V), new cache)."""
+        if self.cfg.is_encoder:
+            raise ValueError("encoder-only model cannot extend a cache")
+        logits, new_cache, _ = self._forward(
+            params, batch, "extend", cache, pos, plen=length,
+            commit=commit)
+        return logits, new_cache
+
     def decode_step(self, params: dict, tokens: jax.Array, cache: dict,
                     pos) -> tuple[jax.Array, dict]:
         """One decode step: tokens (B,1) int32, pos scalar int32 = index the
-        new token is written at (number of tokens already cached)."""
-        if self.cfg.is_encoder:
-            raise ValueError("encoder-only model has no decode step")
-        logits, new_cache, _ = self._forward(
-            params, {"tokens": tokens}, "decode", cache, pos)
-        return logits, new_cache
+        new token is written at (number of tokens already cached). A thin
+        wrapper over `extend` (extend-by-1 on a committed cache)."""
+        return self.extend(params, {"tokens": tokens}, cache, pos,
+                           length=1)

@@ -89,12 +89,32 @@ def _rwkv6_finish(p: dict, cfg: ModelConfig, y: jax.Array,
     return out * g
 
 
+def _pad_to_grid(S: int, chunk: int, *tensors):
+    """Zero-pad (B,S,...) tensors along axis 1 to the next multiple of
+    ``chunk``. Zero inputs are *identity elements* of both recurrences
+    (k=v=0 adds nothing to the state; logw=0 / dt=0 means decay exp(0)=1),
+    so a padded tail leaves the carried state bit-identical to processing
+    the exact length. This is what makes the chunk grid canonical: a
+    sequence processed whole and the same sequence processed as
+    chunk-aligned extend() slices run the exact same op sequence, which
+    the chunked-prefill parity tests rely on."""
+    S_pad = ((S + chunk - 1) // chunk) * chunk
+    if S_pad == S:
+        return tensors
+    pad = S_pad - S
+    return tuple(
+        jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        for t in tensors)
+
+
 def wkv6_chunked(r, k, v, logw, u, state0, chunk: int):
     """Chunked WKV6. r,k,v,logw: (B,S,H,K) [f32 math]; u: (H,K);
-    state0: (B,H,K,K) [key-dim, value-dim]. Returns y (B,S,H,K), state."""
+    state0: (B,H,K,K) [key-dim, value-dim]. Returns y (B,S,H,K), state.
+    S need not divide ``chunk``: the tail is identity-padded (see
+    `_pad_to_grid`), so the state after S tokens is exact."""
     B, S, H, K = r.shape
-    assert S % chunk == 0, (S, chunk)
-    N = S // chunk
+    r, k, v, logw = _pad_to_grid(S, chunk, r, k, v, logw)
+    N = r.shape[1] // chunk
     f32 = jnp.float32
     rc = r.astype(f32).reshape(B, N, chunk, H, K)
     kc = k.astype(f32).reshape(B, N, chunk, H, K)
@@ -134,7 +154,7 @@ def wkv6_chunked(r, k, v, logw, u, state0, chunk: int):
     state, y_inter = jax.lax.scan(inter_step, state0.astype(f32), xs2)
     y_inter = jnp.moveaxis(y_inter, 0, 1)                     # (B,N,c,H,K)
 
-    y = (y_intra + y_inter).reshape(B, S, H, K)
+    y = (y_intra + y_inter).reshape(B, N * chunk, H, K)[:, :S]
     return y, state
 
 
@@ -166,11 +186,9 @@ def apply_rwkv6(p: dict, cfg: ModelConfig, x: jax.Array,
         s = jnp.exp(wt)[..., None] * s + kt[..., None] * vt[..., None, :]
         y = y[:, None]                                        # (B,1,H,K)
     else:
+        # canonical grid: absolute blocks of chunk_size (identity-padded
+        # tail) so chunk-aligned extend() splits are bit-exact vs whole
         chunk = min(cfg.ssm.chunk_size, S)
-        if S % chunk != 0:
-            chunk = 1
-            while S % (chunk * 2) == 0 and chunk * 2 <= cfg.ssm.chunk_size:
-                chunk *= 2
         y, s = wkv6_chunked(r, k, v, logw, u, state["s"], chunk)
         y = y.reshape(B, S, H, K)
 
@@ -216,10 +234,13 @@ def init_mamba2(b: ParamBuilder, cfg: ModelConfig):
 
 def ssd_chunked(xh, Bm, Cm, dt, a_log, state0, chunk: int):
     """Chunked SSD. xh: (B,S,H,P) head inputs; Bm,Cm: (B,S,n); dt: (B,S,H);
-    state0: (B,H,P,n). Returns y (B,S,H,P), state."""
+    state0: (B,H,P,n). Returns y (B,S,H,P), state. S need not divide
+    ``chunk``: the tail is identity-padded (dt=0 -> decay 1, xh*dt=0), so
+    the state after S tokens is exact (see `_pad_to_grid`)."""
     B, S, H, P = xh.shape
     n = Bm.shape[-1]
-    N = S // chunk
+    xh, Bm, Cm, dt = _pad_to_grid(S, chunk, xh, Bm, Cm, dt)
+    N = xh.shape[1] // chunk
     f32 = jnp.float32
     loga = (-jnp.exp(a_log.astype(f32)) * dt.astype(f32))     # (B,S,H) < 0
     xc = (xh.astype(f32) * dt.astype(f32)[..., None]) \
@@ -258,7 +279,7 @@ def ssd_chunked(xh, Bm, Cm, dt, a_log, state0, chunk: int):
     state, y_inter = jax.lax.scan(inter_step, state0.astype(f32), xs2)
     y_inter = jnp.moveaxis(y_inter, 0, 1)
 
-    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = (y_intra + y_inter).reshape(B, N * chunk, H, P)[:, :S]
     return y, state
 
 
@@ -301,11 +322,8 @@ def apply_mamba2(p: dict, cfg: ModelConfig, x: jax.Array,
                        Cm[:, 0].astype(jnp.float32))[:, None]
         ssm_state = s_new
     else:
+        # canonical grid (see apply_rwkv6): chunk-aligned splits bit-exact
         chunk = min(cfg.ssm.chunk_size, S)
-        if S % chunk != 0:
-            chunk = 1
-            while S % (chunk * 2) == 0 and chunk * 2 <= cfg.ssm.chunk_size:
-                chunk *= 2
         y, ssm_state = ssd_chunked(xh, Bm, Cm, dt, p["a_log"],
                                    state["ssm"], chunk)
 

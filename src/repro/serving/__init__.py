@@ -9,18 +9,23 @@ single-request `launch/serve.py` path into a serving engine:
 * `request.py`   — request/timing dataclasses and the FCFS stream
 * `kv_pool.py`   — model-free slot pool: `KVPoolState` (explicit typed
                    pytree) + host-side slot bookkeeping + endurance audit
-* `scheduler.py` — FCFS + capacity-aware admission against the DRAM/RRAM
-                   byte budgets of simulator/hardware.py
-* `backend.py`   — the `InferenceBackend` executor seam: `LocalBackend`
+* `scheduler.py` — `StepPlan` production: FCFS + capacity-aware admission
+                   against the DRAM/RRAM byte budgets of
+                   simulator/hardware.py + Sarathi-style chunked prefill
+                   under a per-step token budget
+* `backend.py`   — the `InferenceBackend` executor seam: the unified
+                   jitted `extend_step` (chunked prefill directly into a
+                   pool slot) + `decode_step`; `LocalBackend`
                    (single-host vmapped decode) and `ShardedBackend`
                    (pjit over a launch/mesh.py mesh; params sharded by
                    the model's rules, KV pool slots over 'data', cold
                    kv_seq/heads over 'model')
-* `engine.py`    — interleaved prefill/decode step loop over a backend
-                   (one jitted decode over all slots; static shapes so
-                   the backend compiles once)
-* `metrics.py`   — per-request latency + aggregate tok/s + simulated
-                   tokens/J via simulator/chime_sim.py cost terms
+* `engine.py`    — StepPlan executor over a backend: prefill chunks then
+                   one jitted decode over all slots (static shapes so
+                   the backend compiles once per chunk shape)
+* `metrics.py`   — per-request latency + TTFT/TBT percentiles +
+                   aggregate tok/s + simulated tokens/J via
+                   simulator/chime_sim.py cost terms
 """
 
 from repro.serving.backend import (InferenceBackend, LocalBackend,
@@ -28,13 +33,16 @@ from repro.serving.backend import (InferenceBackend, LocalBackend,
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool,
                                    slot_kv_bytes)
-from repro.serving.metrics import aggregate_metrics, simulated_efficiency
+from repro.serving.metrics import (aggregate_metrics, request_metrics,
+                                   simulated_efficiency)
 from repro.serving.request import Request, make_synthetic_requests
-from repro.serving.scheduler import CapacityBudget, FCFSScheduler
+from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
+                                     PrefillChunk, StepPlan)
 
 __all__ = [
     "Engine", "InferenceBackend", "KVPoolState", "LocalBackend",
-    "ShardedBackend", "TieredKVPool", "aggregate_metrics", "make_backend",
-    "make_synthetic_requests", "simulated_efficiency", "slot_kv_bytes",
+    "PrefillChunk", "ShardedBackend", "StepPlan", "TieredKVPool",
+    "aggregate_metrics", "make_backend", "make_synthetic_requests",
+    "request_metrics", "simulated_efficiency", "slot_kv_bytes",
     "Request", "CapacityBudget", "FCFSScheduler",
 ]

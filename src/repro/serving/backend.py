@@ -7,8 +7,19 @@ A backend owns three things the engine must never reach into directly:
     or pjit-sharded over a mesh),
   * the KV pool layout, handed out as an explicit typed pytree
     (`kv_pool.KVPoolState`) rather than a model-aware object, and
-  * the jitted `prefill(batch, length)` / `decode_step(toks, state, pos,
-    active)` entry points plus the slot-insert arithmetic.
+  * the jitted step programs: `extend_step(batch, state, ext, slot, pos,
+    length, commit)` — the unified multi-token cache extension (chunked
+    prefill directly into an already-allocated pool slot) — and
+    `decode_step(toks, state, pos, active)` (one token on every active
+    slot).
+
+The old two-phase admission surface — `prefill(batch, length)` building a
+detached batch-1 cache, then `insert(state, req_cache, slot)` scattering
+it into the pool — is subsumed by `extend_step`: the final (``commit``)
+chunk folds the in-flight workspace into the flat/tiered stores and
+scatters them into the slot inside one jitted program. `prefill` and
+`insert` remain as one-release deprecation shims (DeprecationWarning),
+mirroring the PR 2 `Engine(model, params)` shim.
 
 Two implementations ship:
 
@@ -33,6 +44,7 @@ async prefill, disaggregated tiers) plugs in.
 
 from __future__ import annotations
 
+import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -52,7 +64,10 @@ class InferenceBackend(Protocol):
     num_slots: int            # decode slots the pool is laid out for
     max_len: int              # per-slot KV length
     hot_window: int           # effective hot-ring length (endurance audit)
-    requires_exact_prefill: bool   # recurrent states forbid padded buckets
+    requires_exact_prefill: bool   # recurrent states forbid padded chunks
+    chunk_unit: int           # non-final chunk lengths must be multiples
+    #   of this (cfg.ssm.chunk_size for recurrent archs, else 1) so the
+    #   model's canonical SSM chunk grid stays split-invariant
 
     def slot_kv_bytes(self) -> tuple[int, int]:
         """(dram_hot, rram_cold) bytes one resident request pins."""
@@ -62,9 +77,19 @@ class InferenceBackend(Protocol):
         """Fresh slot pool wired to this backend's insert arithmetic."""
         ...
 
-    def prefill(self, batch: dict, length: int
-                ) -> tuple[jax.Array, dict]:
-        """Prefill one request -> (first greedy token, batch-1 cache)."""
+    def fresh_extend(self) -> dict:
+        """Zero chunk-resumable prefill state (one in-flight lane); built
+        once and reused — every extend is functional."""
+        ...
+
+    def extend_step(self, batch: dict, state: KVPoolState, ext: dict,
+                    slot, pos, length, commit: bool
+                    ) -> tuple[jax.Array | None, dict | None, KVPoolState]:
+        """Advance one in-flight prefill by a chunk of ``length`` valid
+        tokens at absolute position ``pos``. Non-commit chunks return
+        (None, new_ext, state-unchanged); the ``commit`` chunk folds the
+        workspace into the stores, scatters them into pool slot ``slot``
+        and returns (first greedy token, None, new state)."""
         ...
 
     def decode_step(self, toks, state: KVPoolState, pos, active
@@ -73,9 +98,16 @@ class InferenceBackend(Protocol):
         is kept verbatim (no phantom appends, no endurance drift)."""
         ...
 
+    def prefill(self, batch: dict, length: int
+                ) -> tuple[jax.Array, dict]:
+        """DEPRECATED (use `extend_step`): whole-prompt prefill to a
+        detached batch-1 cache."""
+        ...
+
     def insert(self, state: KVPoolState, req_cache: dict, slot
                ) -> KVPoolState:
-        """Overwrite slot ``slot`` with a batch-1 per-request cache."""
+        """DEPRECATED (use `extend_step`): scatter a batch-1 cache into
+        slot ``slot``."""
         ...
 
 
@@ -101,12 +133,20 @@ class _JittedBackend:
         # padded sequence, so those architectures need exact-length prefill
         self.requires_exact_prefill = any(
             u.block.mixer in ("rwkv6", "mamba2") for u in model.plan)
+        # non-final chunks must land on the canonical SSM chunk grid for
+        # chunked prefill to stay bit-identical to whole-prompt prefill
+        self.chunk_unit = (cfg.ssm.chunk_size
+                           if self.requires_exact_prefill and cfg.ssm
+                           else 1)
         shapes, _ = model.cache_spec(num_slots, max_len)
         self._axes = batch_axes(model, shapes)
         self._zero_slot = None
+        self._zero_ext = None
         self._step = jax.jit(self._build_step())
         self._prefill = jax.jit(self._build_prefill())
         self._insert = jax.jit(self._build_insert())
+        self._ext_part = jax.jit(self._build_extend(commit=False))
+        self._ext_commit = jax.jit(self._build_extend(commit=True))
 
     # ---- placement hooks (ShardedBackend overrides) ------------------
     def _place(self, cache: dict) -> dict:
@@ -114,6 +154,12 @@ class _JittedBackend:
 
     def _constrain(self, cache: dict) -> dict:
         return cache
+
+    def _place_ext(self, ext: dict) -> dict:
+        return ext
+
+    def _constrain_ext(self, ext: dict) -> dict:
+        return ext
 
     # ---- jitted program builders -------------------------------------
     def _build_step(self):
@@ -165,6 +211,29 @@ class _JittedBackend:
 
         return insert
 
+    def _build_extend(self, commit: bool):
+        model, axes = self.model, self._axes
+
+        if not commit:
+            def ext_part(p, batch, ext, pos, length):
+                _, new_ext = model.extend(p, batch, ext, pos, length)
+                return self._constrain_ext(new_ext)
+            return ext_part
+
+        def ext_commit(p, batch, pool, ext, slot, pos, length):
+            # final chunk: the committed store-form cache scatters into
+            # the already-allocated pool slot in the same program
+            logits, committed = model.extend(p, batch, ext, pos, length,
+                                             commit=True)
+            tok = jnp.argmax(logits[0, -1], -1).astype(jnp.int32)
+            pool = jax.tree.map(
+                lambda pl, r, a: jax.lax.dynamic_update_slice_in_dim(
+                    pl, r.astype(pl.dtype), slot, axis=a),
+                pool, committed, axes)
+            return tok, self._constrain(pool)
+
+        return ext_commit
+
     # ---- InferenceBackend surface ------------------------------------
     def slot_kv_bytes(self) -> tuple[int, int]:
         return slot_kv_bytes(self.model, self.max_len)
@@ -181,12 +250,32 @@ class _JittedBackend:
             self._zero_slot = self.model.init_cache(1, self.max_len)
         return self._zero_slot
 
-    def make_pool(self) -> TieredKVPool:
-        return TieredKVPool(self.init_pool(), self.insert, self.fresh_slot)
+    def fresh_extend(self) -> dict:
+        """Zero extend state (one in-flight prefill lane); built once and
+        reused — extend is functional, and stale workspace tails beyond a
+        committed length are never attendable, so sharing is safe. Only
+        the recurrent-state leaves genuinely need the zeros."""
+        if self._zero_ext is None:
+            self._zero_ext = self._place_ext(
+                self.model.init_extend_cache(1, self.max_len))
+        return self._zero_ext
 
-    def prefill(self, batch: dict, length) -> tuple[jax.Array, dict]:
-        return self._prefill(self.params, batch,
-                             jnp.asarray(length, jnp.int32))
+    def make_pool(self) -> TieredKVPool:
+        return TieredKVPool(self.init_pool(), self._insert_state,
+                            self.fresh_slot)
+
+    def extend_step(self, batch: dict, state: KVPoolState, ext: dict,
+                    slot, pos, length, commit: bool
+                    ) -> tuple[jax.Array | None, dict | None, KVPoolState]:
+        pos = jnp.asarray(pos, jnp.int32)
+        length = jnp.asarray(length, jnp.int32)
+        if not commit:
+            new_ext = self._ext_part(self.params, batch, ext, pos, length)
+            return None, new_ext, state
+        tok, cache = self._ext_commit(
+            self.params, batch, state.cache, ext,
+            jnp.asarray(slot, jnp.int32), pos, length)
+        return tok, None, KVPoolState(cache=cache, axes=state.axes)
 
     def decode_step(self, toks, state: KVPoolState, pos, active
                     ) -> tuple[jax.Array, KVPoolState]:
@@ -195,11 +284,30 @@ class _JittedBackend:
             jnp.asarray(pos), jnp.asarray(active))
         return ntoks, KVPoolState(cache=cache, axes=state.axes)
 
-    def insert(self, state: KVPoolState, req_cache: dict, slot
-               ) -> KVPoolState:
+    def _insert_state(self, state: KVPoolState, req_cache: dict, slot
+                     ) -> KVPoolState:
+        """Scatter a batch-1 cache into slot ``slot`` (pool internals:
+        recycling scrubs; not part of the serving step surface)."""
         cache = self._insert(state.cache, req_cache,
                              jnp.asarray(slot, jnp.int32))
         return KVPoolState(cache=cache, axes=state.axes)
+
+    # ---- one-release deprecation shims (PR 3) ------------------------
+    def prefill(self, batch: dict, length) -> tuple[jax.Array, dict]:
+        warnings.warn(
+            "InferenceBackend.prefill is deprecated; admission now runs "
+            "through extend_step (chunked prefill directly into the pool "
+            "slot)", DeprecationWarning, stacklevel=2)
+        return self._prefill(self.params, batch,
+                             jnp.asarray(length, jnp.int32))
+
+    def insert(self, state: KVPoolState, req_cache: dict, slot
+               ) -> KVPoolState:
+        warnings.warn(
+            "InferenceBackend.insert is deprecated; the commit chunk of "
+            "extend_step scatters the request cache into its slot",
+            DeprecationWarning, stacklevel=2)
+        return self._insert_state(state, req_cache, slot)
 
 
 class LocalBackend(_JittedBackend):
@@ -234,6 +342,7 @@ class ShardedBackend(_JittedBackend):
         self.rules = rules or ShardingRules(mesh)
         self._pool_sh = model.cache_shardings(self.rules, num_slots,
                                               max_len)
+        self._ext_sh = model.extend_shardings(self.rules, 1, max_len)
         params = jax.device_put(params,
                                 model.param_shardings(self.rules))
         super().__init__(model, params, num_slots, max_len)
@@ -243,6 +352,12 @@ class ShardedBackend(_JittedBackend):
 
     def _constrain(self, cache: dict) -> dict:
         return jax.lax.with_sharding_constraint(cache, self._pool_sh)
+
+    def _place_ext(self, ext: dict) -> dict:
+        return jax.device_put(ext, self._ext_sh)
+
+    def _constrain_ext(self, ext: dict) -> dict:
+        return jax.lax.with_sharding_constraint(ext, self._ext_sh)
 
 
 def make_backend(kind: str, model: Model, params, *, num_slots: int,

@@ -1,19 +1,33 @@
-"""Continuous-batching engine: interleaved prefill admission + one backend
-decode step over all slots.
+"""Continuous-batching engine driven by per-step work plans: chunked
+prefill through the unified `extend_step` + one backend decode step.
 
 Step anatomy (one `Engine.step()` call):
 
-  1. admission — while a slot is free AND the FCFS scheduler's capacity
-     budgets admit another resident request, prefill the queue head
-     (right-padded to a shape bucket so jit reuses traces) and overwrite a
-     pool slot with its fresh per-request tiered cache;
-  2. decode — ONE backend call advances every slot: `backend.decode_step`
-     runs the jitted per-slot decode (vmapped locally, pjit-sharded on a
-     mesh) so each slot attends its own hot ring + cold tier at its own
-     position. Slot shapes are static; the backend compiles once.
-  3. retire — slots whose request hit EOS or max_new_tokens are freed for
-     recycling; inactive slots' cache writes are masked out, so endurance
-     counters only ever reflect real occupancies.
+  1. plan — the scheduler emits a `StepPlan`: under the step's token
+     budget (decode slots take one token each), the in-flight prompt
+     advances by prefill chunks of at most ``chunk_tokens`` positions,
+     and the FCFS queue head is admitted (slot + DRAM/RRAM byte budgets
+     permitting) once the previous prompt committed;
+  2. prefill chunks — each chunk is ONE `backend.extend_step` call that
+     extends the in-flight request's chunk-resumable state; the final
+     (``commit``) chunk folds it into the already-allocated pool slot and
+     yields the request's first greedy token. A VQA prompt's visual span
+     is chunked in patch space and its text tail in token space, split at
+     the modality boundary;
+  3. decode — ONE backend call advances every active slot:
+     `backend.decode_step` runs the jitted per-slot decode (vmapped
+     locally, pjit-sharded on a mesh). Slot shapes are static; the
+     backend compiles once per chunk shape;
+  4. retire — slots whose request hit EOS or max_new_tokens are freed
+     for recycling; inactive slots' cache writes are masked out, so
+     endurance counters only ever reflect real occupancies.
+
+With the default knobs (no token budget, no chunk cap) a prompt prefills
+in one chunk and the engine reproduces the PR 1/2 admit-whole-prompt
+loop token-for-token. With a budget, long vision prompts no longer stall
+every decode slot for the full prompt duration — decode slots keep
+emitting between chunks (Sarathi-style chunked prefill), which is what
+bounds TBT on the paper's multimodal workloads.
 
 The engine is execution-agnostic: it talks to an
 `serving.backend.InferenceBackend` and a model-free `TieredKVPool`, so
@@ -25,6 +39,8 @@ callback as they are produced.
 
 from __future__ import annotations
 
+import dataclasses
+import os
 import time
 import warnings
 
@@ -32,7 +48,8 @@ import numpy as np
 
 from repro.serving.backend import InferenceBackend, LocalBackend
 from repro.serving.request import FINISHED, RUNNING, Request
-from repro.serving.scheduler import CapacityBudget, FCFSScheduler
+from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
+                                     PrefillChunk, StepPlan)
 from repro.simulator.hardware import CHIME
 
 
@@ -45,13 +62,53 @@ def bucket_len(n: int, minimum: int = 8) -> int:
     return b
 
 
+def _env_int(name: str) -> int | None:
+    """Env knob: a positive int enables, an explicit 0 disables (returned
+    as 0 so it is distinguishable from unset), empty/absent returns None;
+    anything else is ignored with a warning (an env var should never
+    wedge startup)."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    try:
+        v = int(raw)
+    except ValueError:
+        warnings.warn(f"ignoring non-integer {name}={raw!r}")
+        return None
+    if v < 0:
+        warnings.warn(f"ignoring negative {name}={v}")
+        return None
+    return v
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """The one prompt currently prefilling: its pool slot is already
+    allocated (it pins the byte budgets) and ``ext`` carries the
+    chunk-resumable state between extend calls."""
+    req: Request
+    slot: int
+    pos: int
+    ext: dict
+
+
 class Engine:
-    """Continuous-batching serving engine over an InferenceBackend."""
+    """Continuous-batching serving engine over an InferenceBackend.
+
+    ``chunk_tokens`` caps a single prefill chunk and ``token_budget``
+    caps the total tokens per step (decode slots included); both default
+    to the ``REPRO_SERVE_CHUNK_TOKENS`` / ``REPRO_SERVE_TOKEN_BUDGET``
+    env knobs, then to None (whole-prompt chunks — the pre-StepPlan
+    behavior). When only ``chunk_tokens`` is set, the budget defaults to
+    ``chunk_tokens + num_slots`` (one chunk plus all decode slots per
+    step)."""
 
     def __init__(self, backend, params=None, num_slots: int | None = None,
                  max_len: int | None = None,
                  scheduler: FCFSScheduler | None = None,
-                 platform=CHIME, clock=time.perf_counter):
+                 platform=CHIME, clock=time.perf_counter,
+                 token_budget: int | None = None,
+                 chunk_tokens: int | None = None):
         if params is not None or num_slots is not None or max_len is not None:
             # one-release compat shim: Engine(model, params, num_slots=,
             # max_len=) builds the local backend the seed engine inlined
@@ -66,10 +123,55 @@ class Engine:
         self.clock = clock
         self.pool = backend.make_pool()
         hot_b, cold_b = backend.slot_kv_bytes()
+        if chunk_tokens is None:
+            chunk_tokens = _env_int("REPRO_SERVE_CHUNK_TOKENS")
+        if token_budget is None:
+            token_budget = _env_int("REPRO_SERVE_TOKEN_BUDGET")
+        # 0 is the explicit "disable" sentinel for both knobs (whole
+        # prompts / unbounded budget — even when the env knob is set).
+        # An explicitly unbounded budget is NOT rebound to the
+        # chunk+slots default.
+        for name, v in (("chunk_tokens", chunk_tokens),
+                        ("token_budget", token_budget)):
+            if v is not None and v < 0:
+                raise ValueError(f"{name} must be >= 0 or None, got {v}")
+        explicit_unbounded = token_budget == 0
+        chunk_tokens = chunk_tokens or None
+        token_budget = token_budget or None
+        if (token_budget is None and not explicit_unbounded
+                and chunk_tokens is not None):
+            token_budget = chunk_tokens + backend.num_slots
         if scheduler is None:
             scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
-                                      hot_b, cold_b)
+                                      hot_b, cold_b,
+                                      token_budget=token_budget,
+                                      chunk_tokens=chunk_tokens)
+        elif not isinstance(scheduler, FCFSScheduler) or (
+                type(scheduler).plan is not FCFSScheduler.plan):
+            pass  # custom planner: it owns its own chunking policy
+        else:
+            # apply resolved knobs to a provided base-plan scheduler so
+            # Engine(..., scheduler=..., chunk_tokens=N) and the
+            # REPRO_SERVE_* env forcing are not silently dropped; the
+            # scheduler's own explicitly-set knobs win
+            if scheduler.chunk_tokens is None and chunk_tokens is not None:
+                scheduler.chunk_tokens = chunk_tokens
+            if scheduler.token_budget is None and token_budget is not None:
+                scheduler.token_budget = token_budget
         self.scheduler = scheduler
+        # one-release compat: a PR 1/2-era scheduler subclass that
+        # overrides next_request (custom admission policy) but not plan()
+        # would silently regress to base-class FCFS planning — drive it
+        # through a whole-prompt legacy adapter instead (see _plan_legacy)
+        self._legacy_sched = (
+            type(scheduler).next_request is not FCFSScheduler.next_request
+            and type(scheduler).plan is FCFSScheduler.plan)
+        if self._legacy_sched:
+            warnings.warn(
+                "scheduler overrides next_request but not plan(); the "
+                "engine will drive it through a whole-prompt admission "
+                "adapter (no chunked prefill). Override plan() instead",
+                DeprecationWarning, stacklevel=2)
         if scheduler.max_concurrent < 1:
             raise ValueError(
                 f"one slot's KV state ({hot_b} hot + {cold_b} cold bytes) "
@@ -87,8 +189,11 @@ class Engine:
         # lengths of the CURRENT/LAST occupant (endurance audit input)
         self._slot_prefill_len = [0] * n
         self._slot_total_len = [0] * n
+        self._inflight: _Inflight | None = None
         self.finished: list[Request] = []
         self._next_rid = 0
+        self.stats = {"steps": 0, "prefill_chunks": 0, "extend_calls": 0,
+                      "decode_steps": 0, "decode_tokens": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -105,57 +210,107 @@ class Engine:
         self.scheduler.submit(req)
         return req
 
-    def _make_batch(self, req: Request) -> dict:
-        s = int(req.tokens.shape[0])
-        vis = 0 if req.patches is None else int(req.patches.shape[0])
+    # ------------------------------------------------------------------
+    # prefill chunks
+    # ------------------------------------------------------------------
+    def _pad_target(self, valid: int, pos: int) -> int:
+        """Chunk padding width: exact for recurrent architectures (padded
+        rows would corrupt the carried states), the fixed chunk cap when
+        chunking (one trace per modality), else the admission bucket (the
+        seed's O(log max_prompt) trace bound). Never pads past the slot
+        length so the workspace write stays in bounds."""
         if self.backend.requires_exact_prefill:
-            target = s
-        else:
-            # bucket the text tail, but never pad the prefill sequence
-            # (visual tokens + text) past the pool's slot length
-            target = max(min(bucket_len(s), self.max_len - vis), s)
-        pad = target - s
-        toks = np.concatenate(
-            [np.asarray(req.tokens, np.int32),
-             np.zeros((pad,), np.int32)])[None]
-        # plain numpy: the backend's jitted prefill places these however
-        # its execution strategy requires
-        batch = {"tokens": toks}
-        if req.patches is not None:
-            batch["patches"] = np.asarray(req.patches, np.float32)[None]
-        return batch
+            return valid
+        cap = getattr(self.scheduler, "chunk_tokens", None)
+        if cap:
+            return max(valid, min(cap, self.max_len - pos))
+        return max(min(bucket_len(valid), self.max_len - pos), valid)
+
+    def _chunk_batch(self, req: Request, kind: str, a: int, b: int,
+                     pos: int) -> tuple[dict, int]:
+        """Batch for the chunk covering absolute positions [a, b) of the
+        prompt, single-modality by construction (``kind``). Right-pads to
+        `_pad_target`; padded rows' K/V land beyond the chunk's valid
+        length where they are never attendable and are overwritten by the
+        next chunk."""
+        valid = b - a
+        target = self._pad_target(valid, pos)
+        if kind == "patches":
+            part = np.asarray(req.patches[a:b], np.float32)
+            if target > valid:
+                part = np.concatenate(
+                    [part, np.zeros((target - valid,) + part.shape[1:],
+                                    np.float32)])
+            return {"patches": part[None]}, valid
+        vis = 0 if req.patches is None else int(req.patches.shape[0])
+        part = np.asarray(req.tokens[a - vis:b - vis], np.int32)
+        if target > valid:
+            part = np.concatenate(
+                [part, np.zeros((target - valid,), np.int32)])
+        return {"tokens": part[None]}, valid
+
+    def _run_chunk(self, ch: PrefillChunk) -> list[tuple[int, int, bool]]:
+        """Execute one planned chunk: allocate the slot on admission,
+        split at the patch/text modality boundary, run the extend calls,
+        and stream the first token when the prompt commits."""
+        if ch.admit:
+            slot = self.pool.alloc()
+            self._inflight = _Inflight(req=ch.req, slot=slot, pos=0,
+                                       ext=self.backend.fresh_extend())
+        fl = self._inflight
+        assert fl is not None and fl.req is ch.req and fl.pos == ch.start
+        req = ch.req
+        vis = 0 if req.patches is None else int(req.patches.shape[0])
+        end = ch.start + ch.length
+        parts: list[tuple[str, int, int]] = []
+        if ch.start < vis:
+            parts.append(("patches", ch.start, min(end, vis)))
+        if end > vis:
+            parts.append(("tokens", max(ch.start, vis), end))
+        tok = None
+        for i, (kind, a, b) in enumerate(parts):
+            commit = ch.commit and i == len(parts) - 1
+            batch, valid = self._chunk_batch(req, kind, a, b, fl.pos)
+            tok, ext, state = self.backend.extend_step(
+                batch, self.pool.state, fl.ext, fl.slot, fl.pos, valid,
+                commit)
+            if commit:
+                self.pool.state = state
+            else:
+                fl.ext = ext
+            fl.pos += valid
+            self.stats["extend_calls"] += 1
+        self.stats["prefill_chunks"] += 1
+        if not ch.commit:
+            return []
+        return self._commit(fl, int(tok))
+
+    def _commit(self, fl: _Inflight, tok: int
+                ) -> list[tuple[int, int, bool]]:
+        req, slot = fl.req, fl.slot
+        self._inflight = None
+        req.first_token_s = self.clock()
+        req.status = RUNNING
+        req.emit(tok)
+        req.token_times.append(self.clock())
+        # the slot's cache now holds this request's stores either way;
+        # record its occupancy so the endurance audit stays truthful
+        self._slot_prefill_len[slot] = req.prompt_len
+        self._slot_total_len[slot] = req.prompt_len
+        if req.finished_by(tok):
+            self._finish(req)            # 1-token request: retires at once
+            self.pool.free(slot)
+            return [(req.rid, tok, True)]
+        req.slot = slot
+        self._slot_req[slot] = req
+        self._tok[slot, 0] = tok
+        self._pos[slot] = req.prompt_len
+        self._active[slot] = True
+        return [(req.rid, tok, False)]
 
     # ------------------------------------------------------------------
     # the step loop
     # ------------------------------------------------------------------
-    def _admit(self) -> list[tuple[int, int, bool]]:
-        events = []
-        while self.pool.free_slots:
-            req = self.scheduler.next_request(self.pool.active_slots)
-            if req is None:
-                break
-            batch = self._make_batch(req)
-            length = req.prompt_len
-            tok, cache = self.backend.prefill(batch, length)
-            req.first_token_s = self.clock()
-            req.status = RUNNING
-            req.emit(int(tok))
-            if req.finished_by(int(tok)):
-                self._finish(req)        # 1-token request: never lands
-                events.append((req.rid, int(tok), True))
-                continue
-            events.append((req.rid, int(tok), False))
-            slot = self.pool.alloc()
-            self.pool.insert(cache, slot)
-            req.slot = slot
-            self._slot_req[slot] = req
-            self._slot_prefill_len[slot] = length
-            self._slot_total_len[slot] = length
-            self._tok[slot, 0] = int(tok)
-            self._pos[slot] = length
-            self._active[slot] = True
-        return events
-
     def _finish(self, req: Request):
         req.status = FINISHED
         req.finish_s = self.clock()
@@ -169,43 +324,91 @@ class Engine:
         req.slot = -1
         self.pool.free(slot)
 
+    def _plan_legacy(self):
+        """Whole-prompt StepPlan through a subclass's next_request
+        (PR 1/2 admission semantics; no chunking)."""
+        chunks = []
+        free = self.pool.free_slots
+        active = self.pool.active_slots
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            while free > 0:
+                req = self.scheduler.next_request(active)
+                if req is None:
+                    break
+                chunks.append(PrefillChunk(req, True, 0, req.prompt_len,
+                                           True))
+                free -= 1
+                active += 1
+        return StepPlan(chunks=tuple(chunks),
+                        decode=bool(self._active.any()) or bool(chunks))
+
     def step(self) -> list[tuple[int, int, bool]]:
-        """Admit + decode one token on every active slot. Returns streamed
-        events: (rid, token, done)."""
-        events = self._admit()
-        if not self._active.any():
+        """Execute one StepPlan: prefill chunks, then one decode token on
+        every active slot. Returns streamed events: (rid, token, done).
+
+        A plan is a commitment, not a peek: producing it pops admitted
+        requests off the scheduler queue, and this method executes every
+        chunk in it before decoding."""
+        events: list[tuple[int, int, bool]] = []
+        fl = self._inflight
+        if self._legacy_sched:
+            plan = self._plan_legacy()
+        else:
+            plan = self.scheduler.plan(
+                active_slots=self.pool.active_slots,
+                decode_slots=int(self._active.sum()),
+                free_slots=self.pool.free_slots,
+                inflight=None if fl is None else (fl.req, fl.pos),
+                chunk_unit=self.backend.chunk_unit)
+        for ch in plan.chunks:
+            events.extend(self._run_chunk(ch))
+        self.stats["steps"] += 1
+        # plan.decode is the planner's say (a custom planner may dedicate
+        # a step to prefill); _active is the physical guard
+        if not plan.decode or not self._active.any():
             return events
         ntoks, self.pool.state = self.backend.decode_step(
             self._tok, self.pool.state, self._pos, self._active)
         ntoks = np.asarray(ntoks)
+        self.stats["decode_steps"] += 1
         for slot in np.nonzero(self._active)[0]:
             req = self._slot_req[slot]
             tok = int(ntoks[slot])
             req.emit(tok)
+            req.token_times.append(self.clock())
             self._pos[slot] += 1
             self._slot_total_len[slot] += 1
             self._tok[slot, 0] = tok
+            self.stats["decode_tokens"] += 1
             done = req.finished_by(tok)
             events.append((req.rid, tok, done))
             if done:
                 self._retire(int(slot))
         return events
 
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued, prefilling or decoding."""
+        return not (self.scheduler.pending or self.pool.active_slots
+                    or self._inflight is not None)
+
     def run(self, requests=None, max_steps: int | None = None
             ) -> list[Request]:
-        """Drain: submit ``requests`` (if given) and step until queue and
-        slots are empty. Returns the finished requests in completion
-        order."""
+        """Drain: submit ``requests`` (if given) and step until queue,
+        in-flight prefill and slots are empty. Returns the finished
+        requests in completion order. Raises once ``max_steps`` steps
+        have run without draining."""
         for r in requests or ():
             self.submit(r)
         start = len(self.finished)
         steps = 0
-        while self.scheduler.pending or self.pool.active_slots:
-            self.step()
-            steps += 1
-            if max_steps is not None and steps > max_steps:
+        while not self.idle:
+            if max_steps is not None and steps >= max_steps:
                 raise RuntimeError(f"engine did not drain in {max_steps} "
                                    f"steps")
+            self.step()
+            steps += 1
         return self.finished[start:]
 
     # ------------------------------------------------------------------

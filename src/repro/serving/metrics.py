@@ -17,30 +17,50 @@ from repro.simulator.hardware import CHIME, Platform
 
 
 def request_metrics(req) -> dict:
-    return {
+    m = {
         "rid": req.rid,
         "prompt_len": req.prompt_len,
         "n_generated": req.n_generated,
         "ttft_s": req.first_token_s - req.arrival_s,
         "latency_s": req.finish_s - req.arrival_s,
     }
+    tbt = np.diff(req.token_times)
+    if tbt.size:
+        m["tbt_p50_s"] = float(np.percentile(tbt, 50))
+        m["tbt_p95_s"] = float(np.percentile(tbt, 95))
+        m["tbt_max_s"] = float(tbt.max())
+    return m
 
 
 def aggregate_metrics(finished, wall_s: float) -> dict:
-    """Aggregate over finished requests for a run of ``wall_s`` seconds."""
+    """Aggregate over finished requests for a run of ``wall_s`` seconds.
+
+    TTFT percentiles are over requests; time-between-tokens (TBT)
+    percentiles pool every request's inter-token gaps — the tail that
+    chunked prefill exists to bound (a whole-prompt prefill stalls every
+    in-flight request's next token for the full prompt duration)."""
     if not finished:
         return {"requests": 0, "total_tokens": 0, "tok_per_s": 0.0}
     lat = np.array([r.finish_s - r.arrival_s for r in finished])
     ttft = np.array([r.first_token_s - r.arrival_s for r in finished])
     total = int(sum(r.n_generated for r in finished))
-    return {
+    m = {
         "requests": len(finished),
         "total_tokens": total,
         "tok_per_s": total / max(wall_s, 1e-9),
         "mean_ttft_s": float(ttft.mean()),
+        "ttft_p50_s": float(np.percentile(ttft, 50)),
+        "ttft_p95_s": float(np.percentile(ttft, 95)),
         "mean_latency_s": float(lat.mean()),
         "p95_latency_s": float(np.percentile(lat, 95)),
     }
+    tbt = np.concatenate(
+        [np.diff(r.token_times) for r in finished] or [np.zeros(0)])
+    if tbt.size:
+        m["tbt_p50_s"] = float(np.percentile(tbt, 50))
+        m["tbt_p95_s"] = float(np.percentile(tbt, 95))
+        m["tbt_max_s"] = float(tbt.max())
+    return m
 
 
 def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:

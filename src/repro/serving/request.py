@@ -33,6 +33,9 @@ class Request:
     arrival_s: float = 0.0
     first_token_s: float = 0.0
     finish_s: float = 0.0
+    # per-token emission timestamps (engine clock); diffs are the
+    # request's time-between-tokens trace for the TBT percentiles
+    token_times: list = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:

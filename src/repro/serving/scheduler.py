@@ -1,4 +1,5 @@
-"""FCFS + capacity-aware admission control.
+"""Step-plan scheduling: FCFS + capacity-gated admission + Sarathi-style
+chunked prefill under a per-step token budget.
 
 CHIME's two memory domains cap concurrency independently: every admitted
 request pins a bf16 hot ring (+ recurrent states) in the M3D DRAM stack
@@ -7,12 +8,23 @@ scheduler derives byte budgets from the `simulator/hardware.py` domain
 capacities and admits the queue head only while BOTH domains have room —
 so a bigger hot window or longer max_len genuinely buys fewer concurrent
 requests, the same trade the paper's Table III/IV capacities impose.
+
+Since PR 3 the scheduler emits a `StepPlan` per engine step instead of
+popping whole requests: each step gets ``token_budget`` tokens, decode
+slots take one each, and the remainder goes to in-flight prefill chunks
+of at most ``chunk_tokens`` positions (the paper's long-vision-prompt
+workloads no longer stall every decode slot for a whole prompt). Ordering
+stays strictly FCFS — one prompt prefills at a time, and the queue head
+is admitted (slot + byte budgets permitting) only once the previous
+prompt committed. Defaults (no budget, no chunk cap) reproduce the PR 1/2
+admit-whole-prompt behavior exactly.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import warnings
 
 from repro.serving.request import Request
 from repro.simulator.hardware import CHIME, Platform
@@ -53,18 +65,65 @@ class CapacityBudget:
                 <= self.rram_bytes)
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    """One planned extend call: ``length`` prompt positions of ``req``
+    starting at absolute position ``start``. ``admit`` means the request
+    enters prefill with this chunk (the engine allocates its pool slot
+    first); ``commit`` means the chunk completes the prompt (the backend
+    folds the workspace into the slot and the first token streams)."""
+    req: Request
+    admit: bool
+    start: int
+    length: int
+    commit: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class StepPlan:
+    """The work one engine step executes: prefill chunks (in FCFS order,
+    at most one request in flight at a time) followed by one decode token
+    on every active slot. ``decode`` is True when the step is expected to
+    decode — slots were already active, or a committing chunk activates
+    one this step."""
+    chunks: tuple[PrefillChunk, ...]
+    decode: bool
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(c.length for c in self.chunks)
+
+
 class FCFSScheduler:
-    """First-come-first-served queue gated by the capacity budget.
+    """First-come-first-served StepPlan producer gated by the capacity
+    budget and a per-step token budget.
 
     Strictly FCFS: if the head of the queue does not fit, nothing is
-    admitted (no starvation of large requests by small ones).
+    admitted (no starvation of large requests by small ones), and a new
+    prompt starts prefilling only after the in-flight one commits.
+
+    ``token_budget`` caps the total tokens one step computes (each active
+    decode slot costs 1; the remainder feeds prefill chunks).
+    ``chunk_tokens`` caps a single prefill chunk. Both default to None
+    (unbounded / whole-prompt chunks — the pre-StepPlan behavior).
     """
 
     def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
-                 cold_bytes_per_slot: int):
+                 cold_bytes_per_slot: int,
+                 token_budget: int | None = None,
+                 chunk_tokens: int | None = None):
+        if chunk_tokens is not None and chunk_tokens < 1:
+            # a cap < 1 would make plan() emit degenerate chunks forever
+            raise ValueError(f"chunk_tokens must be >= 1 or None, got "
+                             f"{chunk_tokens}")
+        if token_budget is not None and token_budget < 1:
+            raise ValueError(f"token_budget must be >= 1 or None, got "
+                             f"{token_budget}")
         self.budget = budget
         self.hot_bytes_per_slot = hot_bytes_per_slot
         self.cold_bytes_per_slot = cold_bytes_per_slot
+        self.token_budget = token_budget
+        self.chunk_tokens = chunk_tokens
         self._queue: collections.deque[Request] = collections.deque()
         self.admitted = 0
 
@@ -85,9 +144,68 @@ class FCFSScheduler:
         return bool(self._queue) and self.budget.admits(
             n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot)
 
+    # ------------------------------------------------------------------
+    def plan(self, *, active_slots: int, decode_slots: int,
+             free_slots: int, inflight: tuple[Request, int] | None,
+             chunk_unit: int = 1) -> StepPlan:
+        """Produce this step's work plan.
+
+        ``active_slots`` counts resident requests (decoding + the one
+        prefilling, which already pins a slot and its byte budgets);
+        ``inflight`` is (request, next position) of the prompt currently
+        prefilling, or None. ``chunk_unit`` comes from the backend: every
+        non-final chunk is rounded to a multiple of it so recurrent
+        architectures keep their canonical chunk grid (exact-length
+        chunks; a chunk may overshoot the token budget by less than one
+        unit rather than stall).
+
+        Planning is a COMMITMENT, not a peek: admissions pop the queue
+        and count toward ``admitted``, and the engine executes every
+        chunk of the returned plan within the same step."""
+        chunks: list[PrefillChunk] = []
+        budget = (float("inf") if self.token_budget is None
+                  else self.token_budget - decode_slots)
+        cap = self.chunk_tokens or float("inf")
+        cur = inflight
+        while budget > 0:
+            admit = False
+            if cur is None:
+                if not self._queue or free_slots <= 0:
+                    break
+                if not self.budget.admits(active_slots,
+                                          self.hot_bytes_per_slot,
+                                          self.cold_bytes_per_slot):
+                    break
+                req = self._queue.popleft()
+                admit = True
+                free_slots -= 1
+                active_slots += 1
+                self.admitted += 1
+                cur = (req, 0)
+            req, p = cur
+            remaining = req.prompt_len - p
+            c = int(min(remaining, budget, cap))
+            if c < remaining and chunk_unit > 1:
+                c = (c // chunk_unit) * chunk_unit or min(chunk_unit,
+                                                          remaining)
+            commit = (p + c) == req.prompt_len
+            chunks.append(PrefillChunk(req, admit, p, c, commit))
+            budget -= c
+            cur = None if commit else (req, p + c)
+        return StepPlan(chunks=tuple(chunks),
+                        decode=decode_slots > 0
+                        or any(c.commit for c in chunks))
+
+    # ---- one-release deprecation shim (PR 3) -------------------------
     def next_request(self, n_active: int) -> Request | None:
-        """Pop the queue head iff both domain budgets admit one more
-        resident request."""
+        """DEPRECATED: pop the queue head iff both domain budgets admit
+        one more resident request. Superseded by `plan`, which chunks the
+        head prompt under the step token budget instead of handing it out
+        whole."""
+        warnings.warn(
+            "FCFSScheduler.next_request is deprecated; the engine now "
+            "drives StepPlans from FCFSScheduler.plan()",
+            DeprecationWarning, stacklevel=2)
         if not self.can_admit(n_active):
             return None
         self.admitted += 1

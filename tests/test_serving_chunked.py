@@ -1,0 +1,411 @@
+"""Chunked prefill via the unified extend entry point (PR 3).
+
+The load-bearing property: chunked prefill is TOKEN-FOR-TOKEN identical
+to whole-prompt prefill — on GQA, MLA(+MoE), SSM and hybrid architectures,
+on both backends, for flat and tiered KV policies, including VQA prompts
+whose chunks split at the patch/text modality boundary. Plus: the
+StepPlan scheduler's budget/FCFS/alignment behavior, decode interleaving
+during a long prefill, the engine.run(max_steps=) off-by-one fix, the
+REPRO_SERVE_CHUNK_TOKENS env knob, and the one-release deprecation shims
+on the old prefill/insert backend surface.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise
+the sharded parity tests on a real multi-device mesh (the CI
+serving-multi-device job does).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import Model
+from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
+                           LocalBackend, Request, ShardedBackend,
+                           make_synthetic_requests)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
+    cfg = get_config(arch, reduced=True).replace(
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        kv_policy=kv_policy, kv_hot_window=hot_window)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _requests(cfg, specs, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, p)
+                    .astype(np.int32),
+                    max_new_tokens=g)
+            for i, (p, g) in enumerate(specs)]
+
+
+def _mesh():
+    n = jax.device_count()
+    if n == 1:
+        return make_local_mesh()
+    m = 2 if n % 2 == 0 else 1
+    return jax.make_mesh((n // m, m), ("data", "model"))
+
+
+def _generated(done):
+    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+
+
+# prompts sized so the chunk cap forces multi-chunk prefill; recurrent
+# archs need prompts longer than their cfg.ssm.chunk_size grid unit
+ARCH_CASES = {
+    "granite-3-2b": dict(specs=[(16, 6), (13, 6), (8, 4), (16, 4)],
+                         max_len=24, chunk=5),
+    "deepseek-v2-lite": dict(specs=[(16, 6), (13, 6), (8, 6)],
+                             max_len=24, chunk=5),
+    "rwkv6-7b": dict(specs=[(40, 6), (35, 4)], max_len=48, chunk=32),
+    "zamba2-1.2b": dict(specs=[(40, 6), (24, 4)], max_len=48, chunk=16),
+}
+
+
+def _parity(arch, *, kv_policy="tiered", backend_kind="local",
+            image_every=0, num_slots=2):
+    case = ARCH_CASES[arch]
+    cfg, model, params = _model(arch, kv_policy=kv_policy)
+
+    def reqs():
+        if image_every:
+            return make_synthetic_requests(
+                cfg, 3, prompt_len=case["specs"][0][0],
+                gen_len=case["specs"][0][1], seed=2,
+                image_every=image_every)
+        return _requests(cfg, case["specs"])
+
+    def backend():
+        if backend_kind == "sharded":
+            return ShardedBackend(model, params, num_slots,
+                                  case["max_len"], mesh=_mesh())
+        return LocalBackend(model, params, num_slots, case["max_len"])
+
+    whole = Engine(backend())
+    got_w = _generated(whole.run(reqs(), max_steps=500))
+    chunked = Engine(backend(), chunk_tokens=case["chunk"])
+    got_c = _generated(chunked.run(reqs(), max_steps=900))
+    assert got_w == got_c, f"{arch}: chunked prefill diverged from whole"
+    # the chunk cap really forced multi-chunk prompts
+    n_reqs = len(got_w)
+    assert chunked.stats["prefill_chunks"] > n_reqs, chunked.stats
+    if kv_policy == "tiered":
+        assert chunked.endurance_report()["write_once_ok"]
+    return got_w
+
+
+# ---------------------------------------------------------------------------
+# exact chunked-vs-whole token parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list(ARCH_CASES))
+def test_chunked_matches_whole_local(arch):
+    """GQA / MLA(+MoE) / RWKV6 / hybrid-Mamba2: chunked == whole, exactly.
+    The recurrent archs run exact-length chunks on the canonical
+    cfg.ssm.chunk_size grid; the attention archs run padded fixed-width
+    chunks."""
+    _parity(arch)
+
+
+def test_chunked_matches_whole_flat_policy():
+    _parity("granite-3-2b", kv_policy="flat")
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "zamba2-1.2b"])
+def test_chunked_matches_whole_sharded(arch):
+    """The pjit backend's extend_step is a pure placement change too: the
+    chunked sharded engine equals the chunked local engine's tokens (and
+    both equal whole-prompt prefill)."""
+    local = _parity(arch, backend_kind="local")
+    sharded = _parity(arch, backend_kind="sharded")
+    assert local == sharded
+
+
+def test_chunked_vlm_mixed_stream_splits_modality_boundary():
+    """VQA chunks split at the patch/text boundary: a mixed image+text
+    stream chunked at 6 positions (< the visual span) matches whole
+    prefill exactly, with patch-space and token-space chunks."""
+    cfg, model, params = _model("mobilevlm-1.7b", hot_window=16)
+    reqs = lambda: make_synthetic_requests(  # noqa: E731
+        cfg, 3, prompt_len=20, gen_len=4, seed=2, image_every=2)
+    whole = Engine(LocalBackend(model, params, 2, 32))
+    got_w = _generated(whole.run(reqs(), max_steps=200))
+    chunked = Engine(LocalBackend(model, params, 2, 32), chunk_tokens=6)
+    got_c = _generated(chunked.run(reqs(), max_steps=400))
+    assert got_w == got_c
+    assert chunked.stats["prefill_chunks"] > 3
+
+
+# ---------------------------------------------------------------------------
+# Model.extend vs Model.prefill at the logits level (bit-exact)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,chunks", [("granite-3-2b", (5, 5, 5, 1)),
+                                         ("granite-3-2b", (8, 8)),
+                                         ("deepseek-v2-lite", (5, 5, 5, 1))])
+def test_extend_chunks_equal_prefill_logits(arch, chunks):
+    """Any chunking of a prompt reproduces whole-prompt prefill's
+    last-token logits: the same greedy token, with any residual
+    difference at matmul-width rounding level (uneven chunk widths hit
+    different GEMM accumulation blockings). The engine-level tests above
+    hold the full served token streams to EXACT equality."""
+    cfg, model, params = _model(arch)
+    rng = np.random.default_rng(3)
+    n = sum(chunks)
+    toks = rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+    max_len = n + 8
+    logits_w, _ = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len, n))(
+        params, {"tokens": toks[None]})
+    ext = model.init_extend_cache(1, max_len)
+    pos = 0
+    for i, c in enumerate(chunks):
+        commit = i == len(chunks) - 1
+        fn = jax.jit(lambda p, b, e, po, c=c, commit=commit: model.extend(
+            p, b, e, po, length=c, commit=commit))
+        logits_c, ext = fn(params, {"tokens": toks[pos:pos + c][None]},
+                           ext, jnp.asarray(pos, jnp.int32))
+        pos += c
+    w = np.asarray(logits_w[:, -1])
+    c = np.asarray(logits_c[:, -1])
+    np.testing.assert_allclose(c, w, rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(w.argmax(-1), c.argmax(-1))
+
+
+# ---------------------------------------------------------------------------
+# StepPlan scheduler behavior
+# ---------------------------------------------------------------------------
+def _sched(**kw):
+    return FCFSScheduler(CapacityBudget(dram_bytes=1e9, rram_bytes=1e9),
+                         hot_bytes_per_slot=100, cold_bytes_per_slot=100,
+                         **kw)
+
+
+def test_plan_splits_budget_between_decode_and_chunks():
+    sched = _sched(token_budget=12, chunk_tokens=8)
+    cfg = get_config("granite-3-2b", reduced=True)
+    (req,) = _requests(cfg, [(20, 4)])
+    sched.submit(req)
+    # 4 decode slots leave 8 budget tokens -> one 8-token chunk
+    plan = sched.plan(active_slots=4, decode_slots=4, free_slots=2,
+                      inflight=None)
+    assert [(c.start, c.length, c.admit, c.commit)
+            for c in plan.chunks] == [(0, 8, True, False)]
+    assert plan.decode
+    # budget fully consumed by decode slots -> decode-only step
+    sched2 = _sched(token_budget=4, chunk_tokens=8)
+    sched2.submit(_requests(cfg, [(20, 4)])[0])
+    assert sched2.plan(active_slots=4, decode_slots=4, free_slots=2,
+                       inflight=None).chunks == ()
+    # the in-flight prompt finishes before the next one is admitted (FCFS)
+    plan3 = sched.plan(active_slots=4, decode_slots=4, free_slots=2,
+                       inflight=(req, 8))
+    assert [(c.start, c.length, c.commit) for c in plan3.chunks] \
+        == [(8, 8, False)]
+    plan4 = sched.plan(active_slots=4, decode_slots=4, free_slots=2,
+                       inflight=(req, 16))
+    assert [(c.start, c.length, c.commit) for c in plan4.chunks] \
+        == [(16, 4, True)]
+
+
+def test_plan_rounds_chunks_to_grid_unit():
+    """Recurrent archs: non-final chunks align to cfg.ssm.chunk_size so
+    the canonical SSM grid stays split-invariant; a unit never stalls
+    even when the budget remainder is smaller."""
+    cfg = get_config("zamba2-1.2b", reduced=True)
+    sched = _sched(token_budget=100, chunk_tokens=10)
+    (req,) = _requests(cfg, [(40, 4)])
+    sched.submit(req)
+    plan = sched.plan(active_slots=0, decode_slots=0, free_slots=1,
+                      inflight=None, chunk_unit=16)
+    lens = [c.length for c in plan.chunks]
+    assert all(ln % 16 == 0 for ln in lens[:-1])
+    assert sum(lens) == 40 and plan.chunks[-1].commit
+
+
+def test_plan_admits_whole_queue_without_budget():
+    """Default knobs reproduce the pre-StepPlan admission loop: every
+    pending request prefills whole in one step, capacity permitting."""
+    cfg = get_config("granite-3-2b", reduced=True)
+    sched = _sched()
+    for r in _requests(cfg, [(8, 2), (8, 2), (8, 2)]):
+        sched.submit(r)
+    plan = sched.plan(active_slots=0, decode_slots=0, free_slots=2,
+                      inflight=None)
+    # only 2 free slots -> 2 admissions, both whole-prompt commits
+    assert [(c.admit, c.length, c.commit) for c in plan.chunks] \
+        == [(True, 8, True), (True, 8, True)]
+    assert sched.pending == 1
+
+
+def test_engine_exposes_exact_prefill_grid():
+    _, model, params = _model("zamba2-1.2b")
+    b = LocalBackend(model, params, 1, 48)
+    assert b.requires_exact_prefill
+    assert b.chunk_unit == model.cfg.ssm.chunk_size
+    _, model2, params2 = _model("granite-3-2b")
+    b2 = LocalBackend(model2, params2, 1, 24)
+    assert not b2.requires_exact_prefill and b2.chunk_unit == 1
+
+
+# ---------------------------------------------------------------------------
+# decode keeps flowing while a long prompt prefills
+# ---------------------------------------------------------------------------
+def test_decode_interleaves_with_chunked_prefill():
+    """The Sarathi property this redesign exists for: with a token
+    budget, already-running requests emit decode tokens in the same
+    steps a long prompt's chunks run — the old engine stalled them for
+    the whole prefill."""
+    cfg, model, params = _model()
+    eng = Engine(LocalBackend(model, params, 2, 32), chunk_tokens=4)
+    short = _requests(cfg, [(8, 12)], seed=1)[0]
+    eng.submit(short)
+    eng.step()                                  # short request decoding
+    long_req = Request(rid=7, tokens=np.arange(20, dtype=np.int32) % 11,
+                       max_new_tokens=4)
+    eng.submit(long_req)
+    overlap = 0
+    while not eng.idle:
+        before = eng.stats["prefill_chunks"]
+        events = eng.step()
+        prefilled = eng.stats["prefill_chunks"] > before
+        decoded_other = any(rid == short.rid for rid, _, _ in events)
+        if prefilled and decoded_other:
+            overlap += 1
+    assert overlap >= 2, "decode stalled during chunked prefill"
+    assert short.n_generated == 12 and long_req.n_generated == 4
+
+
+# ---------------------------------------------------------------------------
+# knobs, shims, off-by-one
+# ---------------------------------------------------------------------------
+def test_env_knob_enables_chunking(monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_CHUNK_TOKENS", "6")
+    cfg, model, params = _model()
+    eng = Engine(LocalBackend(model, params, 2, 24))
+    assert eng.scheduler.chunk_tokens == 6
+    assert eng.scheduler.token_budget == 6 + 2
+    (req,) = _requests(cfg, [(16, 3)])
+    eng.run([req], max_steps=100)
+    # 16 tokens under an 8-token step budget: 6+2 per step, 4 chunks
+    assert eng.stats["prefill_chunks"] == 4
+    assert req.n_generated == 3
+
+
+def test_invalid_knobs_rejected_and_env_sanitized(monkeypatch):
+    """Negative chunk/budget knobs raise (a negative cap would loop
+    plan() forever); 0 is the explicit disable sentinel; malformed env
+    values are ignored with a warning instead of wedging startup."""
+    _, model, params = _model()
+    backend = LocalBackend(model, params, 2, 24)
+    with pytest.raises(ValueError, match="chunk_tokens"):
+        Engine(backend, chunk_tokens=-3)
+    with pytest.raises(ValueError, match="token_budget"):
+        Engine(backend, chunk_tokens=4, token_budget=-1)
+    # explicit 0 = disable/unbounded, even while chunking: the budget is
+    # NOT rebound to the chunk+slots default
+    e0 = Engine(backend, chunk_tokens=0, token_budget=0)
+    assert e0.scheduler.chunk_tokens is None
+    eu = Engine(backend, chunk_tokens=4, token_budget=0)
+    assert eu.scheduler.chunk_tokens == 4
+    assert eu.scheduler.token_budget is None
+    # knobs reach a user-provided base scheduler too (CI env forcing)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(1e12, 1e12), hot_b, cold_b)
+    assert Engine(backend, scheduler=sched,
+                  chunk_tokens=5).scheduler.chunk_tokens == 5
+    monkeypatch.setenv("REPRO_SERVE_CHUNK_TOKENS", "-6")
+    with pytest.warns(UserWarning, match="negative"):
+        eng = Engine(backend)
+    assert eng.scheduler.chunk_tokens is None
+    monkeypatch.setenv("REPRO_SERVE_CHUNK_TOKENS", "nope")
+    with pytest.warns(UserWarning, match="non-integer"):
+        eng = Engine(backend)
+    assert eng.scheduler.chunk_tokens is None
+
+
+def test_run_max_steps_raises_at_exactly_max_steps():
+    """Off-by-one fix: run(max_steps=N) allows exactly N steps.
+    chunk_tokens=0 pins whole-prompt prefill so the step count is
+    deterministic even under the env chunking knob."""
+    cfg, model, params = _model()
+    # (8, 3) drains in exactly 2 steps: commit+decode, then final decode
+    eng = Engine(LocalBackend(model, params, 1, 16), chunk_tokens=0)
+    eng.run(_requests(cfg, [(8, 3)]), max_steps=2)
+    eng2 = Engine(LocalBackend(model, params, 1, 16), chunk_tokens=0)
+    with pytest.raises(RuntimeError, match="did not drain in 1"):
+        eng2.run(_requests(cfg, [(8, 3)]), max_steps=1)
+
+
+def test_backend_prefill_insert_shims_warn_and_work():
+    cfg, model, params = _model()
+    backend = LocalBackend(model, params, 2, 24)
+    pool = backend.make_pool()
+    batch = {"tokens": np.arange(8, dtype=np.int32)[None]}
+    with pytest.warns(DeprecationWarning, match="prefill is deprecated"):
+        tok, cache = backend.prefill(batch, 8)
+    with pytest.warns(DeprecationWarning, match="insert is deprecated"):
+        state = backend.insert(pool.state, cache, 1)
+    assert int(tok) >= 0 and state.num_slots == 2
+    # pool-internal recycling does NOT go through the deprecated surface
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        pool.insert(cache, 0)
+        pool.reset(0)
+
+
+def test_legacy_scheduler_subclass_drives_whole_prompt_adapter():
+    """A PR 1/2-era scheduler subclass overriding next_request (custom
+    admission policy) still steers admission: the engine detects it,
+    warns, and drives it through a whole-prompt adapter instead of
+    silently planning with the base class."""
+    admitted_order = []
+
+    class LIFOScheduler(FCFSScheduler):
+        def next_request(self, n_active):
+            if not self._queue or not self.budget.admits(
+                    n_active, self.hot_bytes_per_slot,
+                    self.cold_bytes_per_slot):
+                return None
+            req = self._queue.pop()          # LIFO, not FCFS
+            admitted_order.append(req.rid)
+            return req
+
+    cfg, model, params = _model()
+    backend = LocalBackend(model, params, 1, 24)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = LIFOScheduler(
+        CapacityBudget(dram_bytes=1e12, rram_bytes=1e12), hot_b, cold_b)
+    with pytest.warns(DeprecationWarning, match="whole-prompt admission"):
+        eng = Engine(backend, scheduler=sched)
+    reqs = _requests(cfg, [(8, 2), (8, 2), (8, 2)])
+    done = eng.run(reqs, max_steps=100)
+    assert len(done) == 3
+    assert admitted_order == [2, 1, 0]       # the override really drove
+
+
+def test_scheduler_next_request_shim_warns():
+    cfg = get_config("granite-3-2b", reduced=True)
+    sched = _sched()
+    sched.submit(_requests(cfg, [(8, 2)])[0])
+    with pytest.warns(DeprecationWarning, match="next_request"):
+        assert sched.next_request(0).rid == 0
+
+
+def test_metrics_report_ttft_and_tbt_percentiles():
+    cfg, model, params = _model()
+    from repro.serving import aggregate_metrics
+    eng = Engine(LocalBackend(model, params, 2, 24), chunk_tokens=5)
+    done = eng.run(_requests(cfg, [(13, 5), (8, 5)]), max_steps=200)
+    m = aggregate_metrics(done, wall_s=1.0)
+    for k in ("ttft_p50_s", "ttft_p95_s", "tbt_p50_s", "tbt_p95_s"):
+        assert k in m and m[k] >= 0.0
+    assert all(len(r.token_times) == r.n_generated for r in done)
