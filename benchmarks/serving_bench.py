@@ -6,6 +6,11 @@ shared tiered KV pool actually buy aggregate tok/s?
     # mixed long-VQA stream, chunked prefill (Sarathi-style):
     PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
         --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8
+    # oversubscription: clamp the DRAM budget to concurrency/F residents
+    # and compare admission-blocked vs spill-backed oversubscribed:
+    PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
+        --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8 \
+        --oversubscribe 2
 
 For each slot count in {1, --concurrency} the bench drains the SAME
 request stream (2x the slot count, so slots recycle) through a fresh
@@ -35,8 +40,10 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import Model
-from repro.serving import (Engine, aggregate_metrics, make_backend,
+from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
+                           aggregate_metrics, make_backend,
                            make_synthetic_requests, simulated_efficiency)
+from repro.simulator.hardware import CHIME
 
 BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent \
     / "experiments" / "bench" / "serving.json"
@@ -46,19 +53,36 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
               n_requests: int, prompt_len: int, gen: int, max_len: int,
               mesh=None, chunk_tokens: int | None = None,
               token_budget: int | None = None,
-              image_every: int = 0) -> dict:
+              image_every: int = 0, priority_every: int = 0,
+              dram_budget_slots: int | None = None,
+              oversubscribe: float | None = None) -> dict:
     backend = make_backend(backend_kind, model, params,
                            num_slots=concurrency, max_len=max_len,
                            mesh=mesh)
 
     def fresh_engine():
-        # verbatim: None consults the env knobs, explicit 0 disables
-        return Engine(backend, chunk_tokens=chunk_tokens,
-                      token_budget=token_budget)
+        # verbatim: None consults the env knobs, explicit 0 disables.
+        # With a --oversubscribe comparison, the DRAM byte budget is
+        # clamped to dram_budget_slots residents: the blocked baseline
+        # runs at that concurrency, the oversubscribed run reclaims the
+        # full slot count with spill-lane-backed admission.
+        sched = None
+        if dram_budget_slots:
+            hot_b, cold_b = backend.slot_kv_bytes()
+            rram = CapacityBudget.from_platform(CHIME).rram_bytes
+            sched = FCFSScheduler(
+                CapacityBudget(dram_budget_slots * hot_b, rram),
+                hot_b, cold_b, oversubscribe=oversubscribe or 1.0,
+                spill_lanes=backend.n_spill)
+        return Engine(backend, scheduler=sched,
+                      chunk_tokens=chunk_tokens,
+                      token_budget=token_budget,
+                      oversubscribe=None if sched else oversubscribe)
 
     def stream(seed):
         return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
-                                       seed=seed, image_every=image_every)
+                                       seed=seed, image_every=image_every,
+                                       priority_every=priority_every)
 
     fresh_engine().run(stream(0))              # warm-up: pays compilation
     engine = fresh_engine()                    # timed pass: clean stats
@@ -87,6 +111,10 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["chunk_tokens"] = engine.scheduler.chunk_tokens or 0
     m["token_budget"] = engine.scheduler.token_budget or 0
     m["image_every"] = image_every
+    m["oversubscribe"] = getattr(engine.scheduler, "oversubscribe",
+                                 None) or 0
+    m["dram_budget_slots"] = dram_budget_slots or 0
+    m["evictions"] = engine.stats["evictions"]
     m["steps"] = len(step_s)
     m["p50_step_s"] = float(np.percentile(step_s, 50))
     m["p95_step_s"] = float(np.percentile(step_s, 95))
@@ -143,6 +171,13 @@ def main(argv=None):
                          "default: env knob / derived)")
     ap.add_argument("--image-every", type=int, default=0,
                     help="every k-th request is a VQA request (0 = none)")
+    ap.add_argument("--priority-every", type=int, default=0,
+                    help="every k-th request is priority-1 traffic")
+    ap.add_argument("--oversubscribe", type=float, default=0.0,
+                    help="> 1: compare an admission-blocked baseline "
+                         "(DRAM budget = concurrency/F residents) "
+                         "against spill-backed oversubscription at the "
+                         "full slot count")
     ap.add_argument("--no-json", action="store_true",
                     help="skip appending to the BENCH json trajectory")
     args = ap.parse_args(argv)
@@ -164,16 +199,10 @@ def main(argv=None):
     print(f"[bench] arch={args.arch} kv={args.kv_policy} "
           f"backend={args.backend} chunk={args.chunk_tokens or 0} "
           f"requests={n_requests} prompt={args.prompt_len} gen={args.gen}")
-    results = []
-    for c in sorted({1, args.concurrency}):
-        r = bench_one(model, params, cfg, args.backend, c, n_requests,
-                      args.prompt_len, args.gen, max_len, mesh=mesh,
-                      chunk_tokens=args.chunk_tokens,
-                      token_budget=args.token_budget,
-                      image_every=args.image_every)
-        results.append(r)
+
+    def show(label, r):
         rep = r["endurance"]
-        print(f"[bench] concurrency={c:3d}: {r['tok_per_s']:8.1f} tok/s  "
+        print(f"[bench] {label}: {r['tok_per_s']:8.1f} tok/s  "
               f"step p50={r['p50_step_s'] * 1e3:.1f}ms "
               f"p95={r['p95_step_s'] * 1e3:.1f}ms "
               f"decode p95={r.get('p95_decode_step_s', 0.0) * 1e3:.1f}ms  "
@@ -183,11 +212,45 @@ def main(argv=None):
               f"endurance max writes/block="
               f"{rep['max_writes_per_cold_slot']:.2f} "
               f"({'OK' if rep['write_once_ok'] else 'VIOLATED'})")
-    if len(results) == 2:
+
+    results = []
+    if args.oversubscribe and args.oversubscribe > 1:
+        # admission-blocked baseline vs spill-backed oversubscription at
+        # the SAME tight DRAM budget (concurrency/F residents): the
+        # oversubscribed engine reclaims the full slot count, the
+        # baseline queues — completed-tokens/s is the comparison
+        base = max(1, int(round(args.concurrency / args.oversubscribe)))
+        for over in (1.0, args.oversubscribe):
+            r = bench_one(model, params, cfg, args.backend,
+                          args.concurrency, n_requests, args.prompt_len,
+                          args.gen, max_len, mesh=mesh,
+                          chunk_tokens=args.chunk_tokens,
+                          token_budget=args.token_budget,
+                          image_every=args.image_every,
+                          priority_every=args.priority_every,
+                          dram_budget_slots=base, oversubscribe=over)
+            results.append(r)
+            show(f"dram-budget={base} oversubscribe={over:g}", r)
         speedup = results[1]["tok_per_s"] / max(results[0]["tok_per_s"],
                                                 1e-9)
-        print(f"[bench] aggregate throughput x{speedup:.2f} at "
-              f"concurrency {args.concurrency} vs 1")
+        print(f"[bench] oversubscription x{args.oversubscribe:g} buys "
+              f"x{speedup:.2f} completed tok/s over the "
+              f"admission-blocked baseline")
+    else:
+        for c in sorted({1, args.concurrency}):
+            r = bench_one(model, params, cfg, args.backend, c, n_requests,
+                          args.prompt_len, args.gen, max_len, mesh=mesh,
+                          chunk_tokens=args.chunk_tokens,
+                          token_budget=args.token_budget,
+                          image_every=args.image_every,
+                          priority_every=args.priority_every)
+            results.append(r)
+            show(f"concurrency={c:3d}", r)
+        if len(results) == 2:
+            speedup = results[1]["tok_per_s"] / max(
+                results[0]["tok_per_s"], 1e-9)
+            print(f"[bench] aggregate throughput x{speedup:.2f} at "
+                  f"concurrency {args.concurrency} vs 1")
     if not args.no_json:
         append_bench_json({
             "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
@@ -197,6 +260,7 @@ def main(argv=None):
             "gen": args.gen,
             "chunk_tokens": results[-1]["chunk_tokens"],
             "image_every": args.image_every,
+            "oversubscribe": args.oversubscribe or 0,
             "runs": results,
         })
         print(f"[bench] appended to {BENCH_JSON}")

@@ -204,6 +204,52 @@ def store_read(store: dict, pos, dtype=jnp.bfloat16
     return store["flat"].astype(dtype), jnp.arange(L) <= pos
 
 
+# ---------------------------------------------------------------------------
+# RRAM spill store accounting (serving preemption).
+#
+# When the serving engine preempts a request, the victim slot's cache is
+# packed verbatim into an RRAM-backed spill lane (the cold int8 tier is
+# already RRAM-resident form; the hot ring, scales and recurrent states
+# ride along so the later restore is bit-exact). Like the one-shot
+# `tiered_from_full` cold write, a spill is a single front-to-back pass
+# over the packed image, so it writes every endurance block that holds a
+# valid position exactly once. Lane counters are CUMULATIVE across spill
+# events — RRAM wear does not reset when a lane is recycled — which is
+# exactly what an endurance budget must track.
+# ---------------------------------------------------------------------------
+def n_endurance_blocks(max_len: int) -> int:
+    return (max_len + ENDURANCE_BLOCK - 1) // ENDURANCE_BLOCK
+
+
+def init_spill_writes(n_lanes: int, max_len: int) -> jax.Array:
+    """Per-(lane, block) RRAM write counters for a spill store."""
+    return jnp.zeros((n_lanes, n_endurance_blocks(max_len)), jnp.int32)
+
+
+def spill_block_writes(n_blocks: int, length) -> jax.Array:
+    """Per-block writes of ONE packed spill of a ``length``-token context:
+    blocks [0, ceil(length / ENDURANCE_BLOCK)) are each written once (a
+    partially-filled tail block is still a physical block write)."""
+    blk = jnp.arange(n_blocks)
+    touched = (length + ENDURANCE_BLOCK - 1) // ENDURANCE_BLOCK
+    return jnp.where(blk < touched, 1, 0).astype(jnp.int32)
+
+
+def bump_spill_writes(writes: jax.Array, lane, length) -> jax.Array:
+    """Record one spill of a ``length``-token context into ``lane``."""
+    return writes.at[lane].add(spill_block_writes(writes.shape[1], length))
+
+
+def expected_spill_block_writes(n_blocks: int, lengths) -> jax.Array:
+    """Expected cumulative per-block writes of ONE lane that absorbed a
+    sequence of spills with context lengths ``lengths`` — the oracle the
+    endurance regression test holds `bump_spill_writes` to exactly."""
+    out = jnp.zeros((n_blocks,), jnp.int32)
+    for ln in lengths:
+        out = out + spill_block_writes(n_blocks, ln)
+    return out
+
+
 def endurance_report(cache: dict) -> dict:
     """Aggregate endurance counters. ``writes`` is (batch, n_blocks): each
     entry counts cold-slot writes binned by endurance block for that

@@ -21,6 +21,13 @@ into their pool slot in N-token chunks through the backend's unified
 `extend_step`, so decode slots keep emitting between chunks instead of
 stalling for a whole (vision) prompt. Chunked and whole-prompt prefill
 are token-for-token identical (tests/test_serving_chunked.py).
+
+--oversubscribe F relaxes the scheduler's DRAM admission gate by F
+(spill-lane-backed; see serving/scheduler.py), and --priority-every K
+marks every K-th request as priority-1 interactive traffic, submitted
+mid-run so it preempts a running victim: the victim's KV slot spills to
+an RRAM lane and restores bit-exactly (tests/test_serving_preempt.py
+holds preempted == uninterrupted == generate()).
 """
 
 from __future__ import annotations
@@ -95,6 +102,19 @@ def main(argv=None):
                          "slots and prefill chunks (0 = unbounded; "
                          "default: consult REPRO_SERVE_TOKEN_BUDGET, "
                          "else chunk+slots when chunking)")
+    ap.add_argument("--oversubscribe", type=float, default=None,
+                    help="relax the DRAM admission gate by this factor "
+                         "(>= 1), spill-lane-backed (0 = off even under "
+                         "REPRO_SERVE_OVERSUBSCRIBE; default: consult "
+                         "the env knob)")
+    ap.add_argument("--priority-every", type=int, default=0,
+                    help="every k-th request is priority-1 interactive "
+                         "traffic, submitted mid-run so it preempts "
+                         "(0 = uniform priority)")
+    ap.add_argument("--spill-lanes", type=int, default=None,
+                    help="RRAM spill lanes for preempted slots "
+                         "(default: one per decode slot; 0 disables "
+                         "preemption)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
@@ -112,15 +132,31 @@ def main(argv=None):
     backend = make_backend(
         args.backend, model, params, num_slots=args.concurrency,
         max_len=max_len,
-        mesh=get_mesh(args.mesh) if args.backend == "sharded" else None)
+        mesh=get_mesh(args.mesh) if args.backend == "sharded" else None,
+        n_spill=args.spill_lanes)
     # pass through verbatim: None consults the env knobs, an explicit 0
     # disables (Engine treats 0 as the disable sentinel)
     engine = Engine(backend, chunk_tokens=args.chunk_tokens,
-                    token_budget=args.token_budget)
+                    token_budget=args.token_budget,
+                    oversubscribe=args.oversubscribe)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
-                                   args.gen, image_every=args.image_every)
+                                   args.gen, image_every=args.image_every,
+                                   priority_every=args.priority_every)
     t0 = time.time()
-    done = engine.run(reqs)
+    if args.priority_every:
+        # interactive traffic lands mid-run: batch work first, then the
+        # priority-1 requests once the slots are saturated — the
+        # preemption path a single up-front submit would never take
+        batch_reqs = [r for r in reqs if r.priority == 0]
+        prio_reqs = [r for r in reqs if r.priority > 0]
+        for r in batch_reqs:
+            engine.submit(r)
+        for _ in range(3):
+            engine.step()
+        engine.run(prio_reqs)
+        done = engine.finished
+    else:
+        done = engine.run(reqs)
     wall = time.time() - t0
 
     m = aggregate_metrics(done, wall)
@@ -136,6 +172,11 @@ def main(argv=None):
         s = engine.stats
         print(f"[serve] chunked prefill: {s['prefill_chunks']} chunks / "
               f"{s['extend_calls']} extend calls over {s['steps']} steps")
+    if engine.stats["evictions"]:
+        print(f"[serve] preemption: {engine.stats['evictions']} "
+              f"evictions / {engine.stats['restores']} restores "
+              f"(restore latency p95 "
+              f"{m.get('restore_latency_p95_s', 0.0) * 1e3:.1f} ms)")
     if args.kv_policy == "tiered":
         rep = engine.endurance_report()
         print(f"[serve] endurance: max writes/cold-slot="

@@ -9,10 +9,12 @@ single-request `launch/serve.py` path into a serving engine:
 * `request.py`   — request/timing dataclasses and the FCFS stream
 * `kv_pool.py`   — model-free slot pool: `KVPoolState` (explicit typed
                    pytree) + host-side slot bookkeeping + endurance audit
-* `scheduler.py` — `StepPlan` production: FCFS + capacity-aware admission
-                   against the DRAM/RRAM byte budgets of
-                   simulator/hardware.py + Sarathi-style chunked prefill
-                   under a per-step token budget
+* `scheduler.py` — `StepPlan` production: priority classes (FCFS within
+                   a class) + capacity-aware admission against the
+                   DRAM/RRAM byte budgets of simulator/hardware.py +
+                   Sarathi-style chunked prefill under a per-step token
+                   budget + preemptive eviction/restore planning under
+                   spill-lane-backed oversubscription
 * `backend.py`   — the `InferenceBackend` executor seam: the unified
                    jitted `extend_step` (chunked prefill directly into a
                    pool slot) + `decode_step`; `LocalBackend`
@@ -20,9 +22,11 @@ single-request `launch/serve.py` path into a serving engine:
                    (pjit over a launch/mesh.py mesh; params sharded by
                    the model's rules, KV pool slots over 'data', cold
                    kv_seq/heads over 'model')
-* `engine.py`    — StepPlan executor over a backend: prefill chunks then
-                   one jitted decode over all slots (static shapes so
-                   the backend compiles once per chunk shape)
+* `engine.py`    — StepPlan executor over a backend: spill evictions
+                   (a victim slot's KV packs verbatim into an RRAM
+                   lane), bit-exact restores, prefill chunks, then one
+                   jitted decode over all slots (static shapes so the
+                   backend compiles once per chunk shape)
 * `metrics.py`   — per-request latency + TTFT/TBT percentiles +
                    aggregate tok/s + simulated tokens/J via
                    simulator/chime_sim.py cost terms

@@ -44,12 +44,14 @@ async prefill, disaggregated tiers) plugs in.
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import kv_tiers as KT
 from repro.models import Model
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool, batch_axes,
                                    slot_kv_bytes, tree_expand, tree_squeeze)
@@ -68,6 +70,9 @@ class InferenceBackend(Protocol):
     chunk_unit: int           # non-final chunk lengths must be multiples
     #   of this (cfg.ssm.chunk_size for recurrent archs, else 1) so the
     #   model's canonical SSM chunk grid stays split-invariant
+    n_spill: int              # RRAM spill lanes for preempted slots (0 =
+    #   preemption disabled); lane ARRAYS materialize lazily on the
+    #   first eviction, so unpreempted pools never pay the extra copy
 
     def slot_kv_bytes(self) -> tuple[int, int]:
         """(dram_hot, rram_cold) bytes one resident request pins."""
@@ -98,6 +103,22 @@ class InferenceBackend(Protocol):
         is kept verbatim (no phantom appends, no endurance drift)."""
         ...
 
+    def evict_slot(self, state: KVPoolState, slot, lane, length
+                   ) -> KVPoolState:
+        """Pack slot ``slot``'s cache verbatim into RRAM spill lane
+        ``lane`` and bump that lane's per-block endurance counters for a
+        ``length``-token context (one write per touched block — the
+        one-shot `store_from_full`-style image write)."""
+        ...
+
+    def restore_slot(self, state: KVPoolState, lane, slot
+                     ) -> KVPoolState:
+        """Scatter spill lane ``lane`` back into pool slot ``slot``
+        (bit-exact: the image was packed verbatim, so resumed decode is
+        token-for-token identical to never-evicted decode). Restore
+        writes land in DRAM, so no RRAM counters move."""
+        ...
+
     def prefill(self, batch: dict, length: int
                 ) -> tuple[jax.Array, dict]:
         """DEPRECATED (use `extend_step`): whole-prompt prefill to a
@@ -116,7 +137,8 @@ class _JittedBackend:
     tree, and builds the three jitted programs (step / prefill / insert).
     Subclasses steer placement via `_place` and `_constrain`."""
 
-    def __init__(self, model: Model, params, num_slots: int, max_len: int):
+    def __init__(self, model: Model, params, num_slots: int, max_len: int,
+                 n_spill: int | None = None):
         cfg = model.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only model cannot be served")
@@ -124,10 +146,15 @@ class _JittedBackend:
             raise TypeError("backend needs num_slots and max_len")
         if num_slots < 1:
             raise ValueError("backend needs at least one decode slot")
+        if n_spill is None:
+            n_spill = num_slots      # preemption available out of the box
+        if n_spill < 0:
+            raise ValueError("backend needs n_spill >= 0")
         self.model = model
         self.params = params
         self.num_slots = num_slots
         self.max_len = max_len
+        self.n_spill = n_spill
         self.hot_window = min(cfg.kv_hot_window, max_len)
         # recurrent (SSM) prefill states are cumulative over the whole
         # padded sequence, so those architectures need exact-length prefill
@@ -147,6 +174,8 @@ class _JittedBackend:
         self._insert = jax.jit(self._build_insert())
         self._ext_part = jax.jit(self._build_extend(commit=False))
         self._ext_commit = jax.jit(self._build_extend(commit=True))
+        self._evict = jax.jit(self._build_evict())
+        self._restore = jax.jit(self._build_restore())
 
     # ---- placement hooks (ShardedBackend overrides) ------------------
     def _place(self, cache: dict) -> dict:
@@ -160,6 +189,12 @@ class _JittedBackend:
 
     def _constrain_ext(self, ext: dict) -> dict:
         return ext
+
+    def _place_spill(self, spill: dict) -> dict:
+        return spill
+
+    def _constrain_spill(self, spill: dict) -> dict:
+        return spill
 
     # ---- jitted program builders -------------------------------------
     def _build_step(self):
@@ -234,11 +269,53 @@ class _JittedBackend:
 
         return ext_commit
 
+    def _build_evict(self):
+        axes = self._axes
+
+        def evict(cache, spill, spill_writes, slot, lane, length):
+            # pack the slot's cache VERBATIM into the spill lane: the
+            # cold tier is already RRAM-resident int8, and the hot ring /
+            # scales / recurrent states / endurance counters ride along
+            # untouched so the restore is bit-exact
+            img = jax.tree.map(
+                lambda c, a: jax.lax.dynamic_slice_in_dim(c, slot, 1,
+                                                          axis=a),
+                cache, axes)
+            spill = jax.tree.map(
+                lambda s, r, a: jax.lax.dynamic_update_slice_in_dim(
+                    s, r.astype(s.dtype), lane, axis=a),
+                spill, img, axes)
+            spill_writes = KT.bump_spill_writes(spill_writes, lane,
+                                                length)
+            return self._constrain_spill(spill), spill_writes
+
+        return evict
+
+    def _build_restore(self):
+        axes = self._axes
+
+        def restore(cache, spill, lane, slot):
+            img = jax.tree.map(
+                lambda s, a: jax.lax.dynamic_slice_in_dim(s, lane, 1,
+                                                          axis=a),
+                spill, axes)
+            cache = jax.tree.map(
+                lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(
+                    c, r.astype(c.dtype), slot, axis=a),
+                cache, img, axes)
+            return self._constrain(cache)
+
+        return restore
+
     # ---- InferenceBackend surface ------------------------------------
     def slot_kv_bytes(self) -> tuple[int, int]:
         return slot_kv_bytes(self.model, self.max_len)
 
     def init_pool(self) -> KVPoolState:
+        # spill buffers are LAZY: n_spill lanes are reserved (host-side
+        # bookkeeping) but the RRAM-image arrays — a full extra copy of
+        # the pool — only materialize on the first eviction, so engines
+        # that never preempt pay nothing
         cache = self._place(
             self.model.init_cache(self.num_slots, self.max_len))
         return KVPoolState(cache=cache, axes=self._axes)
@@ -262,7 +339,7 @@ class _JittedBackend:
 
     def make_pool(self) -> TieredKVPool:
         return TieredKVPool(self.init_pool(), self._insert_state,
-                            self.fresh_slot)
+                            self.fresh_slot, num_spill_lanes=self.n_spill)
 
     def extend_step(self, batch: dict, state: KVPoolState, ext: dict,
                     slot, pos, length, commit: bool
@@ -275,14 +352,42 @@ class _JittedBackend:
         tok, cache = self._ext_commit(
             self.params, batch, state.cache, ext,
             jnp.asarray(slot, jnp.int32), pos, length)
-        return tok, None, KVPoolState(cache=cache, axes=state.axes)
+        return tok, None, dataclasses.replace(state, cache=cache)
 
     def decode_step(self, toks, state: KVPoolState, pos, active
                     ) -> tuple[jax.Array, KVPoolState]:
         ntoks, cache = self._step(
             self.params, jnp.asarray(toks), state.cache,
             jnp.asarray(pos), jnp.asarray(active))
-        return ntoks, KVPoolState(cache=cache, axes=state.axes)
+        return ntoks, dataclasses.replace(state, cache=cache)
+
+    def evict_slot(self, state: KVPoolState, slot, lane, length
+                   ) -> KVPoolState:
+        if self.n_spill == 0:
+            raise ValueError("backend was built with n_spill=0; nothing "
+                             "can be evicted")
+        if state.spill is None:           # first eviction: materialize
+            state = dataclasses.replace(
+                state,
+                spill=self._place_spill(
+                    self.model.init_cache(self.n_spill, self.max_len)),
+                spill_writes=KT.init_spill_writes(self.n_spill,
+                                                  self.max_len))
+        spill, writes = self._evict(
+            state.cache, state.spill, state.spill_writes,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(lane, jnp.int32),
+            jnp.asarray(length, jnp.int32))
+        return dataclasses.replace(state, spill=spill, spill_writes=writes)
+
+    def restore_slot(self, state: KVPoolState, lane, slot
+                     ) -> KVPoolState:
+        if state.spill is None:
+            raise ValueError("nothing has been spilled; there is no "
+                             "lane to restore from")
+        cache = self._restore(state.cache, state.spill,
+                              jnp.asarray(lane, jnp.int32),
+                              jnp.asarray(slot, jnp.int32))
+        return dataclasses.replace(state, cache=cache)
 
     def _insert_state(self, state: KVPoolState, req_cache: dict, slot
                      ) -> KVPoolState:
@@ -290,7 +395,7 @@ class _JittedBackend:
         recycling scrubs; not part of the serving step surface)."""
         cache = self._insert(state.cache, req_cache,
                              jnp.asarray(slot, jnp.int32))
-        return KVPoolState(cache=cache, axes=state.axes)
+        return dataclasses.replace(state, cache=cache)
 
     # ---- one-release deprecation shims (PR 3) ------------------------
     def prefill(self, batch: dict, length) -> tuple[jax.Array, dict]:
@@ -330,7 +435,8 @@ class ShardedBackend(_JittedBackend):
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
                  mesh: jax.sharding.Mesh | None = None,
-                 rules: ShardingRules | None = None):
+                 rules: ShardingRules | None = None,
+                 n_spill: int | None = None):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh()
@@ -343,9 +449,18 @@ class ShardedBackend(_JittedBackend):
         self._pool_sh = model.cache_shardings(self.rules, num_slots,
                                               max_len)
         self._ext_sh = model.extend_shardings(self.rules, 1, max_len)
+        if n_spill is None:
+            n_spill = num_slots
+        # spill lanes shard exactly like pool slots (lanes -> 'data',
+        # cold kv_seq / kv heads -> 'model'), so evict/restore stay
+        # device-local tree copies wherever divisibility allows
+        self._spill_sh = (model.cache_shardings(self.rules, n_spill,
+                                                max_len)
+                          if n_spill else None)
         params = jax.device_put(params,
                                 model.param_shardings(self.rules))
-        super().__init__(model, params, num_slots, max_len)
+        super().__init__(model, params, num_slots, max_len,
+                         n_spill=n_spill)
 
     def _place(self, cache: dict) -> dict:
         return jax.device_put(cache, self._pool_sh)
@@ -359,12 +474,21 @@ class ShardedBackend(_JittedBackend):
     def _constrain_ext(self, ext: dict) -> dict:
         return jax.lax.with_sharding_constraint(ext, self._ext_sh)
 
+    def _place_spill(self, spill: dict) -> dict:
+        return jax.device_put(spill, self._spill_sh)
+
+    def _constrain_spill(self, spill: dict) -> dict:
+        return jax.lax.with_sharding_constraint(spill, self._spill_sh)
+
 
 def make_backend(kind: str, model: Model, params, *, num_slots: int,
-                 max_len: int, mesh=None) -> InferenceBackend:
+                 max_len: int, mesh=None,
+                 n_spill: int | None = None) -> InferenceBackend:
     """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
     if kind == "local":
-        return LocalBackend(model, params, num_slots, max_len)
+        return LocalBackend(model, params, num_slots, max_len,
+                            n_spill=n_spill)
     if kind == "sharded":
-        return ShardedBackend(model, params, num_slots, max_len, mesh=mesh)
+        return ShardedBackend(model, params, num_slots, max_len, mesh=mesh,
+                              n_spill=n_spill)
     raise ValueError(f"unknown backend kind {kind!r}")

@@ -7,7 +7,13 @@ Step anatomy (one `Engine.step()` call):
      budget (decode slots take one token each), the in-flight prompt
      advances by prefill chunks of at most ``chunk_tokens`` positions,
      and the FCFS queue head is admitted (slot + DRAM/RRAM byte budgets
-     permitting) once the previous prompt committed;
+     permitting) once the previous prompt committed. Under pressure the
+     plan may first PREEMPT: a strictly higher-priority waiter evicts
+     the lowest-priority running victim's KV state into an RRAM spill
+     lane (`backend.evict_slot`, verbatim image + endurance-counter
+     bump), and spilled requests restore bit-exactly into freed slots
+     (`backend.restore_slot`) so resumed decode is token-for-token
+     identical to a never-evicted run;
   2. prefill chunks — each chunk is ONE `backend.extend_step` call that
      extends the in-flight request's chunk-resumable state; the final
      (``commit``) chunk folds it into the already-allocated pool slot and
@@ -40,6 +46,7 @@ callback as they are produced.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import os
 import time
 import warnings
@@ -47,7 +54,7 @@ import warnings
 import numpy as np
 
 from repro.serving.backend import InferenceBackend, LocalBackend
-from repro.serving.request import FINISHED, RUNNING, Request
+from repro.serving.request import FINISHED, PREEMPTED, RUNNING, Request
 from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
                                      PrefillChunk, StepPlan)
 from repro.simulator.hardware import CHIME
@@ -81,6 +88,22 @@ def _env_int(name: str) -> int | None:
     return v
 
 
+def _env_float(name: str) -> float | None:
+    """Float env knob with the same sanitation contract as `_env_int`."""
+    raw = os.environ.get(name, "").strip()
+    if not raw:
+        return None
+    try:
+        v = float(raw)
+    except ValueError:
+        warnings.warn(f"ignoring non-numeric {name}={raw!r}")
+        return None
+    if v < 0:
+        warnings.warn(f"ignoring negative {name}={v}")
+        return None
+    return v
+
+
 @dataclasses.dataclass
 class _Inflight:
     """The one prompt currently prefilling: its pool slot is already
@@ -92,6 +115,19 @@ class _Inflight:
     ext: dict
 
 
+@dataclasses.dataclass
+class _SpillRec:
+    """Host-side resume state of one preempted request: which RRAM lane
+    holds its packed cache image, and the decode-loop scalars
+    (position, last emitted token, occupancy lengths for the endurance
+    audit) that restore re-pins to a slot."""
+    lane: int
+    pos: int
+    tok: int
+    prefill_len: int
+    total_len: int
+
+
 class Engine:
     """Continuous-batching serving engine over an InferenceBackend.
 
@@ -101,14 +137,18 @@ class Engine:
     env knobs, then to None (whole-prompt chunks — the pre-StepPlan
     behavior). When only ``chunk_tokens`` is set, the budget defaults to
     ``chunk_tokens + num_slots`` (one chunk plus all decode slots per
-    step)."""
+    step). ``oversubscribe`` (>= 1; env ``REPRO_SERVE_OVERSUBSCRIBE``,
+    0/None = off) relaxes the scheduler's DRAM admission gate by that
+    factor, spill-lane-backed — the Cambricon-LLM/SLIM-style
+    spill-to-dense-tier trade for serving beyond DRAM capacity."""
 
     def __init__(self, backend, params=None, num_slots: int | None = None,
                  max_len: int | None = None,
                  scheduler: FCFSScheduler | None = None,
                  platform=CHIME, clock=time.perf_counter,
                  token_budget: int | None = None,
-                 chunk_tokens: int | None = None):
+                 chunk_tokens: int | None = None,
+                 oversubscribe: float | None = None):
         if params is not None or num_slots is not None or max_len is not None:
             # one-release compat shim: Engine(model, params, num_slots=,
             # max_len=) builds the local backend the seed engine inlined
@@ -127,6 +167,14 @@ class Engine:
             chunk_tokens = _env_int("REPRO_SERVE_CHUNK_TOKENS")
         if token_budget is None:
             token_budget = _env_int("REPRO_SERVE_TOKEN_BUDGET")
+        if oversubscribe is None:
+            env_v = _env_float("REPRO_SERVE_OVERSUBSCRIBE")
+            if env_v is not None and env_v != 0 and env_v < 1:
+                # env-knob contract: never wedge startup on a bad value
+                warnings.warn(f"ignoring REPRO_SERVE_OVERSUBSCRIBE="
+                              f"{env_v} < 1")
+                env_v = None
+            oversubscribe = env_v
         # 0 is the explicit "disable" sentinel for both knobs (whole
         # prompts / unbounded budget — even when the env knob is set).
         # An explicitly unbounded budget is NOT rebound to the
@@ -135,17 +183,27 @@ class Engine:
                         ("token_budget", token_budget)):
             if v is not None and v < 0:
                 raise ValueError(f"{name} must be >= 0 or None, got {v}")
+        if oversubscribe is not None and oversubscribe != 0 \
+                and oversubscribe < 1:
+            raise ValueError(f"oversubscribe must be >= 1 (or 0/None to "
+                             f"disable), got {oversubscribe}")
+        oversubscribe = oversubscribe or None    # 0 = explicit disable
         explicit_unbounded = token_budget == 0
         chunk_tokens = chunk_tokens or None
         token_budget = token_budget or None
         if (token_budget is None and not explicit_unbounded
                 and chunk_tokens is not None):
             token_budget = chunk_tokens + backend.num_slots
+        # a PR-2/3-era custom backend predates the spill surface: degrade
+        # to preemption-disabled instead of crashing on the missing attr
+        n_spill = getattr(backend, "n_spill", 0)
         if scheduler is None:
             scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
                                       hot_b, cold_b,
                                       token_budget=token_budget,
-                                      chunk_tokens=chunk_tokens)
+                                      chunk_tokens=chunk_tokens,
+                                      oversubscribe=oversubscribe,
+                                      spill_lanes=n_spill)
         elif not isinstance(scheduler, FCFSScheduler) or (
                 type(scheduler).plan is not FCFSScheduler.plan):
             pass  # custom planner: it owns its own chunking policy
@@ -158,7 +216,28 @@ class Engine:
                 scheduler.chunk_tokens = chunk_tokens
             if scheduler.token_budget is None and token_budget is not None:
                 scheduler.token_budget = token_budget
+            if scheduler.oversubscribe is None \
+                    and oversubscribe is not None:
+                scheduler.oversubscribe = oversubscribe
+            if scheduler.spill_lanes is None:
+                scheduler.spill_lanes = n_spill
         self.scheduler = scheduler
+        # one-release compat: a PR-3-era custom plan() override that does
+        # not accept the preemption kwargs (running/free_lanes) still
+        # plans — it just never preempts; warn so it migrates
+        try:
+            params_ = inspect.signature(type(scheduler).plan).parameters
+            self._plan_preemptive = (
+                "running" in params_ and "free_lanes" in params_) or any(
+                p.kind is p.VAR_KEYWORD for p in params_.values())
+        except (TypeError, ValueError):
+            self._plan_preemptive = False
+        if not self._plan_preemptive:
+            warnings.warn(
+                "scheduler.plan() does not accept running=/free_lanes=; "
+                "the engine will plan without preemption. Accept those "
+                "keywords to enable it",
+                DeprecationWarning, stacklevel=2)
         # one-release compat: a PR 1/2-era scheduler subclass that
         # overrides next_request (custom admission policy) but not plan()
         # would silently regress to base-class FCFS planning — drive it
@@ -190,10 +269,12 @@ class Engine:
         self._slot_prefill_len = [0] * n
         self._slot_total_len = [0] * n
         self._inflight: _Inflight | None = None
+        self._spilled: dict[int, _SpillRec] = {}    # rid -> resume state
         self.finished: list[Request] = []
         self._next_rid = 0
         self.stats = {"steps": 0, "prefill_chunks": 0, "extend_calls": 0,
-                      "decode_steps": 0, "decode_tokens": 0}
+                      "decode_steps": 0, "decode_tokens": 0,
+                      "evictions": 0, "restores": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -324,6 +405,53 @@ class Engine:
         req.slot = -1
         self.pool.free(slot)
 
+    # ------------------------------------------------------------------
+    # preemption: spill to RRAM / bit-exact restore
+    # ------------------------------------------------------------------
+    def _evict(self, req: Request):
+        """Pack ``req``'s slot into a free RRAM spill lane and park it.
+        The image is the slot's cache verbatim (plus the decode-loop
+        scalars recorded host-side), so the later restore resumes decode
+        token-for-token identically to a never-evicted run."""
+        slot = req.slot
+        assert slot >= 0 and self._slot_req[slot] is req \
+            and self._active[slot]
+        lane = self.pool.alloc_lane()
+        ctx = int(self._pos[slot])
+        self.pool.state = self.backend.evict_slot(self.pool.state, slot,
+                                                  lane, ctx)
+        self._spilled[req.rid] = _SpillRec(
+            lane=lane, pos=ctx, tok=int(self._tok[slot, 0]),
+            prefill_len=self._slot_prefill_len[slot],
+            total_len=self._slot_total_len[slot])
+        req.status = PREEMPTED
+        req.slot = -1
+        req.evict_times.append(self.clock())
+        req.evict_ctx.append(ctx)
+        self._slot_req[slot] = None
+        self._active[slot] = False
+        self.pool.free(slot)
+        self.stats["evictions"] += 1
+
+    def _restore(self, req: Request):
+        """Scatter ``req``'s spill lane back into a (possibly different)
+        free slot and rejoin decode at the exact position it left."""
+        rec = self._spilled.pop(req.rid)
+        slot = self.pool.alloc()
+        self.pool.state = self.backend.restore_slot(self.pool.state,
+                                                    rec.lane, slot)
+        self.pool.release_lane(rec.lane)
+        req.status = RUNNING
+        req.slot = slot
+        req.restore_times.append(self.clock())
+        self._slot_req[slot] = req
+        self._tok[slot, 0] = rec.tok
+        self._pos[slot] = rec.pos
+        self._active[slot] = True
+        self._slot_prefill_len[slot] = rec.prefill_len
+        self._slot_total_len[slot] = rec.total_len
+        self.stats["restores"] += 1
+
     def _plan_legacy(self):
         """Whole-prompt StepPlan through a subclass's next_request
         (PR 1/2 admission semantics; no chunking)."""
@@ -344,23 +472,35 @@ class Engine:
                         decode=bool(self._active.any()) or bool(chunks))
 
     def step(self) -> list[tuple[int, int, bool]]:
-        """Execute one StepPlan: prefill chunks, then one decode token on
-        every active slot. Returns streamed events: (rid, token, done).
+        """Execute one StepPlan: spill evictions, restores, prefill
+        chunks, then one decode token on every active slot. Returns
+        streamed events: (rid, token, done).
 
         A plan is a commitment, not a peek: producing it pops admitted
-        requests off the scheduler queue, and this method executes every
-        chunk in it before decoding."""
+        requests off the scheduler queue (and moves evicted/restored
+        requests between the running and spilled sets), and this method
+        executes every entry in it before decoding."""
         events: list[tuple[int, int, bool]] = []
         fl = self._inflight
         if self._legacy_sched:
             plan = self._plan_legacy()
         else:
+            kwargs = {}
+            if self._plan_preemptive:
+                kwargs = dict(
+                    running=tuple(r for r in self._slot_req
+                                  if r is not None),
+                    free_lanes=self.pool.free_lanes)
             plan = self.scheduler.plan(
                 active_slots=self.pool.active_slots,
                 decode_slots=int(self._active.sum()),
                 free_slots=self.pool.free_slots,
                 inflight=None if fl is None else (fl.req, fl.pos),
-                chunk_unit=self.backend.chunk_unit)
+                chunk_unit=self.backend.chunk_unit, **kwargs)
+        for req in getattr(plan, "evictions", ()):
+            self._evict(req)
+        for req in getattr(plan, "restores", ()):
+            self._restore(req)
         for ch in plan.chunks:
             events.extend(self._run_chunk(ch))
         self.stats["steps"] += 1
@@ -389,9 +529,10 @@ class Engine:
 
     @property
     def idle(self) -> bool:
-        """True when nothing is queued, prefilling or decoding."""
+        """True when nothing is queued, prefilling, decoding or parked
+        in the spill store."""
         return not (self.scheduler.pending or self.pool.active_slots
-                    or self._inflight is not None)
+                    or self._inflight is not None or self._spilled)
 
     def run(self, requests=None, max_steps: int | None = None
             ) -> list[Request]:
@@ -415,6 +556,9 @@ class Engine:
     # reports
     # ------------------------------------------------------------------
     def endurance_report(self) -> dict:
-        return self.pool.endurance_report(
+        rep = self.pool.endurance_report(
             self._slot_prefill_len, self._slot_total_len,
             self.backend.hot_window)
+        rep["spills"] = self.stats["evictions"]
+        rep["restores"] = self.stats["restores"]
+        return rep

@@ -40,25 +40,49 @@ class KVPoolState:
     ``cache``: the slot-batched cache tree (arrays, or ShapeDtypeStructs
     for abstract use). ``axes``: a matching tree of ints giving each
     leaf's slot-axis index — static metadata, so a KVPoolState flows
-    through jit/pjit with only the cache as traced children.
+    through jit/pjit with only the cache (and spill buffers) as traced
+    children.
+
+    ``spill``: the RRAM-backed preemption spill store — a tree mirroring
+    ``cache`` with the slot axis reinterpreted as *spill lanes* (the same
+    ``axes`` tree addresses it), or None until the first eviction
+    materializes it (lazy: a pool that never preempts never pays for the
+    extra copy) or when the backend was built without lanes.
+    ``spill_writes``: (n_lanes, n_endurance_blocks) int32
+    cumulative RRAM write counters per lane (see
+    `core.kv_tiers.bump_spill_writes`) — unlike the per-slot cache
+    counters these never reset, because RRAM wear survives lane
+    recycling.
     """
 
     cache: dict
     axes: dict
+    spill: dict | None = None
+    spill_writes: jax.Array | None = None
 
     @property
     def num_slots(self) -> int:
         leaf = jax.tree.leaves(self.cache)[0]
         return leaf.shape[jax.tree.leaves(self.axes)[0]]
 
+    @property
+    def num_spill_lanes(self) -> int:
+        if self.spill is None:
+            return 0
+        leaf = jax.tree.leaves(self.spill)[0]
+        return leaf.shape[jax.tree.leaves(self.axes)[0]]
+
     def tree_flatten(self):
         axes_leaves, axes_def = jax.tree_util.tree_flatten(self.axes)
-        return (self.cache,), (tuple(axes_leaves), axes_def)
+        return ((self.cache, self.spill, self.spill_writes),
+                (tuple(axes_leaves), axes_def))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         axes = jax.tree_util.tree_unflatten(aux[1], list(aux[0]))
-        return cls(cache=children[0], axes=axes)
+        cache, spill, spill_writes = children
+        return cls(cache=cache, axes=axes, spill=spill,
+                   spill_writes=spill_writes)
 
 
 def batch_axes(model, cache: dict) -> dict:
@@ -129,12 +153,19 @@ class TieredKVPool:
     one device or a pjit mesh.
     """
 
-    def __init__(self, state: KVPoolState, insert_fn, fresh_slot_fn):
+    def __init__(self, state: KVPoolState, insert_fn, fresh_slot_fn,
+                 num_spill_lanes: int | None = None):
         self.state = state
         self._insert_fn = insert_fn        # (state, req_cache, slot) -> state
         self._fresh_slot = fresh_slot_fn   # () -> batch-1 zero cache
         self.num_slots = state.num_slots
         self._free = list(range(self.num_slots))
+        # spill lanes are reserved here but their arrays materialize
+        # lazily (backend.evict_slot, on the first preemption)
+        if num_spill_lanes is None:
+            num_spill_lanes = state.num_spill_lanes
+        self.num_spill_lanes = num_spill_lanes
+        self._free_lanes = list(range(self.num_spill_lanes))
 
     # ---- views -------------------------------------------------------
     @property
@@ -161,6 +192,20 @@ class TieredKVPool:
         assert 0 <= slot < self.num_slots and slot not in self._free
         self._free.append(slot)
         self._free.sort()
+
+    # ---- spill-lane bookkeeping (host side) --------------------------
+    @property
+    def free_lanes(self) -> int:
+        return len(self._free_lanes)
+
+    def alloc_lane(self) -> int:
+        return self._free_lanes.pop(0)
+
+    def release_lane(self, lane: int):
+        assert 0 <= lane < self.num_spill_lanes \
+            and lane not in self._free_lanes
+        self._free_lanes.append(lane)
+        self._free_lanes.sort()
 
     # ---- cache ops ---------------------------------------------------
     def insert(self, req_cache: dict, slot):
@@ -197,21 +242,33 @@ class TieredKVPool:
         slot whose counters exceed the analytic expectation for its own
         occupancy was recycled without reset — the RRAM endurance
         violation this report exists to catch.
+
+        Spill lanes are reported alongside: their counters are cumulative
+        RRAM wear (one write per touched block per spill event, never
+        reset on lane recycling).
         """
         worst = self.worst_case_writes()
         if worst is None:
-            return {"tiered": False, "write_once_ok": True,
-                    "max_writes_per_cold_slot": 0.0}
-        nb = worst.shape[1]
-        expected = jnp.stack([
-            KT.expected_block_writes(nb, hot_window, int(p), int(t))
-            for p, t in zip(prefill_lens, total_lens)])
-        excess = worst - expected
-        ratio = worst / jnp.maximum(expected, 1)
-        ratio = jnp.where((expected == 0) & (worst > 0), jnp.inf, ratio)
-        return {
-            "tiered": True,
-            "write_once_ok": bool(jnp.all(excess <= 0)),
-            "max_writes_per_cold_slot": float(jnp.max(ratio)),
-            "total_cold_writes": int(jnp.sum(worst)),
-        }
+            rep = {"tiered": False, "write_once_ok": True,
+                   "max_writes_per_cold_slot": 0.0}
+        else:
+            nb = worst.shape[1]
+            expected = jnp.stack([
+                KT.expected_block_writes(nb, hot_window, int(p), int(t))
+                for p, t in zip(prefill_lens, total_lens)])
+            excess = worst - expected
+            ratio = worst / jnp.maximum(expected, 1)
+            ratio = jnp.where((expected == 0) & (worst > 0), jnp.inf,
+                              ratio)
+            rep = {
+                "tiered": True,
+                "write_once_ok": bool(jnp.all(excess <= 0)),
+                "max_writes_per_cold_slot": float(jnp.max(ratio)),
+                "total_cold_writes": int(jnp.sum(worst)),
+            }
+        sw = self.state.spill_writes
+        rep["spill_lanes"] = self.num_spill_lanes
+        if sw is not None:
+            rep["total_spill_writes"] = int(jnp.sum(sw))
+            rep["max_spill_writes_per_block"] = int(jnp.max(sw))
+        return rep

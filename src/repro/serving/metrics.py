@@ -12,8 +12,16 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.simulator.chime_sim import Workload, simulate
+from repro.simulator.chime_sim import Workload, kv_spill_cost, simulate
 from repro.simulator.hardware import CHIME, Platform
+
+
+def _restore_latencies(req) -> np.ndarray:
+    """Per-preemption spilled time: paired (restore - evict) gaps. An
+    eviction whose restore has not happened yet is excluded."""
+    n = min(len(req.evict_times), len(req.restore_times))
+    return (np.asarray(req.restore_times[:n])
+            - np.asarray(req.evict_times[:n]))
 
 
 def request_metrics(req) -> dict:
@@ -23,7 +31,12 @@ def request_metrics(req) -> dict:
         "n_generated": req.n_generated,
         "ttft_s": req.first_token_s - req.arrival_s,
         "latency_s": req.finish_s - req.arrival_s,
+        "priority": req.priority,
+        "preemptions": req.n_evictions,
     }
+    spilled = _restore_latencies(req)
+    if spilled.size:
+        m["spilled_s"] = float(spilled.sum())
     tbt = np.diff(req.token_times)
     if tbt.size:
         m["tbt_p50_s"] = float(np.percentile(tbt, 50))
@@ -60,6 +73,15 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
         m["tbt_p50_s"] = float(np.percentile(tbt, 50))
         m["tbt_p95_s"] = float(np.percentile(tbt, 95))
         m["tbt_max_s"] = float(tbt.max())
+    # preemption: how often requests were spilled to RRAM, and how long
+    # they sat there before their bit-exact restore
+    m["preemptions"] = int(sum(r.n_evictions for r in finished))
+    m["restores"] = int(sum(len(r.restore_times) for r in finished))
+    rl = np.concatenate([_restore_latencies(r) for r in finished]
+                        or [np.zeros(0)])
+    if rl.size:
+        m["restore_latency_p50_s"] = float(np.percentile(rl, 50))
+        m["restore_latency_p95_s"] = float(np.percentile(rl, 95))
     return m
 
 
@@ -69,10 +91,20 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:
     Each request contributes a VQA workload of its own (prompt length,
     generated step count); the per-token attention cost grows with that
     request's context exactly as the engine's tiered reads did.
+    Preempted requests additionally pay the simulated RRAM spill/restore
+    traffic for each recorded eviction context (`kv_spill_cost`).
     """
     energy = sim_s = 0.0
+    spill_j = spill_s = 0.0
+    n_spills = 0
     tokens = 0
     for req in finished:
+        for ctx in req.evict_ctx:
+            ts, es = kv_spill_cost(cfg, platform, int(ctx))
+            tr, er = kv_spill_cost(cfg, platform, int(ctx), restore=True)
+            spill_s += ts + tr
+            spill_j += es + er
+            n_spills += 1
         if req.n_generated == 0:
             continue
         image = req.has_image and cfg.frontend is not None
@@ -82,10 +114,15 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:
         energy += res.energy_j
         sim_s += res.total_s
         tokens += req.n_generated
+    energy += spill_j
+    sim_s += spill_s
     return {
         "platform": platform.name,
         "sim_energy_j": energy,
         "sim_total_s": sim_s,
+        "sim_spills": n_spills,
+        "sim_spill_energy_j": spill_j,
+        "sim_spill_s": spill_s,
         "sim_tokens_per_j": tokens / energy if energy else 0.0,
         "sim_tok_per_s_sequential": tokens / sim_s if sim_s else 0.0,
     }

@@ -14,6 +14,7 @@ import numpy as np
 
 QUEUED = "queued"
 RUNNING = "running"
+PREEMPTED = "preempted"
 FINISHED = "finished"
 
 
@@ -25,6 +26,10 @@ class Request:
     patches: Optional[np.ndarray] = None     # (T_vis, frontend_dim) or None
     eos_id: Optional[int] = None
     on_token: Optional[Callable[["Request", int], Any]] = None
+    # scheduling class: higher runs first, FCFS within a class; a
+    # strictly higher-priority waiter may preempt a running request
+    # (its KV state spills to RRAM and restores bit-exactly later)
+    priority: int = 0
 
     # -- runtime state (engine-owned) ----------------------------------
     status: str = QUEUED
@@ -36,6 +41,13 @@ class Request:
     # per-token emission timestamps (engine clock); diffs are the
     # request's time-between-tokens trace for the TBT percentiles
     token_times: list = dataclasses.field(default_factory=list)
+    # scheduler-owned admission recency (victim tie-break)
+    admit_seq: int = -1
+    # preemption trace: paired evict/restore timestamps (engine clock)
+    # and the context length each eviction packed into its spill lane
+    evict_times: list = dataclasses.field(default_factory=list)
+    restore_times: list = dataclasses.field(default_factory=list)
+    evict_ctx: list = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -59,6 +71,10 @@ class Request:
     def done(self) -> bool:
         return self.status == FINISHED
 
+    @property
+    def n_evictions(self) -> int:
+        return len(self.evict_times)
+
     def emit(self, token: int):
         self.generated.append(int(token))
         if self.on_token is not None:
@@ -73,11 +89,15 @@ class Request:
 
 def make_synthetic_requests(cfg, n: int, prompt_len: int, gen_len: int,
                             seed: int = 0, image_every: int = 0,
-                            jitter: int = 0) -> list[Request]:
+                            jitter: int = 0,
+                            priority_every: int = 0) -> list[Request]:
     """A reproducible request stream for benchmarks/examples. Every
     ``image_every``-th request is a VQA request (visual patches + a text
     tail) when the config has a vision frontend; ``jitter`` varies prompt
-    lengths +-jitter tokens to exercise bucketing."""
+    lengths +-jitter tokens to exercise bucketing; every
+    ``priority_every``-th request is priority-1 interactive traffic
+    (``priority_every=1`` marks all), so a saturated engine exercises
+    preemption."""
     rng = np.random.default_rng(seed)
     out = []
     for i in range(n):
@@ -93,6 +113,8 @@ def make_synthetic_requests(cfg, n: int, prompt_len: int, gen_len: int,
                 (tv, cfg.frontend.frontend_dim)).astype(np.float32)
             plen = max(1, plen - tv)
         toks = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        prio = (1 if priority_every
+                and i % priority_every == priority_every - 1 else 0)
         out.append(Request(rid=i, tokens=toks, max_new_tokens=gen_len,
-                           patches=patches))
+                           patches=patches, priority=prio))
     return out

@@ -18,6 +18,17 @@ stays strictly FCFS — one prompt prefills at a time, and the queue head
 is admitted (slot + byte budgets permitting) only once the previous
 prompt committed. Defaults (no budget, no chunk cap) reproduce the PR 1/2
 admit-whole-prompt behavior exactly.
+
+Since PR 4 the scheduler is PREEMPTIVE under oversubscription: requests
+carry a ``priority`` (higher runs first; FCFS within a class), and when
+the queue head outranks a running request while no slot is free, the
+plan evicts the lowest-priority, most-recently-admitted victim into an
+RRAM spill lane (`StepPlan.evictions`) and later restores it bit-exactly
+(`StepPlan.restores`) once capacity frees. ``oversubscribe`` relaxes the
+DRAM admission gate by that factor — the marginal resident's bulk KV is
+RRAM-resident cold tier, and the overflow must be covered by free spill
+lanes so any overflow slot can always be paged out (Cambricon-LLM/SLIM-
+style spill-to-dense-tier serving beyond DRAM capacity).
 """
 
 from __future__ import annotations
@@ -58,11 +69,25 @@ class CapacityBudget:
         return int(lim) if lim != float("inf") else 2 ** 30
 
     def admits(self, n_resident: int, hot_bytes_per_slot: int,
-               cold_bytes_per_slot: int) -> bool:
-        """Can an (n_resident+1)-th request's KV state fit?"""
-        return ((n_resident + 1) * hot_bytes_per_slot <= self.dram_bytes
-                and (n_resident + 1) * cold_bytes_per_slot
-                <= self.rram_bytes)
+               cold_bytes_per_slot: int, *, oversubscribe: float = 1.0,
+               spilled: int = 0, spill_lanes: int = 0,
+               spilled_bytes: float = 0.0) -> bool:
+        """Can an (n_resident+1)-th request's KV state fit?
+
+        ``oversubscribe`` scales the DRAM gate (>= 1): residents beyond
+        the base DRAM capacity are spill-backed, so the overflow plus the
+        ``spilled`` requests already parked in RRAM must fit in
+        ``spill_lanes`` lanes, and ``spilled_bytes`` (the parked images)
+        counts against the RRAM budget alongside the cold tiers."""
+        hot, cold = hot_bytes_per_slot, cold_bytes_per_slot
+        n = n_resident + 1
+        if n * hot > self.dram_bytes * oversubscribe:
+            return False
+        if hot > 0 and oversubscribe > 1.0:
+            overflow = n - int(self.dram_bytes // hot)
+            if overflow > 0 and overflow + spilled > spill_lanes:
+                return False
+        return n * cold + spilled_bytes <= self.rram_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,13 +106,18 @@ class PrefillChunk:
 
 @dataclasses.dataclass(frozen=True)
 class StepPlan:
-    """The work one engine step executes: prefill chunks (in FCFS order,
-    at most one request in flight at a time) followed by one decode token
-    on every active slot. ``decode`` is True when the step is expected to
-    decode — slots were already active, or a committing chunk activates
-    one this step."""
+    """The work one engine step executes, in order: spill ``evictions``
+    (victim slots pack into RRAM lanes), ``restores`` (spilled requests
+    scatter back into freed slots and rejoin decode this step), prefill
+    chunks (in FCFS order, at most one request in flight at a time), then
+    one decode token on every active slot. ``decode`` is True when the
+    step is expected to decode — slots were already active (surviving the
+    evictions), a restore re-activates one, or a committing chunk
+    activates one this step."""
     chunks: tuple[PrefillChunk, ...]
     decode: bool
+    evictions: tuple = ()         # Requests leaving their slot for a lane
+    restores: tuple = ()          # Requests resuming from a lane
 
     @property
     def prefill_tokens(self) -> int:
@@ -95,23 +125,33 @@ class StepPlan:
 
 
 class FCFSScheduler:
-    """First-come-first-served StepPlan producer gated by the capacity
-    budget and a per-step token budget.
+    """Priority + first-come-first-served StepPlan producer gated by the
+    capacity budget and a per-step token budget.
 
-    Strictly FCFS: if the head of the queue does not fit, nothing is
-    admitted (no starvation of large requests by small ones), and a new
-    prompt starts prefilling only after the in-flight one commits.
+    The queue orders by (priority desc, arrival) — strictly FCFS within
+    a priority class: if the head does not fit, nothing is admitted (no
+    starvation of large requests by small ones), and a new prompt starts
+    prefilling only after the in-flight one commits.
 
     ``token_budget`` caps the total tokens one step computes (each active
     decode slot costs 1; the remainder feeds prefill chunks).
     ``chunk_tokens`` caps a single prefill chunk. Both default to None
     (unbounded / whole-prompt chunks — the pre-StepPlan behavior).
+
+    ``oversubscribe`` (>= 1, None = engine-resolved, default off) relaxes
+    the DRAM admission gate by that factor, spill-lane-backed (see
+    `CapacityBudget.admits`). ``spill_lanes`` (None = engine fills it
+    from the backend) bounds simultaneous preemptions; when a waiter
+    strictly outranks a running request and no slot is free, `plan`
+    evicts the lowest-priority, most-recently-admitted victim.
     """
 
     def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
                  cold_bytes_per_slot: int,
                  token_budget: int | None = None,
-                 chunk_tokens: int | None = None):
+                 chunk_tokens: int | None = None,
+                 oversubscribe: float | None = None,
+                 spill_lanes: int | None = None):
         if chunk_tokens is not None and chunk_tokens < 1:
             # a cap < 1 would make plan() emit degenerate chunks forever
             raise ValueError(f"chunk_tokens must be >= 1 or None, got "
@@ -119,16 +159,32 @@ class FCFSScheduler:
         if token_budget is not None and token_budget < 1:
             raise ValueError(f"token_budget must be >= 1 or None, got "
                              f"{token_budget}")
+        if oversubscribe is not None and oversubscribe < 1:
+            raise ValueError(f"oversubscribe must be >= 1 or None, got "
+                             f"{oversubscribe}")
         self.budget = budget
         self.hot_bytes_per_slot = hot_bytes_per_slot
         self.cold_bytes_per_slot = cold_bytes_per_slot
         self.token_budget = token_budget
         self.chunk_tokens = chunk_tokens
+        self.oversubscribe = oversubscribe
+        self.spill_lanes = spill_lanes
         self._queue: collections.deque[Request] = collections.deque()
+        self._spilled: list[Request] = []
         self.admitted = 0
+        self._seq = 0                 # admission recency (victim pick)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
+        """Enqueue by (priority desc, arrival): FCFS within a class."""
+        pr = req.priority
+        if not self._queue or self._queue[-1].priority >= pr:
+            self._queue.append(req)
+            return
+        for i, q in enumerate(self._queue):
+            if q.priority < pr:
+                self._queue.insert(i, req)
+                return
         self._queue.append(req)
 
     @property
@@ -136,18 +192,36 @@ class FCFSScheduler:
         return len(self._queue)
 
     @property
+    def spilled(self) -> int:
+        return len(self._spilled)
+
+    @property
+    def _slot_bytes(self) -> int:
+        return self.hot_bytes_per_slot + self.cold_bytes_per_slot
+
+    def _admits(self, n_active: int, spilled_after: int) -> bool:
+        """Byte/lane gate for one more resident, with ``spilled_after``
+        requests (still) parked in the spill store."""
+        return self.budget.admits(
+            n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot,
+            oversubscribe=self.oversubscribe or 1.0,
+            spilled=spilled_after,
+            spill_lanes=self.spill_lanes or 0,
+            spilled_bytes=spilled_after * self._slot_bytes)
+
+    @property
     def max_concurrent(self) -> int:
         return self.budget.max_concurrent(self.hot_bytes_per_slot,
                                           self.cold_bytes_per_slot)
 
     def can_admit(self, n_active: int) -> bool:
-        return bool(self._queue) and self.budget.admits(
-            n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot)
+        return bool(self._queue) and self._admits(n_active, self.spilled)
 
     # ------------------------------------------------------------------
     def plan(self, *, active_slots: int, decode_slots: int,
              free_slots: int, inflight: tuple[Request, int] | None,
-             chunk_unit: int = 1) -> StepPlan:
+             chunk_unit: int = 1, running: tuple = (),
+             free_lanes: int = 0) -> StepPlan:
         """Produce this step's work plan.
 
         ``active_slots`` counts resident requests (decoding + the one
@@ -157,11 +231,75 @@ class FCFSScheduler:
         non-final chunk is rounded to a multiple of it so recurrent
         architectures keep their canonical chunk grid (exact-length
         chunks; a chunk may overshoot the token budget by less than one
-        unit rather than stall).
+        unit rather than stall). ``running`` is the victim-candidate set
+        (requests currently decoding; the in-flight prefill is never
+        preempted) and ``free_lanes`` the spill lanes available.
 
-        Planning is a COMMITMENT, not a peek: admissions pop the queue
-        and count toward ``admitted``, and the engine executes every
-        chunk of the returned plan within the same step."""
+        Planning is a COMMITMENT, not a peek: admissions pop the queue,
+        evictions move the victim into the scheduler's spilled set, and
+        restores pop it back — the engine executes every entry of the
+        returned plan within the same step, in eviction -> restore ->
+        chunk -> decode order."""
+        evictions: list[Request] = []
+        restores: list[Request] = []
+        victims = list(running)
+
+        # ---- phase 1: preemptive eviction --------------------------------
+        # one victim per step: when the best waiter (spilled or queue
+        # head) strictly outranks the weakest runner and cannot get in
+        # as things stand — no free slot, OR the byte budgets block it —
+        # spill the lowest-priority, most-recently-admitted runner.
+        # Never evict unless the waiter would actually be admissible
+        # with the victim parked (one fewer resident, one more spilled
+        # image in RRAM): a useless eviction strands the victim and can
+        # livelock the step loop.
+        waiter_blocked = free_slots == 0 \
+            or not self._admits(active_slots, self.spilled)
+        if waiter_blocked and free_lanes > 0 and victims:
+            waiter_prio = None
+            if self._spilled:
+                waiter_prio = self._spilled[0].priority
+            if self._queue and inflight is None:
+                qp = self._queue[0].priority
+                waiter_prio = qp if waiter_prio is None \
+                    else max(waiter_prio, qp)
+            if waiter_prio is not None:
+                victim = min(victims, key=lambda r: (r.priority,
+                                                     -r.admit_seq))
+                if victim.priority < waiter_prio \
+                        and self._admits(active_slots - 1,
+                                         self.spilled + 1):
+                    evictions.append(victim)
+                    victims.remove(victim)
+                    self._spill_insert(victim)
+                    free_lanes -= 1
+                    free_slots += 1
+                    active_slots -= 1
+                    decode_slots -= 1
+
+        # ---- phase 2: restores ------------------------------------------
+        # spilled requests resume in (priority, admission) order, but
+        # yield free slots to a strictly higher-priority queue head that
+        # can actually take them (it would otherwise evict them right
+        # back — thrash). A head that outranks but is byte-blocked does
+        # NOT hold the slot hostage: the restore proceeds, or the step
+        # loop would never drain.
+        while self._spilled and free_slots > 0:
+            cand = self._spilled[0]
+            if any(cand is e for e in evictions):
+                break                     # never round-trip within a step
+            if self._queue and inflight is None \
+                    and self._queue[0].priority > cand.priority \
+                    and self._admits(active_slots, self.spilled):
+                break
+            if not self._admits(active_slots, self.spilled - 1):
+                break
+            restores.append(self._spilled.pop(0))
+            free_slots -= 1
+            active_slots += 1
+            decode_slots += 1             # a restored slot decodes now
+
+        # ---- phase 3: admission + prefill chunks ------------------------
         chunks: list[PrefillChunk] = []
         budget = (float("inf") if self.token_budget is None
                   else self.token_budget - decode_slots)
@@ -172,15 +310,15 @@ class FCFSScheduler:
             if cur is None:
                 if not self._queue or free_slots <= 0:
                     break
-                if not self.budget.admits(active_slots,
-                                          self.hot_bytes_per_slot,
-                                          self.cold_bytes_per_slot):
+                if not self._admits(active_slots, self.spilled):
                     break
                 req = self._queue.popleft()
                 admit = True
                 free_slots -= 1
                 active_slots += 1
                 self.admitted += 1
+                req.admit_seq = self._seq
+                self._seq += 1
                 cur = (req, 0)
             req, p = cur
             remaining = req.prompt_len - p
@@ -194,7 +332,19 @@ class FCFSScheduler:
             cur = None if commit else (req, p + c)
         return StepPlan(chunks=tuple(chunks),
                         decode=decode_slots > 0
-                        or any(c.commit for c in chunks))
+                        or any(c.commit for c in chunks),
+                        evictions=tuple(evictions),
+                        restores=tuple(restores))
+
+    def _spill_insert(self, req: Request):
+        """Park an evicted request, keeping the spilled set in
+        (priority desc, admission asc) restore order."""
+        key = (-req.priority, req.admit_seq)
+        for i, q in enumerate(self._spilled):
+            if (-q.priority, q.admit_seq) > key:
+                self._spilled.insert(i, req)
+                return
+        self._spilled.append(req)
 
     # ---- one-release deprecation shim (PR 3) -------------------------
     def next_request(self, n_active: int) -> Request | None:
@@ -209,4 +359,7 @@ class FCFSScheduler:
         if not self.can_admit(n_active):
             return None
         self.admitted += 1
-        return self._queue.popleft()
+        req = self._queue.popleft()
+        req.admit_seq = self._seq
+        self._seq += 1
+        return req

@@ -164,6 +164,29 @@ def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
     return tok_t, energy, br
 
 
+def kv_spill_cost(cfg: ModelConfig, platform: Platform, ctx: int,
+                  restore: bool = False) -> tuple[float, float]:
+    """Analytical (time_s, energy_j) of moving ONE request's ``ctx``-token
+    KV image between the DRAM stack and the RRAM spill store across UCIe
+    — the per-event cost of a serving preemption. Mirrors
+    `decode_token_cost`'s terms: bytes from the same
+    `kv_bytes_per_token` the capacity admission uses, time bounded by the
+    slower of the UCIe link and the RRAM interface, energy from the RRAM
+    write (spill) or read (restore) energy plus the UCIe transfer."""
+    kv_bytes = kv_bytes_per_token(cfg) * max(ctx, 0)
+    rram = platform.domains.get("rram", platform.domains["dram"])
+    bw = rram.internal_bw
+    ucie_e = 0.0
+    if platform.cross_domain_bw:
+        bw = min(bw, platform.cross_domain_bw)
+        ucie_e = kv_bytes * 8 * platform.cross_domain_pj_bit * 1e-12
+    pj_bit = (rram.read_energy_pj_bit if restore
+              else rram.write_energy_pj_bit)
+    t = kv_bytes / bw if bw else 0.0
+    e = kv_bytes * 8 * pj_bit * 1e-12 + ucie_e
+    return t, e
+
+
 def simulate(cfg: ModelConfig, platform: Platform = CHIME,
              wl: Workload = Workload()) -> SimResult:
     D = cfg.d_model

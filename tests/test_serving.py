@@ -1,44 +1,31 @@
 """Serving subsystem: capacity-aware admission, slot recycling +
 endurance-counter reset, engine-vs-generate token parity, KV pool
-mechanics, backend API + compat shim, streaming + metrics."""
+mechanics, backend API + compat shim, streaming + metrics.
+
+Shared tiny-model / request-stream helpers live in tests/conftest.py.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import build_model as _model
+from conftest import make_requests as _requests
 
 from repro.configs.base import get_config
 from repro.launch.serve import generate
 from repro.models import Model
 from repro.models.counting import kv_bytes_per_token
 from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
-                           LocalBackend, Request, aggregate_metrics,
+                           LocalBackend, aggregate_metrics,
                            make_synthetic_requests, simulated_efficiency,
                            slot_kv_bytes)
 
 jax.config.update("jax_platform_name", "cpu")
 
 
-def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none",
-        kv_policy=kv_policy, kv_hot_window=hot_window)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
 def _engine(model, params, num_slots, max_len, **kw) -> Engine:
     return Engine(LocalBackend(model, params, num_slots, max_len), **kw)
-
-
-def _requests(cfg, specs, seed=0):
-    rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    tokens=rng.integers(0, cfg.vocab_size, p)
-                    .astype(np.int32),
-                    max_new_tokens=g)
-            for i, (p, g) in enumerate(specs)]
 
 
 # ---------------------------------------------------------------------------
@@ -77,7 +64,10 @@ def test_engine_admission_respects_byte_budgets():
     cfg, model, params = _model()
     hot_b, cold_b = slot_kv_bytes(model, max_len=24)
     budget = CapacityBudget(dram_bytes=2 * hot_b, rram_bytes=2 * cold_b)
-    sched = FCFSScheduler(budget, hot_b, cold_b)
+    # oversubscribe pinned to 1.0: this test is about the STRICT gate
+    # (the CI coverage job force-relaxes unset schedulers via
+    # REPRO_SERVE_OVERSUBSCRIBE)
+    sched = FCFSScheduler(budget, hot_b, cold_b, oversubscribe=1.0)
     eng = _engine(model, params, 4, 24, scheduler=sched)
     for r in _requests(cfg, [(8, 6)] * 5):
         eng.submit(r)

@@ -14,49 +14,25 @@ the sharded parity tests on a real multi-device mesh (the CI
 serving-multi-device job does).
 """
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import build_model as _model
+from conftest import generated as _generated
+from conftest import make_mesh as _mesh
+from conftest import make_requests
 
 from repro.configs.base import get_config
-from repro.launch.mesh import make_local_mesh
-from repro.models import Model
 from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
                            LocalBackend, Request, ShardedBackend,
                            make_synthetic_requests)
 
 jax.config.update("jax_platform_name", "cpu")
 
-
-def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none",
-        kv_policy=kv_policy, kv_hot_window=hot_window)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
-
-def _requests(cfg, specs, seed=3):
-    rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    tokens=rng.integers(0, cfg.vocab_size, p)
-                    .astype(np.int32),
-                    max_new_tokens=g)
-            for i, (p, g) in enumerate(specs)]
-
-
-def _mesh():
-    n = jax.device_count()
-    if n == 1:
-        return make_local_mesh()
-    m = 2 if n % 2 == 0 else 1
-    return jax.make_mesh((n // m, m), ("data", "model"))
-
-
-def _generated(done):
-    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+_requests = functools.partial(make_requests, seed=3)
 
 
 # prompts sized so the chunk cap forces multi-chunk prefill; recurrent

@@ -1,0 +1,597 @@
+"""Preemptive serving under oversubscription (PR 4).
+
+The load-bearing property: a preempted request — its KV slot evicted
+into an RRAM spill lane mid-decode and later restored into a (possibly
+different) slot — produces EXACTLY the same tokens as an uninterrupted
+run and as the single-request `generate` oracle, on GQA, MLA(+MoE),
+RWKV6 and hybrid-Mamba2 architectures, on both the local vmapped and the
+pjit-sharded backend, with whole-prompt and chunked prefill. Plus: the
+differential oracle over mixed text/VQA streams, oversubscribed
+admission, the endurance accounting of evict/restore cycles
+(spill-lane counters advance exactly per `expected_spill_block_writes`,
+slot counters stay exactly per `expected_block_writes`), preemption
+metrics, and the n_spill=0 degraded mode.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise
+the sharded cases on a real multi-device mesh (the CI multi-device job
+does).
+"""
+
+import jax
+import numpy as np
+import pytest
+from conftest import build_model, generated, make_mesh, make_requests, \
+    oracle_tokens
+
+from repro.core import kv_tiers as KT
+from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
+                           LocalBackend, ShardedBackend,
+                           aggregate_metrics, make_synthetic_requests,
+                           request_metrics, simulated_efficiency)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# prompts sized so the victim is mid-decode when the intruder lands and
+# still has tokens left after its restore; recurrent archs use
+# grid-aligned chunk caps (cfg.ssm.chunk_size)
+CASES = {
+    "granite-3-2b": dict(low=[(12, 10), (12, 10)], high=(8, 4),
+                         max_len=32, chunk=5),
+    "deepseek-v2-lite": dict(low=[(12, 8), (12, 8)], high=(8, 4),
+                             max_len=24, chunk=5),
+    "rwkv6-7b": dict(low=[(40, 8), (40, 8)], high=(32, 4),
+                     max_len=48, chunk=32),
+    "zamba2-1.2b": dict(low=[(24, 8), (24, 8)], high=(16, 4),
+                        max_len=48, chunk=16),
+}
+
+_oracle_memo: dict = {}
+
+
+def _oracle(arch, model, params, req):
+    key = (arch, req.rid)
+    if key not in _oracle_memo:
+        _oracle_memo[key] = oracle_tokens(model, params, req)
+    return _oracle_memo[key]
+
+
+def _case_requests(cfg, arch):
+    """The case's stream: two priority-0 victims then one priority-1
+    intruder (deterministic per arch, shared by every backend/chunking
+    variant so the oracle memoizes)."""
+    case = CASES[arch]
+    reqs = make_requests(cfg, case["low"] + [case["high"]], seed=3,
+                         priorities=[0, 0, 1])
+    return reqs[:-1], reqs[-1]
+
+
+def _run_preempted(backend, low, high, chunk_tokens):
+    """Drive the engine into a forced preemption: a DRAM budget of
+    exactly two residents, both slots decoding low-priority work when
+    the priority-1 intruder arrives."""
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 1e15), hot_b, cold_b,
+                          oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched, chunk_tokens=chunk_tokens)
+    for r in low:
+        eng.submit(r)
+    guard = 0
+    while not (eng.pool.active_slots == 2 and eng._inflight is None):
+        eng.step()
+        guard += 1
+        assert guard < 60, "victims never reached steady decode"
+    eng.step()                        # give the victim decode context
+    eng.submit(high)
+    eng.run(max_steps=400)
+    assert eng.stats["evictions"] >= 1, eng.stats
+    assert eng.stats["restores"] == eng.stats["evictions"]
+    assert len(eng.finished) == len(low) + 1
+    victims = [r for r in low + [high] if r.n_evictions]
+    assert victims and all(r.priority == 0 for r in victims)
+    return eng
+
+
+@pytest.mark.parametrize("backend_kind", ["local", "sharded"])
+@pytest.mark.parametrize("arch", list(CASES))
+def test_preempted_restore_token_parity(arch, backend_kind):
+    """Acceptance: preempted-then-restored == uninterrupted == oracle,
+    whole-prompt AND chunked prefill, on both backends."""
+    case = CASES[arch]
+    cfg, model, params = build_model(arch)
+    if backend_kind == "sharded":
+        backend = ShardedBackend(model, params, 2, case["max_len"],
+                                 mesh=make_mesh())
+    else:
+        backend = LocalBackend(model, params, 2, case["max_len"])
+    for chunk in (0, case["chunk"]):          # whole-prompt and chunked
+        low, high = _case_requests(cfg, arch)
+        eng = _run_preempted(backend, low, high, chunk)
+        for r in low + [high]:
+            assert r.generated == _oracle(arch, model, params, r), (
+                f"{arch}/{backend_kind}/chunk={chunk}: rid {r.rid} "
+                f"diverged after preemption")
+        if cfg.kv_policy == "tiered":
+            assert eng.endurance_report()["write_once_ok"]
+
+
+# ---------------------------------------------------------------------------
+# differential oracle: random mixed text/VQA streams == sequential
+# per-request generate(), including runs that force evictions
+# ---------------------------------------------------------------------------
+def test_oracle_mixed_vqa_stream_with_evictions():
+    cfg, model, params = build_model("mobilevlm-1.7b", hot_window=16)
+    backend = LocalBackend(model, params, 2, 40)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    low = make_synthetic_requests(cfg, 3, prompt_len=20, gen_len=8,
+                                  seed=2, image_every=2)
+    (high,) = make_synthetic_requests(cfg, 1, prompt_len=12, gen_len=3,
+                                      seed=7)
+    high.rid, high.priority = 3, 1
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 1e15), hot_b, cold_b,
+                          oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched)
+    for r in low:
+        eng.submit(r)
+    guard = 0
+    while eng.pool.active_slots < 2 or eng._inflight is not None:
+        eng.step()
+        guard += 1
+        assert guard < 60
+    eng.submit(high)
+    done = eng.run(max_steps=400)
+    assert eng.stats["evictions"] >= 1
+    assert len(done) == 4
+    for r in low + [high]:
+        assert r.generated == oracle_tokens(model, params, r), r.rid
+    assert eng.endurance_report()["write_once_ok"]
+
+
+def test_oracle_random_stream_oversubscribed():
+    """Oversubscription is a pure admission relaxation: a random stream
+    served at 2x the DRAM budget still matches the sequential oracle
+    token-for-token, at genuinely higher concurrency."""
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 4, 24)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    budget = CapacityBudget(2 * hot_b, 1e15)
+    specs = [(8, 6), (13, 6), (16, 4), (8, 8), (11, 5), (16, 6)]
+
+    def run(over):
+        sched = FCFSScheduler(budget, hot_b, cold_b, oversubscribe=over,
+                              spill_lanes=4)
+        eng = Engine(backend, scheduler=sched)
+        reqs = make_requests(cfg, specs, seed=11)
+        peak = 0
+        for r in reqs:
+            eng.submit(r)
+        while not eng.idle:
+            eng.step()
+            peak = max(peak, eng.pool.active_slots)
+        return generated(eng.finished), peak
+
+    blocked, peak_b = run(1.0)
+    oversub, peak_o = run(2.0)
+    assert peak_b == 2 and peak_o == 4
+    assert blocked == oversub
+    oracle = [oracle_tokens(model, params, r)
+              for r in make_requests(cfg, specs, seed=11)]
+    assert oversub == oracle
+
+
+# ---------------------------------------------------------------------------
+# endurance accounting of evict/restore cycles
+# ---------------------------------------------------------------------------
+def test_evict_restore_endurance_accounting_exact():
+    """Two evict/restore cycles of one long-lived request: the spill
+    lane's RRAM counters advance exactly per expected_spill_block_writes
+    (one write per touched block per spill), the victim's SLOT counters
+    stay exactly per expected_block_writes (the restore is verbatim —
+    no phantom cold writes), and the report reflects the spills."""
+    cfg, model, params = build_model(hot_window=4)
+    backend = LocalBackend(model, params, 2, 64)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 1e15), hot_b, cold_b,
+                          oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched)
+    victim, partner = make_requests(cfg, [(8, 30), (8, 30)], seed=5)
+    eng.submit(victim)
+    eng.submit(partner)
+    eng.step()                       # both decoding
+    eng.step()
+    intruders = make_requests(cfg, [(8, 3), (8, 3)], seed=6,
+                              priorities=[1, 1])
+    for k, intr in enumerate(intruders):
+        intr.rid = 10 + k
+        eng.submit(intr)
+        guard = 0                    # drain the intruder, forcing one
+        while intr.status != "finished":     # evict+restore cycle
+            eng.step()
+            guard += 1
+            assert guard < 100
+        for _ in range(2):
+            eng.step()
+    eng.run(max_steps=400)
+    assert eng.stats["evictions"] == 2 and eng.stats["restores"] == 2
+    evicted = victim if victim.n_evictions else partner
+    assert evicted.n_evictions == 2
+
+    sw = np.asarray(eng.pool.state.spill_writes)
+    nb = sw.shape[1]
+    # both cycles recycled the same (lowest-index) freed lane
+    expected_lane = np.asarray(KT.expected_spill_block_writes(
+        nb, evicted.evict_ctx))
+    np.testing.assert_array_equal(sw.sum(axis=0), expected_lane)
+    assert int(sw.sum()) == sum(
+        (ctx + KT.ENDURANCE_BLOCK - 1) // KT.ENDURANCE_BLOCK
+        for ctx in evicted.evict_ctx)
+
+    # slot counters: every occupant's cold writes are exactly the
+    # analytic expectation — evict/restore cycles added none
+    worst = np.asarray(eng.pool.worst_case_writes())
+    for slot in range(2):
+        p = eng._slot_prefill_len[slot]
+        t = eng._slot_total_len[slot]
+        np.testing.assert_array_equal(
+            worst[slot], np.asarray(KT.expected_block_writes(
+                worst.shape[1], backend.hot_window, p, t)))
+    rep = eng.endurance_report()
+    assert rep["write_once_ok"]
+    assert rep["spills"] == 2 and rep["restores"] == 2
+    assert rep["total_spill_writes"] == int(sw.sum())
+    assert rep["spill_lanes"] == 2
+
+
+def test_spill_block_writes_unit():
+    nb = KT.n_endurance_blocks(512)
+    assert nb == 4
+    np.testing.assert_array_equal(
+        np.asarray(KT.spill_block_writes(nb, 0)), [0, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(KT.spill_block_writes(nb, 1)), [1, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(KT.spill_block_writes(nb, 128)), [1, 0, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(KT.spill_block_writes(nb, 129)), [1, 1, 0, 0])
+    np.testing.assert_array_equal(
+        np.asarray(KT.expected_spill_block_writes(nb, [129, 300, 512])),
+        [3, 3, 2, 1])
+
+
+# ---------------------------------------------------------------------------
+# metrics + degraded modes
+# ---------------------------------------------------------------------------
+def test_preemption_metrics_and_sim_spill_energy():
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 32)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 1e15), hot_b, cold_b,
+                          oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched)
+    low, high = _case_requests(cfg, "granite-3-2b")
+    for r in low:
+        eng.submit(r)
+    eng.step()
+    eng.step()
+    eng.submit(high)
+    done = eng.run(max_steps=300)
+    m = aggregate_metrics(done, wall_s=1.0)
+    assert m["preemptions"] >= 1 and m["restores"] == m["preemptions"]
+    assert m["restore_latency_p95_s"] >= m["restore_latency_p50_s"] >= 0
+    victim = next(r for r in done if r.n_evictions)
+    rm = request_metrics(victim)
+    assert rm["preemptions"] == victim.n_evictions
+    assert rm["spilled_s"] > 0
+    sim = simulated_efficiency(cfg, done)
+    assert sim["sim_spills"] == eng.stats["evictions"]
+    assert sim["sim_spill_energy_j"] > 0
+    assert sim["sim_energy_j"] > sim["sim_spill_energy_j"]
+
+
+def test_spill_buffers_materialize_lazily():
+    """Reserved lanes cost nothing until the first eviction: the pool's
+    spill tree is None at construction (no doubled KV memory for
+    engines that never preempt) and materializes on evict_slot."""
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 24)
+    pool = backend.make_pool()
+    assert backend.n_spill == 2 and pool.num_spill_lanes == 2
+    assert pool.state.spill is None and pool.state.spill_writes is None
+    with pytest.raises(ValueError, match="nothing has been spilled"):
+        backend.restore_slot(pool.state, 0, 0)
+    st = backend.evict_slot(pool.state, 0, 0, 4)
+    assert st.spill is not None and st.num_spill_lanes == 2
+    assert int(np.asarray(st.spill_writes).sum()) == 1
+
+
+def test_no_spill_lanes_disables_preemption():
+    """n_spill=0: the pool has no spill buffers, evict_slot refuses, and
+    the scheduler simply keeps the intruder queued (no preemption, no
+    crash) until a slot frees — strict PR 3 behavior."""
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 32, n_spill=0)
+    assert backend.n_spill == 0
+    pool = backend.make_pool()
+    assert pool.num_spill_lanes == 0 and pool.state.spill is None
+    with pytest.raises(ValueError, match="n_spill=0"):
+        backend.evict_slot(pool.state, 0, 0, 4)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 1e15), hot_b, cold_b,
+                          oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched)
+    low, high = _case_requests(cfg, "granite-3-2b")
+    for r in low:
+        eng.submit(r)
+    eng.step()
+    eng.submit(high)
+    done = eng.run(max_steps=300)
+    assert eng.stats["evictions"] == 0
+    assert len(done) == 3
+    for r in low + [high]:
+        assert r.generated == _oracle("granite-3-2b", model, params, r)
+
+
+# ---------------------------------------------------------------------------
+# scheduler preemption policy (host-only, no model)
+# ---------------------------------------------------------------------------
+def _req(rid, plen=8, gen=4, prio=0):
+    from repro.serving import Request
+    return Request(rid=rid, tokens=np.zeros(plen, np.int32),
+                   max_new_tokens=gen, priority=prio)
+
+
+def _sched(dram_slots=2, **kw):
+    kw.setdefault("oversubscribe", 1.0)
+    kw.setdefault("spill_lanes", 2)
+    return FCFSScheduler(CapacityBudget(100 * dram_slots, 1e9),
+                         hot_bytes_per_slot=100, cold_bytes_per_slot=10,
+                         **kw)
+
+
+def test_plan_evicts_lowest_priority_latest_admitted():
+    sched = _sched(dram_slots=3)
+    running = [_req(0, prio=0), _req(1, prio=0), _req(2, prio=1)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=2))
+    plan = sched.plan(active_slots=3, decode_slots=3, free_slots=0,
+                      inflight=None, running=tuple(running), free_lanes=2)
+    assert [r.rid for r in plan.evictions] == [1]   # prio 0, latest
+    assert sched.spilled == 1
+    # the freed slot goes to the prio-2 head in the same plan
+    assert [(c.req.rid, c.admit) for c in plan.chunks] == [(9, True)]
+
+
+def test_plan_never_evicts_for_equal_priority():
+    sched = _sched()
+    running = [_req(0, prio=1), _req(1, prio=1)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=1))
+    plan = sched.plan(active_slots=2, decode_slots=2, free_slots=0,
+                      inflight=None, running=tuple(running), free_lanes=2)
+    assert plan.evictions == () and plan.chunks == ()
+    assert sched.pending == 1
+
+
+def test_plan_never_evicts_without_free_lane_or_inflight_waiter():
+    sched = _sched()
+    running = [_req(0, prio=0), _req(1, prio=0)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=2))
+    # no lane -> no eviction
+    plan = sched.plan(active_slots=2, decode_slots=2, free_slots=0,
+                      inflight=None, running=tuple(running), free_lanes=0)
+    assert plan.evictions == ()
+    # an in-flight prefill means the head is not the next admission;
+    # nothing outranks the runners on the spilled side either
+    other = _req(7, plen=16)
+    plan = sched.plan(active_slots=2, decode_slots=1, free_slots=0,
+                      inflight=(other, 8), running=tuple(running),
+                      free_lanes=2)
+    assert plan.evictions == ()
+
+
+def test_restore_yields_to_strictly_higher_priority_head():
+    """Anti-thrash: a spilled prio-0 request must not grab the free slot
+    a queued prio-1 head is about to take (it would be evicted right
+    back); at equal priority the spilled request resumes FIRST (it was
+    admitted earlier — FCFS)."""
+    sched = _sched(dram_slots=3)
+    running = [_req(0, prio=0), _req(1, prio=0)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=2))
+    plan = sched.plan(active_slots=2, decode_slots=2, free_slots=0,
+                      inflight=None, running=tuple(running), free_lanes=2)
+    assert [r.rid for r in plan.evictions] == [1]
+    # slot frees while a prio-1 head waits: the head wins, rid 1 stays
+    # spilled
+    sched.submit(_req(10, prio=1))
+    plan2 = sched.plan(active_slots=1, decode_slots=1, free_slots=2,
+                       inflight=None, running=(running[0],), free_lanes=1)
+    assert plan2.restores == ()
+    assert plan2.chunks[0].req.rid == 10
+    # equal priority: the spilled request resumes before a new admission
+    sched.submit(_req(11, prio=0))
+    plan3 = sched.plan(active_slots=2, decode_slots=2, free_slots=1,
+                       inflight=None, running=(running[0],), free_lanes=1)
+    assert [r.rid for r in plan3.restores] == [1]
+    assert plan3.chunks == ()                    # no slot left for rid 11
+
+
+def test_no_eviction_when_waiter_cannot_be_admitted_after_it():
+    """Anti-livelock: a high-priority waiter whose cold tier cannot fit
+    in RRAM alongside the parked spill image must NOT trigger an
+    eviction — the victim would be stranded and the plan empty forever."""
+    # rram 150: holds 2 resident cold tiers (80) but not waiter cold
+    # (40) + one parked image (140)
+    budget = CapacityBudget(dram_bytes=200, rram_bytes=150)
+    sched = FCFSScheduler(budget, 100, 40, oversubscribe=1.0,
+                          spill_lanes=2)
+    running = [_req(0), _req(1)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=2))
+    plan = sched.plan(active_slots=2, decode_slots=2, free_slots=0,
+                      inflight=None, running=tuple(running), free_lanes=2)
+    assert plan.evictions == () and plan.chunks == ()
+    assert sched.spilled == 0
+
+
+def test_restore_proceeds_when_higher_priority_head_is_byte_blocked():
+    """Anti-livelock: a byte-blocked higher-priority head must not hold
+    a free slot hostage — the spilled request restores (which also frees
+    the RRAM image the head is waiting on)."""
+    budget = CapacityBudget(dram_bytes=200, rram_bytes=150)
+    sched = FCFSScheduler(budget, 100, 40, oversubscribe=1.0,
+                          spill_lanes=2)
+    victim = _req(0)
+    victim.admit_seq = 0
+    sched._spill_insert(victim)
+    sched.submit(_req(9, prio=2))
+    # head outranks but cold(40) + parked image(140) > 150: restore wins
+    plan = sched.plan(active_slots=0, decode_slots=0, free_slots=2,
+                      inflight=None, running=(), free_lanes=1)
+    assert [r.rid for r in plan.restores] == [0]
+
+
+def test_eviction_fires_when_byte_blocked_with_free_slots():
+    """The preemption trigger is 'the waiter cannot get in', not
+    'no free slot': with 4 slots but a 2-resident DRAM budget, a
+    priority-1 waiter evicts a priority-0 victim even though slots are
+    free — the victim's hot bytes are what it needs."""
+    budget = CapacityBudget(dram_bytes=200, rram_bytes=1e9)
+    sched = FCFSScheduler(budget, 100, 40, oversubscribe=1.0,
+                          spill_lanes=2)
+    running = [_req(0), _req(1)]
+    for i, r in enumerate(running):
+        r.admit_seq = i
+    sched.submit(_req(9, prio=1))
+    plan = sched.plan(active_slots=2, decode_slots=2, free_slots=2,
+                      inflight=None, running=tuple(running), free_lanes=2)
+    assert [r.rid for r in plan.evictions] == [1]
+    assert [(c.req.rid, c.admit) for c in plan.chunks] == [(9, True)]
+
+
+def test_no_livelock_when_rram_cannot_hold_spill_plus_waiter():
+    """Engine-level regression of the scheduler livelock: with an RRAM
+    budget that fits both residents' cold tiers but not a spill image
+    alongside the intruder, the run must drain normally (no eviction,
+    intruder served after a victim finishes) instead of spinning."""
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 32)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    budget = CapacityBudget(2 * hot_b, 2 * cold_b + hot_b // 2)
+    sched = FCFSScheduler(budget, hot_b, cold_b, oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched)
+    low, high = _case_requests(cfg, "granite-3-2b")
+    for r in low:
+        eng.submit(r)
+    eng.step()
+    eng.step()
+    eng.submit(high)
+    done = eng.run(max_steps=300)
+    assert len(done) == 3 and eng.stats["evictions"] == 0
+    for r in low + [high]:
+        assert r.generated == _oracle("granite-3-2b", model, params, r)
+
+
+def test_oversubscription_requires_spill_lane_backing():
+    """Residents beyond the base DRAM capacity must be coverable by free
+    spill lanes: with lanes they admit, without lanes the gate holds."""
+    budget = CapacityBudget(100 * 2, 1e9)
+    backed = FCFSScheduler(budget, 100, 10, oversubscribe=2.0,
+                           spill_lanes=2)
+    bare = FCFSScheduler(budget, 100, 10, oversubscribe=2.0,
+                         spill_lanes=0)
+    for s in (backed, bare):
+        for i in range(4):
+            s.submit(_req(i))
+    p1 = backed.plan(active_slots=0, decode_slots=0, free_slots=4,
+                     inflight=None)
+    assert len([c for c in p1.chunks if c.admit]) == 4
+    p2 = bare.plan(active_slots=0, decode_slots=0, free_slots=4,
+                   inflight=None)
+    assert len([c for c in p2.chunks if c.admit]) == 2
+
+
+def test_fcfs_within_priority_class_admission_order():
+    sched = _sched(dram_slots=8, spill_lanes=0)
+    reqs = [_req(0, prio=0), _req(1, prio=1), _req(2, prio=0),
+            _req(3, prio=1), _req(4, prio=2)]
+    for r in reqs:
+        sched.submit(r)
+    plan = sched.plan(active_slots=0, decode_slots=0, free_slots=8,
+                      inflight=None)
+    order = [c.req.rid for c in plan.chunks if c.admit]
+    assert order == [4, 1, 3, 0, 2]   # priority desc, FCFS within class
+
+
+def test_pr3_era_custom_planner_still_plans(recwarn):
+    """One-release compat: a custom plan() override with the PR-3
+    signature (no running=/free_lanes=) must keep serving — the engine
+    warns and plans without preemption instead of crashing."""
+    import warnings as _w
+
+    planned = []
+
+    class OldSigScheduler(FCFSScheduler):
+        def plan(self, *, active_slots, decode_slots, free_slots,
+                 inflight, chunk_unit=1):
+            planned.append(True)
+            return super().plan(active_slots=active_slots,
+                                decode_slots=decode_slots,
+                                free_slots=free_slots, inflight=inflight,
+                                chunk_unit=chunk_unit)
+
+    cfg, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 24)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = OldSigScheduler(CapacityBudget(1e12, 1e12), hot_b, cold_b)
+    with pytest.warns(DeprecationWarning, match="running=/free_lanes="):
+        eng = Engine(backend, scheduler=sched)
+    with _w.catch_warnings():
+        _w.simplefilter("ignore", DeprecationWarning)
+        done = eng.run(make_requests(cfg, [(8, 3), (8, 3)], seed=2),
+                       max_steps=100)
+    assert len(done) == 2 and planned
+    assert eng.stats["evictions"] == 0
+
+
+def test_pr3_era_custom_backend_without_n_spill():
+    """A custom InferenceBackend written against the PR-2/3 protocol has
+    no n_spill attribute: Engine degrades to preemption-disabled."""
+    from repro.serving import TieredKVPool
+
+    _, model, params = build_model()
+    backend = LocalBackend(model, params, 2, 24)
+    del backend.n_spill
+    backend.make_pool = lambda: TieredKVPool(          # PR-3 pool wiring
+        backend.init_pool(), backend._insert_state, backend.fresh_slot)
+    eng = Engine(backend)
+    assert eng.scheduler.spill_lanes == 0
+    assert eng.pool.num_spill_lanes == 0
+
+
+def test_engine_oversubscribe_env_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_SERVE_OVERSUBSCRIBE", "2")
+    cfg, model, params = build_model()
+    eng = Engine(LocalBackend(model, params, 2, 24))
+    assert eng.scheduler.oversubscribe == 2.0
+    # explicit 0 disables even under the env knob
+    eng0 = Engine(LocalBackend(model, params, 2, 24), oversubscribe=0)
+    assert eng0.scheduler.oversubscribe is None
+    # a sub-1 ENV value warns and is ignored (an env var never wedges
+    # startup); the same value as an explicit ARG is a hard error
+    monkeypatch.setenv("REPRO_SERVE_OVERSUBSCRIBE", "0.5")
+    with pytest.warns(UserWarning, match="OVERSUBSCRIBE"):
+        eng = Engine(LocalBackend(model, params, 2, 24))
+    assert eng.scheduler.oversubscribe is None
+    with pytest.raises(ValueError, match="oversubscribe"):
+        Engine(LocalBackend(model, params, 2, 24), oversubscribe=0.5)
+    monkeypatch.setenv("REPRO_SERVE_OVERSUBSCRIBE", "nope")
+    with pytest.warns(UserWarning, match="non-numeric"):
+        eng = Engine(LocalBackend(model, params, 2, 24))
+    assert eng.scheduler.oversubscribe is None

@@ -1,0 +1,190 @@
+"""Hypothesis property tests on serving-scheduler invariants.
+
+Over random request streams (lengths, priorities), random byte budgets
+and random knob settings (token budget, chunk cap, oversubscription,
+spill lanes), a simulated engine loop drives `FCFSScheduler.plan` and
+checks on every step that the scheduler:
+
+* never plans prefill past the per-step token budget (decode slots,
+  including restored ones, take one token each; chunk_unit=1 so no
+  grid-rounding slack applies);
+* never admits past the DRAM/RRAM gating — the oversubscribed DRAM gate,
+  the spill-lane backing of overflow residents, and the RRAM budget
+  (resident cold tiers + occupied spill-lane images);
+* preserves FCFS admission order within a priority class;
+* only evicts running victims that a strictly higher-priority waiter
+  outranks, and only into free lanes; only restores what it spilled;
+* with preemption out of the picture (uniform priorities, no
+  oversubscription), drains every request (liveness).
+
+Host-only: no jax, no model — thousands of scheduler steps per second.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving import CapacityBudget, FCFSScheduler, Request  # noqa: E402
+
+HOT, COLD = 100, 40
+SLOT = HOT + COLD
+
+
+def _req(rid, plen, gen, prio):
+    return Request(rid=rid, tokens=np.zeros(plen, np.int32),
+                   max_new_tokens=gen, priority=prio)
+
+
+@st.composite
+def scenarios(draw):
+    n_req = draw(st.integers(1, 9))
+    reqs = [(draw(st.integers(1, 24)), draw(st.integers(1, 5)),
+             draw(st.integers(0, 2))) for _ in range(n_req)]
+    dram_slots = draw(st.integers(1, 5))
+    rram_slots = draw(st.integers(2, 12))
+    num_slots = draw(st.integers(1, 6))
+    token_budget = draw(st.one_of(st.none(), st.integers(1, 20)))
+    chunk_tokens = draw(st.one_of(st.none(), st.integers(1, 8)))
+    oversubscribe = draw(st.sampled_from([None, 1.0, 1.5, 2.0]))
+    spill_lanes = draw(st.integers(0, 4))
+    return (reqs, dram_slots, rram_slots, num_slots, token_budget,
+            chunk_tokens, oversubscribe, spill_lanes)
+
+
+def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
+           chunk_tokens, oversubscribe, spill_lanes, max_steps=80):
+    """Simulated engine loop; returns (admitted_log, finished, state)."""
+    dram_bytes = HOT * dram_slots
+    rram_bytes = COLD * rram_slots + SLOT * spill_lanes
+    sched = FCFSScheduler(CapacityBudget(dram_bytes, rram_bytes),
+                          HOT, COLD, token_budget=token_budget,
+                          chunk_tokens=chunk_tokens,
+                          oversubscribe=oversubscribe,
+                          spill_lanes=spill_lanes)
+    requests = [_req(i, p, g, pr) for i, (p, g, pr) in enumerate(reqs)]
+    for r in requests:
+        sched.submit(r)
+    active: list = []          # (req, remaining_gen) decoding
+    inflight = None            # (req, next_pos)
+    free_slots = num_slots
+    spilled: dict = {}         # rid -> remaining_gen
+    admitted_log: list = []
+    finished: list = []
+    factor = oversubscribe or 1.0
+
+    def gates_ok(residents, n_spilled):
+        assert residents * HOT <= dram_bytes * factor + 1e-9
+        base = dram_bytes // HOT
+        overflow = residents - base
+        if overflow > 0:
+            assert overflow + n_spilled <= spill_lanes
+        assert residents * COLD + n_spilled * SLOT <= rram_bytes + 1e-9
+
+    for _ in range(max_steps):
+        decode_before = len(active)
+        running = tuple(r for r, _ in active)
+        plan = sched.plan(
+            active_slots=len(active) + (1 if inflight else 0),
+            decode_slots=decode_before,
+            free_slots=free_slots,
+            inflight=inflight,
+            chunk_unit=1,
+            running=running,
+            free_lanes=spill_lanes - len(spilled))
+
+        # ---- evictions: only running victims, only into free lanes ----
+        for r in plan.evictions:
+            assert any(rr is r for rr, _ in active), "evicted non-runner"
+            assert len(spilled) < spill_lanes, "evicted without a lane"
+            gen = next(g for rr, g in active if rr is r)
+            active = [(rr, g) for rr, g in active if rr is not r]
+            spilled[r.rid] = gen
+            free_slots += 1
+        # ---- restores: only what was spilled -------------------------
+        for r in plan.restores:
+            assert r.rid in spilled, "restored a never-spilled request"
+            assert free_slots > 0
+            active.append((r, spilled.pop(r.rid)))
+            free_slots -= 1
+
+        # ---- token budget: chunks fit what decode leaves -------------
+        eff_decode = len(active)
+        if token_budget is not None:
+            assert plan.prefill_tokens <= max(0,
+                                              token_budget - eff_decode), \
+                (plan.prefill_tokens, token_budget, eff_decode)
+
+        # ---- chunks ---------------------------------------------------
+        for c in plan.chunks:
+            if c.admit:
+                assert inflight is None, "second prompt while one in flight"
+                assert free_slots > 0
+                admitted_log.append(c.req)
+                free_slots -= 1
+                inflight = (c.req, 0)
+                gates_ok(len(active) + 1, len(spilled))
+            r, p = inflight
+            assert c.req is r and c.start == p
+            assert c.length >= 1
+            inflight = None if c.commit else (r, p + c.length)
+            if c.commit:
+                assert p + c.length == r.prompt_len
+                if r.max_new_tokens == 1:
+                    finished.append(r)
+                    free_slots += 1
+                else:
+                    active.append((r, r.max_new_tokens - 1))
+
+        assert free_slots >= 0
+        # slot conservation: occupied + free is exactly the pool
+        assert len(active) + (1 if inflight else 0) + free_slots \
+            == num_slots
+        # ---- decode ---------------------------------------------------
+        if plan.decode and active:
+            nxt = []
+            for r, g in active:
+                g -= 1
+                if g <= 0:
+                    finished.append(r)
+                    free_slots += 1
+                else:
+                    nxt.append((r, g))
+            active = nxt
+        if not (active or inflight or spilled or sched.pending):
+            break
+    return admitted_log, finished, (active, inflight, spilled, sched)
+
+
+@settings(max_examples=60, deadline=None)
+@given(scenarios())
+def test_scheduler_invariants_over_random_streams(sc):
+    (reqs, dram_slots, rram_slots, num_slots, token_budget,
+     chunk_tokens, oversubscribe, spill_lanes) = sc
+    admitted, finished, _ = _drive(reqs, dram_slots, rram_slots,
+                                   num_slots, token_budget, chunk_tokens,
+                                   oversubscribe, spill_lanes)
+    # FCFS within a priority class: rids are submission-ordered
+    for prio in {pr for _, _, pr in reqs}:
+        rids = [r.rid for r in admitted if r.priority == prio]
+        assert rids == sorted(rids), "FCFS violated within a class"
+    # nothing admitted twice, nothing invented
+    assert len({r.rid for r in admitted}) == len(admitted)
+    assert len({r.rid for r in finished}) == len(finished)
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenarios())
+def test_scheduler_drains_uniform_priority_streams(sc):
+    """Liveness: no priorities, no oversubscription -> every submitted
+    request finishes (FCFS cannot wedge while one resident fits)."""
+    (reqs, dram_slots, rram_slots, num_slots, token_budget,
+     chunk_tokens, _, _) = sc
+    reqs = [(p, g, 0) for p, g, _ in reqs]
+    _, finished, (active, inflight, spilled, sched) = _drive(
+        reqs, dram_slots, rram_slots, num_slots, token_budget,
+        chunk_tokens, None, 0,
+        max_steps=40 + sum(p + g for p, g, _ in reqs) * 2)
+    assert not (active or inflight or spilled or sched.pending)
+    assert len(finished) == len(reqs)

@@ -10,57 +10,25 @@ Run the multi-device path directly with:
         PYTHONPATH=src python -m pytest -q tests/test_serving_sharded.py
 """
 
-import os
-import pathlib
 import subprocess
 import sys
 
 import jax
-import numpy as np
 import pytest
+from conftest import build_model as _model
+from conftest import forced_device_env
+from conftest import generated as _generated
+from conftest import make_mesh as _mesh
+from conftest import make_requests
 
-from repro.configs.base import get_config
-from repro.launch.mesh import make_local_mesh
-from repro.models import Model
-from repro.serving import (Engine, LocalBackend, Request, ShardedBackend,
+from repro.serving import (Engine, LocalBackend, ShardedBackend,
                            make_synthetic_requests)
 
 jax.config.update("jax_platform_name", "cpu")
 
-REPO = pathlib.Path(__file__).resolve().parent.parent
-
-
-def _model(arch="granite-3-2b", kv_policy="tiered", hot_window=8):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none",
-        kv_policy=kv_policy, kv_hot_window=hot_window)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    return cfg, model, params
-
 
 def _requests(cfg, specs, seed=3):
-    rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    tokens=rng.integers(0, cfg.vocab_size, p)
-                    .astype(np.int32),
-                    max_new_tokens=g)
-            for i, (p, g) in enumerate(specs)]
-
-
-def _mesh():
-    """Mesh over every visible device: (1, 1) locally; on a forced
-    8-device host platform, slots shard over 'data' and the cold kv_seq
-    over 'model'."""
-    n = jax.device_count()
-    if n == 1:
-        return make_local_mesh()
-    m = 2 if n % 2 == 0 else 1
-    return jax.make_mesh((n // m, m), ("data", "model"))
-
-
-def _generated(done):
-    return [r.generated for r in sorted(done, key=lambda r: r.rid)]
+    return make_requests(cfg, specs, seed=seed)
 
 
 def _run_parity(arch, specs, *, kv_policy="tiered", num_slots=4,
@@ -135,15 +103,11 @@ def test_sharded_parity_on_8_fake_cpu_devices():
     if jax.device_count() >= 8:
         pytest.skip("already on a multi-device host platform; the "
                     "in-process parity tests above cover it")
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + " --xla_force_host_platform_device_count=8")
-    env["JAX_PLATFORM_NAME"] = "cpu"
-    env["PYTHONPATH"] = (str(REPO / "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
+    from conftest import REPO
     proc = subprocess.run(
         [sys.executable, __file__, "--eight-device-selfcheck"],
-        cwd=REPO, env=env, capture_output=True, text=True, timeout=900)
+        cwd=REPO, env=forced_device_env(8), capture_output=True,
+        text=True, timeout=900)
     assert proc.returncode == 0, (
         f"8-device parity selfcheck failed:\n{proc.stdout}\n{proc.stderr}")
     assert "PARITY OK on 8 devices" in proc.stdout
