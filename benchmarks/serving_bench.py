@@ -11,6 +11,11 @@ shared tiered KV pool actually buy aggregate tok/s?
     PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
         --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8 \
         --oversubscribe 2
+    # compressed-spill capacity comparison: SAME DRAM + RRAM spill
+    # budgets, full-precision vs int8 lanes (lane count = budget//bytes):
+    PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
+        --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8 \
+        --oversubscribe 2 --spill-compress
 
 For each slot count in {1, --concurrency} the bench drains the SAME
 request stream (2x the slot count, so slots recycle) through a fresh
@@ -55,29 +60,44 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
               token_budget: int | None = None,
               image_every: int = 0, priority_every: int = 0,
               dram_budget_slots: int | None = None,
-              oversubscribe: float | None = None) -> dict:
+              oversubscribe: float | None = None,
+              n_spill: int | None = None,
+              spill_compress: bool | None = None,
+              idle_offload_steps: int | None = None,
+              rram_spill_bytes: float | None = None) -> dict:
     backend = make_backend(backend_kind, model, params,
                            num_slots=concurrency, max_len=max_len,
-                           mesh=mesh)
+                           mesh=mesh, n_spill=n_spill,
+                           spill_compress=spill_compress)
 
     def fresh_engine():
         # verbatim: None consults the env knobs, explicit 0 disables.
         # With a --oversubscribe comparison, the DRAM byte budget is
         # clamped to dram_budget_slots residents: the blocked baseline
         # runs at that concurrency, the oversubscribed run reclaims the
-        # full slot count with spill-lane-backed admission.
+        # full slot count with spill-lane-backed admission. With
+        # rram_spill_bytes, the RRAM budget for parked spill images is
+        # capped too, so the lane COUNT the budget can back is
+        # n_spill = rram_spill_bytes // backend.spill_lane_bytes() —
+        # the capacity lever int8-compressed lanes pull.
         sched = None
         if dram_budget_slots:
             hot_b, cold_b = backend.slot_kv_bytes()
             rram = CapacityBudget.from_platform(CHIME).rram_bytes
+            if rram_spill_bytes is not None:
+                rram = concurrency * cold_b + rram_spill_bytes
             sched = FCFSScheduler(
                 CapacityBudget(dram_budget_slots * hot_b, rram),
                 hot_b, cold_b, oversubscribe=oversubscribe or 1.0,
-                spill_lanes=backend.n_spill)
+                spill_lanes=backend.n_spill,
+                lane_bytes=backend.spill_lane_bytes(),
+                idle_offload_steps=idle_offload_steps)
         return Engine(backend, scheduler=sched,
                       chunk_tokens=chunk_tokens,
                       token_budget=token_budget,
-                      oversubscribe=None if sched else oversubscribe)
+                      oversubscribe=None if sched else oversubscribe,
+                      idle_offload_steps=None if sched
+                      else idle_offload_steps)
 
     def stream(seed):
         return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
@@ -114,6 +134,12 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["oversubscribe"] = getattr(engine.scheduler, "oversubscribe",
                                  None) or 0
     m["dram_budget_slots"] = dram_budget_slots or 0
+    m["spill_lanes"] = backend.n_spill
+    m["spill_compress"] = bool(backend.spill_compress)
+    m["spill_lane_bytes"] = backend.spill_lane_bytes()
+    m["idle_offload_steps"] = getattr(engine.scheduler,
+                                      "idle_offload_steps", None) or 0
+    m["idle_offloads"] = engine.stats["idle_offloads"]
     m["evictions"] = engine.stats["evictions"]
     m["steps"] = len(step_s)
     m["p50_step_s"] = float(np.percentile(step_s, 50))
@@ -123,7 +149,8 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
         m["p95_decode_step_s"] = float(np.percentile(decode_step_s, 95))
     m["engine_stats"] = dict(engine.stats)
     m["endurance"] = engine.endurance_report()
-    m["sim"] = simulated_efficiency(cfg, done)
+    m["sim"] = simulated_efficiency(
+        cfg, done, spill_compressed=backend.spill_compress)
     return m
 
 
@@ -178,6 +205,16 @@ def main(argv=None):
                          "(DRAM budget = concurrency/F residents) "
                          "against spill-backed oversubscription at the "
                          "full slot count")
+    ap.add_argument("--spill-compress", action="store_true", default=None,
+                    help="int8-compress spill-lane hot rings; with "
+                         "--oversubscribe > 1 this switches to the "
+                         "capacity comparison: blocked baseline vs "
+                         "full-precision lanes vs compressed lanes at "
+                         "the SAME fixed DRAM + RRAM spill budgets "
+                         "(lane count = budget // lane bytes)")
+    ap.add_argument("--idle-offload-steps", type=int, default=None,
+                    help="enable proactive idle cold-KV offload at this "
+                         "residency threshold (see serving/scheduler.py)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip appending to the BENCH json trajectory")
     args = ap.parse_args(argv)
@@ -214,7 +251,57 @@ def main(argv=None):
               f"({'OK' if rep['write_once_ok'] else 'VIOLATED'})")
 
     results = []
-    if args.oversubscribe and args.oversubscribe > 1:
+    if args.oversubscribe and args.oversubscribe > 1 \
+            and args.spill_compress:
+        # CAPACITY comparison at fixed DRAM *and* RRAM spill budgets:
+        # oversubscribed residents beyond the DRAM base must be backed
+        # by spill lanes, and the lane count is what a fixed RRAM spill
+        # budget divided by the lane bytes affords. The budget is sized
+        # so int8-compressed lanes back the full overflow; full-
+        # precision (PR 4) lanes afford fewer lanes from the SAME bytes,
+        # so the baseline admits fewer residents — completed tok/s at
+        # the full slot count is the comparison.
+        from repro.serving import spill_lane_bytes as lane_bytes_of
+        base = max(1, int(round(args.concurrency / args.oversubscribe)))
+        overflow = args.concurrency - base
+        full_b = lane_bytes_of(model, max_len, compressed=False)
+        comp_b = lane_bytes_of(model, max_len, compressed=True)
+        budget = overflow * comp_b
+        lanes_full = int(budget // full_b)
+        lanes_comp = int(budget // comp_b)
+        print(f"[bench] RRAM spill budget {budget} B: "
+              f"{lanes_full} full-precision lanes "
+              f"({full_b} B) vs {lanes_comp} int8 lanes ({comp_b} B)")
+        for label, compress, lanes in (
+                ("blocked baseline", False, 0),
+                (f"oversubscribe={args.oversubscribe:g} fp-lanes",
+                 False, lanes_full),
+                (f"oversubscribe={args.oversubscribe:g} int8-lanes",
+                 True, lanes_comp)):
+            r = bench_one(model, params, cfg, args.backend,
+                          args.concurrency, n_requests, args.prompt_len,
+                          args.gen, max_len, mesh=mesh,
+                          chunk_tokens=args.chunk_tokens,
+                          token_budget=args.token_budget,
+                          image_every=args.image_every,
+                          priority_every=args.priority_every,
+                          dram_budget_slots=base,
+                          oversubscribe=(1.0 if lanes == 0
+                                         else args.oversubscribe),
+                          n_spill=lanes, spill_compress=compress,
+                          idle_offload_steps=args.idle_offload_steps,
+                          rram_spill_bytes=budget)
+            results.append(r)
+            show(f"dram-budget={base} {label}", r)
+        gain_fp = results[1]["tok_per_s"] / max(results[0]["tok_per_s"],
+                                                1e-9)
+        gain_int8 = results[2]["tok_per_s"] / max(results[0]["tok_per_s"],
+                                                  1e-9)
+        print(f"[bench] at a fixed DRAM budget of {base} residents and "
+              f"{budget} B of spill RRAM: full-precision lanes buy "
+              f"x{gain_fp:.2f}, int8 lanes x{gain_int8:.2f} completed "
+              f"tok/s over the admission-blocked baseline")
+    elif args.oversubscribe and args.oversubscribe > 1:
         # admission-blocked baseline vs spill-backed oversubscription at
         # the SAME tight DRAM budget (concurrency/F residents): the
         # oversubscribed engine reclaims the full slot count, the
@@ -228,7 +315,8 @@ def main(argv=None):
                           token_budget=args.token_budget,
                           image_every=args.image_every,
                           priority_every=args.priority_every,
-                          dram_budget_slots=base, oversubscribe=over)
+                          dram_budget_slots=base, oversubscribe=over,
+                          idle_offload_steps=args.idle_offload_steps)
             results.append(r)
             show(f"dram-budget={base} oversubscribe={over:g}", r)
         speedup = results[1]["tok_per_s"] / max(results[0]["tok_per_s"],
@@ -243,7 +331,9 @@ def main(argv=None):
                           chunk_tokens=args.chunk_tokens,
                           token_budget=args.token_budget,
                           image_every=args.image_every,
-                          priority_every=args.priority_every)
+                          priority_every=args.priority_every,
+                          spill_compress=args.spill_compress,
+                          idle_offload_steps=args.idle_offload_steps)
             results.append(r)
             show(f"concurrency={c:3d}", r)
         if len(results) == 2:
@@ -256,11 +346,14 @@ def main(argv=None):
             "ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
             "arch": args.arch,
             "kv_policy": args.kv_policy,
+            "hot_window": args.hot_window,
             "prompt_len": args.prompt_len,
             "gen": args.gen,
             "chunk_tokens": results[-1]["chunk_tokens"],
             "image_every": args.image_every,
             "oversubscribe": args.oversubscribe or 0,
+            "spill_compress": bool(args.spill_compress),
+            "idle_offload_steps": args.idle_offload_steps or 0,
             "runs": results,
         })
         print(f"[bench] appended to {BENCH_JSON}")

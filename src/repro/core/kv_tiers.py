@@ -23,7 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.quant import dequantize_per_token, quantize_per_token
+from repro.core.quant import (compress_spill_hot, decompress_spill_hot,
+                              dequantize_per_token, quantize_per_token)
 
 ENDURANCE_BLOCK = 128  # tokens per endurance-accounting block
 
@@ -247,6 +248,57 @@ def expected_spill_block_writes(n_blocks: int, lengths) -> jax.Array:
     out = jnp.zeros((n_blocks,), jnp.int32)
     for ln in lengths:
         out = out + spill_block_writes(n_blocks, ln)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Compressed spill lanes (opt-in, serving --spill-compress).
+#
+# A verbatim lane mirrors the slot's tiered store exactly. A COMPRESSED
+# lane replaces the full-precision hot ring with the int8 codec form
+# (core.quant.compress_spill_hot): "hot" becomes "hot_q" (int8, same
+# shape) + "hot_scale" (f32, trailing axis 1). Everything else — cold
+# int8 tier, cold scales, endurance counters, flat stores, recurrent
+# states — rides verbatim, so only the hot window pays the (bounded,
+# documented) requantization error on restore; a flat-policy spill stays
+# bit-exact even with compression enabled. Endurance accounting is
+# unchanged: a spill is still one write per touched ENDURANCE_BLOCK of
+# the packed image, whatever the representation.
+# ---------------------------------------------------------------------------
+def spill_store_compress(store: dict) -> dict:
+    """Pack one tiered store into compressed-lane form (jit-safe)."""
+    out = {k: v for k, v in store.items() if k != "hot"}
+    out["hot_q"], out["hot_scale"] = compress_spill_hot(store["hot"])
+    return out
+
+
+def spill_store_decompress(store: dict, dtype=jnp.bfloat16) -> dict:
+    """Requantization-aware restore of a compressed-lane store."""
+    out = {k: v for k, v in store.items()
+           if k not in ("hot_q", "hot_scale")}
+    out["hot"] = decompress_spill_hot(store["hot_q"], store["hot_scale"],
+                                      dtype)
+    return out
+
+
+def spill_store_template(store: dict) -> dict:
+    """Zero compressed-lane arrays shaped after a full-precision store
+    (arrays or ShapeDtypeStructs) — the lazy lane materialization."""
+    out = {k: v for k, v in store.items() if k != "hot"}
+    hot = store["hot"]
+    out["hot_q"] = jnp.zeros(hot.shape, jnp.int8)
+    out["hot_scale"] = jnp.ones(hot.shape[:-1] + (1,), jnp.float32)
+    return out
+
+
+def spill_store_meta(store: dict) -> dict:
+    """Mirror per-leaf metadata (slot-axis indices, shardings) onto the
+    compressed layout: the hot entry serves both hot_q (same shape) and
+    hot_scale (same leading axes; the trailing scale axis is size 1 and
+    never sharded)."""
+    out = {k: v for k, v in store.items() if k != "hot"}
+    out["hot_q"] = store["hot"]
+    out["hot_scale"] = store["hot"]
     return out
 
 

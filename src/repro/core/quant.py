@@ -82,6 +82,52 @@ def dequantize_per_token(q: jax.Array, scale: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# RRAM spill-lane hot-ring codec (serving: compressed cold-KV offload).
+#
+# A spill lane parks a whole slot image in the dense RRAM tier. The cold
+# tier is already int8 (written once, read rarely) and rides verbatim,
+# but the hot ring is full precision — the dominant lane bytes. The
+# opt-in compressed lane re-quantizes the hot window with the SAME
+# per-(token, head) symmetric int8 scheme as the cold tier, so one codec
+# (and one error contract) covers both representations.
+#
+# Tolerance contract: for each feature row r (the trailing axis that
+# shares one scale), symmetric int8 round-to-nearest guarantees
+#
+#     |x - decompress(compress(x))| <= max|r| / 254      elementwise
+#
+# (scale = max|r|/127 and rounding error <= scale/2; an all-zero row is
+# reconstructed exactly). `spill_codec_bound` materializes that bound;
+# the hypothesis codec suite holds the round trip to it over random
+# shapes/scales, and tests/test_serving_spill.py holds the end-to-end
+# logit drift of a restored compressed lane to the documented
+# SPILL_COMPRESS tolerances in that file.
+# ---------------------------------------------------------------------------
+SPILL_CODEC_QMAX = 127.0  # int8 symmetric levels per polarity
+
+
+def compress_spill_hot(hot: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Hot-ring -> (int8, f32 scale[..., 1]) lane form (per-(token, head)
+    symmetric, the cold-tier scheme; see the codec contract above)."""
+    return quantize_per_token(hot)
+
+
+def decompress_spill_hot(q: jax.Array, scale: jax.Array,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    """Requantization-aware restore of a compressed hot ring: dequantize
+    back to the cache dtype; error bounded by `spill_codec_bound`."""
+    return dequantize_per_token(q, scale, dtype)
+
+
+def spill_codec_bound(x: jax.Array) -> jax.Array:
+    """Elementwise reconstruction-error bound of the spill codec for
+    input ``x``: max|feature row| / 254 (broadcast over the row)."""
+    xf = x.astype(jnp.float32)
+    return jnp.max(jnp.abs(xf), axis=-1, keepdims=True) \
+        / (2.0 * SPILL_CODEC_QMAX) * jnp.ones_like(xf)
+
+
+# ---------------------------------------------------------------------------
 # gradient compression (cross-pod int8 all-reduce)
 # ---------------------------------------------------------------------------
 def compress_grad(g: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -28,6 +28,16 @@ marks every K-th request as priority-1 interactive traffic, submitted
 mid-run so it preempts a running victim: the victim's KV slot spills to
 an RRAM lane and restores bit-exactly (tests/test_serving_preempt.py
 holds preempted == uninterrupted == generate()).
+
+--idle-offload-steps N turns RRAM into a first-class capacity tier:
+runners resident >= N decode steps proactively offload (bit-exact,
+verbatim lanes) so blocked equal-priority waiters admit under the base
+DRAM gate — no oversubscribe factor needed
+(tests/test_serving_spill.py holds offloaded == uninterrupted ==
+generate()). --spill-compress stores the lanes' hot ring int8-quantized
+(a parked image costs ~the cold tier's bytes; restore is then
+bounded-error rather than bit-exact — see the codec contract in
+core/quant.py).
 """
 
 from __future__ import annotations
@@ -115,6 +125,18 @@ def main(argv=None):
                     help="RRAM spill lanes for preempted slots "
                          "(default: one per decode slot; 0 disables "
                          "preemption)")
+    ap.add_argument("--spill-compress", action="store_true", default=None,
+                    help="int8-compress the hot ring in spill lanes "
+                         "(bounded-error restore; a parked image then "
+                         "costs ~the cold tier's RRAM bytes; default: "
+                         "consult REPRO_SERVE_SPILL_COMPRESS)")
+    ap.add_argument("--idle-offload-steps", type=int, default=None,
+                    help="proactively offload a runner resident >= this "
+                         "many decode steps to an RRAM lane when an "
+                         "equal-or-higher-priority waiter is blocked "
+                         "(0 = off even under "
+                         "REPRO_SERVE_IDLE_OFFLOAD_STEPS; default: "
+                         "consult the env knob)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
@@ -133,12 +155,13 @@ def main(argv=None):
         args.backend, model, params, num_slots=args.concurrency,
         max_len=max_len,
         mesh=get_mesh(args.mesh) if args.backend == "sharded" else None,
-        n_spill=args.spill_lanes)
+        n_spill=args.spill_lanes, spill_compress=args.spill_compress)
     # pass through verbatim: None consults the env knobs, an explicit 0
     # disables (Engine treats 0 as the disable sentinel)
     engine = Engine(backend, chunk_tokens=args.chunk_tokens,
                     token_budget=args.token_budget,
-                    oversubscribe=args.oversubscribe)
+                    oversubscribe=args.oversubscribe,
+                    idle_offload_steps=args.idle_offload_steps)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
                                    args.gen, image_every=args.image_every,
                                    priority_every=args.priority_every)
@@ -172,9 +195,13 @@ def main(argv=None):
         s = engine.stats
         print(f"[serve] chunked prefill: {s['prefill_chunks']} chunks / "
               f"{s['extend_calls']} extend calls over {s['steps']} steps")
-    if engine.stats["evictions"]:
-        print(f"[serve] preemption: {engine.stats['evictions']} "
-              f"evictions / {engine.stats['restores']} restores "
+    if engine.stats["evictions"] or engine.stats["idle_offloads"]:
+        lane_kind = ("int8-compressed" if backend.spill_compress
+                     else "verbatim")
+        print(f"[serve] spill ({lane_kind} lanes): "
+              f"{engine.stats['evictions']} preemptions / "
+              f"{engine.stats['idle_offloads']} idle offloads / "
+              f"{engine.stats['restores']} restores "
               f"(restore latency p95 "
               f"{m.get('restore_latency_p95_s', 0.0) * 1e3:.1f} ms)")
     if args.kv_policy == "tiered":
@@ -182,7 +209,8 @@ def main(argv=None):
         print(f"[serve] endurance: max writes/cold-slot="
               f"{rep['max_writes_per_cold_slot']:.2f} "
               f"(write-once {'OK' if rep['write_once_ok'] else 'VIOLATED'})")
-    sim = simulated_efficiency(cfg, done)
+    sim = simulated_efficiency(cfg, done,
+                               spill_compressed=backend.spill_compress)
     print(f"[serve] simulated on {sim['platform']}: "
           f"{sim['sim_tokens_per_j']:.1f} tok/J, "
           f"{sim['sim_energy_j']:.3f} J total")

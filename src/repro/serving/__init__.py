@@ -14,7 +14,10 @@ single-request `launch/serve.py` path into a serving engine:
                    DRAM/RRAM byte budgets of simulator/hardware.py +
                    Sarathi-style chunked prefill under a per-step token
                    budget + preemptive eviction/restore planning under
-                   spill-lane-backed oversubscription
+                   spill-lane-backed oversubscription + proactive idle
+                   cold-KV offload (RRAM as a first-class capacity tier;
+                   opt-in int8-compressed lanes shrink the per-image
+                   RRAM charge)
 * `backend.py`   — the `InferenceBackend` executor seam: the unified
                    jitted `extend_step` (chunked prefill directly into a
                    pool slot) + `decode_step`; `LocalBackend`
@@ -36,7 +39,7 @@ from repro.serving.backend import (InferenceBackend, LocalBackend,
                                    ShardedBackend, make_backend)
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool,
-                                   slot_kv_bytes)
+                                   slot_kv_bytes, spill_lane_bytes)
 from repro.serving.metrics import (aggregate_metrics, request_metrics,
                                    simulated_efficiency)
 from repro.serving.request import Request, make_synthetic_requests
@@ -48,5 +51,5 @@ __all__ = [
     "PrefillChunk", "ShardedBackend", "StepPlan", "TieredKVPool",
     "aggregate_metrics", "make_backend", "make_synthetic_requests",
     "request_metrics", "simulated_efficiency", "slot_kv_bytes",
-    "Request", "CapacityBudget", "FCFSScheduler",
+    "spill_lane_bytes", "Request", "CapacityBudget", "FCFSScheduler",
 ]

@@ -45,6 +45,7 @@ async prefill, disaggregated tiers) plugs in.
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
 from typing import Protocol, runtime_checkable
 
@@ -54,8 +55,20 @@ import jax.numpy as jnp
 from repro.core import kv_tiers as KT
 from repro.models import Model
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool, batch_axes,
-                                   slot_kv_bytes, tree_expand, tree_squeeze)
+                                   map_spill_stores, slot_kv_bytes,
+                                   spill_lane_bytes, tree_expand,
+                                   tree_squeeze)
 from repro.sharding import ShardingRules
+
+
+def _resolve_spill_compress(flag: bool | None) -> bool:
+    """Resolve the compressed-spill-lane knob: an explicit bool wins;
+    None consults ``REPRO_SERVE_SPILL_COMPRESS`` (unset/empty/"0" = off,
+    anything else = on — an env var must never wedge startup)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_SERVE_SPILL_COMPRESS",
+                          "").strip() not in ("", "0")
 
 
 @runtime_checkable
@@ -73,9 +86,21 @@ class InferenceBackend(Protocol):
     n_spill: int              # RRAM spill lanes for preempted slots (0 =
     #   preemption disabled); lane ARRAYS materialize lazily on the
     #   first eviction, so unpreempted pools never pay the extra copy
+    spill_compress: bool      # opt-in int8 hot-ring spill codec: lanes
+    #   store the hot window requantized (kv_tiers.spill_store_compress)
+    #   so a parked image costs ~the cold tier's bytes; restore is then
+    #   requantization-aware and bounded-error instead of bit-exact (the
+    #   cold tier, scales, recurrent states and flat stores still ride
+    #   verbatim). Default off: REPRO_SERVE_SPILL_COMPRESS / CLI
+    #   --spill-compress.
 
     def slot_kv_bytes(self) -> tuple[int, int]:
         """(dram_hot, rram_cold) bytes one resident request pins."""
+        ...
+
+    def spill_lane_bytes(self) -> int:
+        """RRAM bytes one OCCUPIED spill lane pins (the scheduler's
+        per-parked-image charge; smaller under spill_compress)."""
         ...
 
     def make_pool(self) -> TieredKVPool:
@@ -105,18 +130,22 @@ class InferenceBackend(Protocol):
 
     def evict_slot(self, state: KVPoolState, slot, lane, length
                    ) -> KVPoolState:
-        """Pack slot ``slot``'s cache verbatim into RRAM spill lane
-        ``lane`` and bump that lane's per-block endurance counters for a
-        ``length``-token context (one write per touched block — the
-        one-shot `store_from_full`-style image write)."""
+        """Pack slot ``slot``'s cache into RRAM spill lane ``lane``
+        (verbatim by default; hot ring int8-requantized under
+        spill_compress) and bump that lane's per-block endurance
+        counters for a ``length``-token context (one write per touched
+        block — the one-shot `store_from_full`-style image write,
+        whatever the representation)."""
         ...
 
     def restore_slot(self, state: KVPoolState, lane, slot
                      ) -> KVPoolState:
-        """Scatter spill lane ``lane`` back into pool slot ``slot``
-        (bit-exact: the image was packed verbatim, so resumed decode is
-        token-for-token identical to never-evicted decode). Restore
-        writes land in DRAM, so no RRAM counters move."""
+        """Scatter spill lane ``lane`` back into pool slot ``slot``.
+        Bit-exact when the image was packed verbatim — resumed decode is
+        token-for-token identical to never-evicted decode; under
+        spill_compress the hot ring dequantizes within the documented
+        codec bound instead. Restore writes land in DRAM, so no RRAM
+        counters move."""
         ...
 
     def prefill(self, batch: dict, length: int
@@ -138,7 +167,8 @@ class _JittedBackend:
     Subclasses steer placement via `_place` and `_constrain`."""
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
-                 n_spill: int | None = None):
+                 n_spill: int | None = None,
+                 spill_compress: bool | None = None):
         cfg = model.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only model cannot be served")
@@ -167,6 +197,16 @@ class _JittedBackend:
                            else 1)
         shapes, _ = model.cache_spec(num_slots, max_len)
         self._axes = batch_axes(model, shapes)
+        # compressed spill lanes restructure the tiered stores (hot ->
+        # hot_q/hot_scale), so the lane tree carries its own axis tree.
+        # A flat cache has no hot ring — nothing to compress — so the
+        # flag resolves to off there, keeping spill_compress truthful
+        # for lane-byte accounting, sim pricing and the CLI report.
+        self.spill_compress = _resolve_spill_compress(spill_compress) \
+            and cfg.kv_policy == "tiered"
+        self._spill_axes = (map_spill_stores(self._axes,
+                                             KT.spill_store_meta)
+                            if self.spill_compress else self._axes)
         self._zero_slot = None
         self._zero_ext = None
         self._step = jax.jit(self._build_step())
@@ -270,21 +310,26 @@ class _JittedBackend:
         return ext_commit
 
     def _build_evict(self):
-        axes = self._axes
+        axes, spill_axes = self._axes, self._spill_axes
+        compress = self.spill_compress
 
         def evict(cache, spill, spill_writes, slot, lane, length):
-            # pack the slot's cache VERBATIM into the spill lane: the
-            # cold tier is already RRAM-resident int8, and the hot ring /
-            # scales / recurrent states / endurance counters ride along
-            # untouched so the restore is bit-exact
+            # pack the slot's cache into the spill lane. Verbatim by
+            # default: the cold tier is already RRAM-resident int8, and
+            # the hot ring / scales / recurrent states / endurance
+            # counters ride along untouched so the restore is bit-exact.
+            # Under spill_compress the hot ring alone is requantized to
+            # the int8 codec form (everything else still verbatim).
             img = jax.tree.map(
                 lambda c, a: jax.lax.dynamic_slice_in_dim(c, slot, 1,
                                                           axis=a),
                 cache, axes)
+            if compress:
+                img = map_spill_stores(img, KT.spill_store_compress)
             spill = jax.tree.map(
                 lambda s, r, a: jax.lax.dynamic_update_slice_in_dim(
                     s, r.astype(s.dtype), lane, axis=a),
-                spill, img, axes)
+                spill, img, spill_axes)
             spill_writes = KT.bump_spill_writes(spill_writes, lane,
                                                 length)
             return self._constrain_spill(spill), spill_writes
@@ -292,13 +337,18 @@ class _JittedBackend:
         return evict
 
     def _build_restore(self):
-        axes = self._axes
+        axes, spill_axes = self._axes, self._spill_axes
+        compress = self.spill_compress
+        cd = jnp.dtype(self.model.cfg.compute_dtype)
 
         def restore(cache, spill, lane, slot):
             img = jax.tree.map(
                 lambda s, a: jax.lax.dynamic_slice_in_dim(s, lane, 1,
                                                           axis=a),
-                spill, axes)
+                spill, spill_axes)
+            if compress:
+                img = map_spill_stores(
+                    img, lambda st: KT.spill_store_decompress(st, cd))
             cache = jax.tree.map(
                 lambda c, r, a: jax.lax.dynamic_update_slice_in_dim(
                     c, r.astype(c.dtype), slot, axis=a),
@@ -310,6 +360,10 @@ class _JittedBackend:
     # ---- InferenceBackend surface ------------------------------------
     def slot_kv_bytes(self) -> tuple[int, int]:
         return slot_kv_bytes(self.model, self.max_len)
+
+    def spill_lane_bytes(self) -> int:
+        return spill_lane_bytes(self.model, self.max_len,
+                                self.spill_compress)
 
     def init_pool(self) -> KVPoolState:
         # spill buffers are LAZY: n_spill lanes are reserved (host-side
@@ -367,12 +421,16 @@ class _JittedBackend:
             raise ValueError("backend was built with n_spill=0; nothing "
                              "can be evicted")
         if state.spill is None:           # first eviction: materialize
+            lanes = self.model.init_cache(self.n_spill, self.max_len)
+            if self.spill_compress:
+                lanes = map_spill_stores(lanes, KT.spill_store_template)
             state = dataclasses.replace(
                 state,
-                spill=self._place_spill(
-                    self.model.init_cache(self.n_spill, self.max_len)),
+                spill=self._place_spill(lanes),
                 spill_writes=KT.init_spill_writes(self.n_spill,
-                                                  self.max_len))
+                                                  self.max_len),
+                spill_axes=(self._spill_axes if self.spill_compress
+                            else None))
         spill, writes = self._evict(
             state.cache, state.spill, state.spill_writes,
             jnp.asarray(slot, jnp.int32), jnp.asarray(lane, jnp.int32),
@@ -436,7 +494,8 @@ class ShardedBackend(_JittedBackend):
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
                  mesh: jax.sharding.Mesh | None = None,
                  rules: ShardingRules | None = None,
-                 n_spill: int | None = None):
+                 n_spill: int | None = None,
+                 spill_compress: bool | None = None):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh()
@@ -453,14 +512,21 @@ class ShardedBackend(_JittedBackend):
             n_spill = num_slots
         # spill lanes shard exactly like pool slots (lanes -> 'data',
         # cold kv_seq / kv heads -> 'model'), so evict/restore stay
-        # device-local tree copies wherever divisibility allows
+        # device-local tree copies wherever divisibility allows. A
+        # compressed lane's hot_q inherits the hot ring's sharding and
+        # hot_scale its leading axes (the size-1 scale axis was already
+        # unsharded in the hot spec).
+        spill_compress = _resolve_spill_compress(spill_compress)
         self._spill_sh = (model.cache_shardings(self.rules, n_spill,
                                                 max_len)
                           if n_spill else None)
+        if self._spill_sh is not None and spill_compress:
+            self._spill_sh = map_spill_stores(self._spill_sh,
+                                              KT.spill_store_meta)
         params = jax.device_put(params,
                                 model.param_shardings(self.rules))
         super().__init__(model, params, num_slots, max_len,
-                         n_spill=n_spill)
+                         n_spill=n_spill, spill_compress=spill_compress)
 
     def _place(self, cache: dict) -> dict:
         return jax.device_put(cache, self._pool_sh)
@@ -483,12 +549,15 @@ class ShardedBackend(_JittedBackend):
 
 def make_backend(kind: str, model: Model, params, *, num_slots: int,
                  max_len: int, mesh=None,
-                 n_spill: int | None = None) -> InferenceBackend:
+                 n_spill: int | None = None,
+                 spill_compress: bool | None = None) -> InferenceBackend:
     """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
     if kind == "local":
         return LocalBackend(model, params, num_slots, max_len,
-                            n_spill=n_spill)
+                            n_spill=n_spill,
+                            spill_compress=spill_compress)
     if kind == "sharded":
         return ShardedBackend(model, params, num_slots, max_len, mesh=mesh,
-                              n_spill=n_spill)
+                              n_spill=n_spill,
+                              spill_compress=spill_compress)
     raise ValueError(f"unknown backend kind {kind!r}")

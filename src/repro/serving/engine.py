@@ -140,7 +140,12 @@ class Engine:
     step). ``oversubscribe`` (>= 1; env ``REPRO_SERVE_OVERSUBSCRIBE``,
     0/None = off) relaxes the scheduler's DRAM admission gate by that
     factor, spill-lane-backed — the Cambricon-LLM/SLIM-style
-    spill-to-dense-tier trade for serving beyond DRAM capacity."""
+    spill-to-dense-tier trade for serving beyond DRAM capacity.
+    ``idle_offload_steps`` (>= 1; env ``REPRO_SERVE_IDLE_OFFLOAD_STEPS``,
+    0/None = off) enables proactive idle cold-KV offload: a blocked
+    equal-or-higher-priority waiter may park a runner resident at least
+    that many decode steps into an RRAM lane (bit-exact, same machinery
+    as preemption) and take its freed DRAM under the base byte gates."""
 
     def __init__(self, backend, params=None, num_slots: int | None = None,
                  max_len: int | None = None,
@@ -148,7 +153,8 @@ class Engine:
                  platform=CHIME, clock=time.perf_counter,
                  token_budget: int | None = None,
                  chunk_tokens: int | None = None,
-                 oversubscribe: float | None = None):
+                 oversubscribe: float | None = None,
+                 idle_offload_steps: int | None = None):
         if params is not None or num_slots is not None or max_len is not None:
             # one-release compat shim: Engine(model, params, num_slots=,
             # max_len=) builds the local backend the seed engine inlined
@@ -175,6 +181,8 @@ class Engine:
                               f"{env_v} < 1")
                 env_v = None
             oversubscribe = env_v
+        if idle_offload_steps is None:
+            idle_offload_steps = _env_int("REPRO_SERVE_IDLE_OFFLOAD_STEPS")
         # 0 is the explicit "disable" sentinel for both knobs (whole
         # prompts / unbounded budget — even when the env knob is set).
         # An explicitly unbounded budget is NOT rebound to the
@@ -188,6 +196,10 @@ class Engine:
             raise ValueError(f"oversubscribe must be >= 1 (or 0/None to "
                              f"disable), got {oversubscribe}")
         oversubscribe = oversubscribe or None    # 0 = explicit disable
+        if idle_offload_steps is not None and idle_offload_steps < 0:
+            raise ValueError(f"idle_offload_steps must be >= 0 or None, "
+                             f"got {idle_offload_steps}")
+        idle_offload_steps = idle_offload_steps or None  # 0 = disable
         explicit_unbounded = token_budget == 0
         chunk_tokens = chunk_tokens or None
         token_budget = token_budget or None
@@ -197,13 +209,17 @@ class Engine:
         # a PR-2/3-era custom backend predates the spill surface: degrade
         # to preemption-disabled instead of crashing on the missing attr
         n_spill = getattr(backend, "n_spill", 0)
+        lane_fn = getattr(backend, "spill_lane_bytes", None)
+        lane_b = lane_fn() if callable(lane_fn) else hot_b + cold_b
         if scheduler is None:
             scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
                                       hot_b, cold_b,
                                       token_budget=token_budget,
                                       chunk_tokens=chunk_tokens,
                                       oversubscribe=oversubscribe,
-                                      spill_lanes=n_spill)
+                                      spill_lanes=n_spill,
+                                      idle_offload_steps=idle_offload_steps,
+                                      lane_bytes=lane_b)
         elif not isinstance(scheduler, FCFSScheduler) or (
                 type(scheduler).plan is not FCFSScheduler.plan):
             pass  # custom planner: it owns its own chunking policy
@@ -221,6 +237,11 @@ class Engine:
                 scheduler.oversubscribe = oversubscribe
             if scheduler.spill_lanes is None:
                 scheduler.spill_lanes = n_spill
+            if scheduler.idle_offload_steps is None \
+                    and idle_offload_steps is not None:
+                scheduler.idle_offload_steps = idle_offload_steps
+            if scheduler.lane_bytes is None:
+                scheduler.lane_bytes = lane_b
         self.scheduler = scheduler
         # one-release compat: a PR-3-era custom plan() override that does
         # not accept the preemption kwargs (running/free_lanes) still
@@ -274,7 +295,7 @@ class Engine:
         self._next_rid = 0
         self.stats = {"steps": 0, "prefill_chunks": 0, "extend_calls": 0,
                       "decode_steps": 0, "decode_tokens": 0,
-                      "evictions": 0, "restores": 0}
+                      "evictions": 0, "restores": 0, "idle_offloads": 0}
 
     # ------------------------------------------------------------------
     # request intake
@@ -383,6 +404,7 @@ class Engine:
             self.pool.free(slot)
             return [(req.rid, tok, True)]
         req.slot = slot
+        req.resident_steps = 0           # fresh residency (offload clock)
         self._slot_req[slot] = req
         self._tok[slot, 0] = tok
         self._pos[slot] = req.prompt_len
@@ -408,11 +430,15 @@ class Engine:
     # ------------------------------------------------------------------
     # preemption: spill to RRAM / bit-exact restore
     # ------------------------------------------------------------------
-    def _evict(self, req: Request):
+    def _evict(self, req: Request, offload: bool = False):
         """Pack ``req``'s slot into a free RRAM spill lane and park it.
         The image is the slot's cache verbatim (plus the decode-loop
         scalars recorded host-side), so the later restore resumes decode
-        token-for-token identically to a never-evicted run."""
+        token-for-token identically to a never-evicted run — unless the
+        backend compresses spill lanes, in which case the hot ring pays
+        the documented codec error. ``offload`` marks a proactive idle
+        cold-KV offload (capacity) rather than a preemption (priority);
+        the mechanics are identical, only the stats differ."""
         slot = req.slot
         assert slot >= 0 and self._slot_req[slot] is req \
             and self._active[slot]
@@ -428,10 +454,11 @@ class Engine:
         req.slot = -1
         req.evict_times.append(self.clock())
         req.evict_ctx.append(ctx)
+        req.n_idle_offloads += 1 if offload else 0
         self._slot_req[slot] = None
         self._active[slot] = False
         self.pool.free(slot)
-        self.stats["evictions"] += 1
+        self.stats["idle_offloads" if offload else "evictions"] += 1
 
     def _restore(self, req: Request):
         """Scatter ``req``'s spill lane back into a (possibly different)
@@ -443,6 +470,7 @@ class Engine:
         self.pool.release_lane(rec.lane)
         req.status = RUNNING
         req.slot = slot
+        req.resident_steps = 0           # restored: a fresh time slice
         req.restore_times.append(self.clock())
         self._slot_req[slot] = req
         self._tok[slot, 0] = rec.tok
@@ -499,6 +527,8 @@ class Engine:
                 chunk_unit=self.backend.chunk_unit, **kwargs)
         for req in getattr(plan, "evictions", ()):
             self._evict(req)
+        for req in getattr(plan, "offloads", ()):
+            self._evict(req, offload=True)
         for req in getattr(plan, "restores", ()):
             self._restore(req)
         for ch in plan.chunks:
@@ -517,6 +547,7 @@ class Engine:
             tok = int(ntoks[slot])
             req.emit(tok)
             req.token_times.append(self.clock())
+            req.resident_steps += 1
             self._pos[slot] += 1
             self._slot_total_len[slot] += 1
             self._tok[slot, 0] = tok
@@ -559,6 +590,9 @@ class Engine:
         rep = self.pool.endurance_report(
             self._slot_prefill_len, self._slot_total_len,
             self.backend.hot_window)
-        rep["spills"] = self.stats["evictions"]
+        rep["spills"] = self.stats["evictions"] \
+            + self.stats["idle_offloads"]
+        rep["preemptions"] = self.stats["evictions"]
+        rep["idle_offloads"] = self.stats["idle_offloads"]
         rep["restores"] = self.stats["restores"]
         return rep

@@ -43,11 +43,15 @@ class KVPoolState:
     through jit/pjit with only the cache (and spill buffers) as traced
     children.
 
-    ``spill``: the RRAM-backed preemption spill store — a tree mirroring
-    ``cache`` with the slot axis reinterpreted as *spill lanes* (the same
-    ``axes`` tree addresses it), or None until the first eviction
-    materializes it (lazy: a pool that never preempts never pays for the
-    extra copy) or when the backend was built without lanes.
+    ``spill``: the RRAM-backed spill store (preemption victims + idle
+    cold-KV offloads) — a tree mirroring ``cache`` with the slot axis
+    reinterpreted as *spill lanes*, or None until the first eviction
+    materializes it (lazy: a pool that never spills never pays for the
+    extra copy) or when the backend was built without lanes. A
+    compressed-lane backend (`spill_compress`) stores the hot ring in
+    int8 codec form, so the spill tree's STRUCTURE differs from the
+    cache's — ``spill_axes`` then carries its own slot-axis tree (None
+    means the lanes mirror ``cache`` and ``axes`` addresses both).
     ``spill_writes``: (n_lanes, n_endurance_blocks) int32
     cumulative RRAM write counters per lane (see
     `core.kv_tiers.bump_spill_writes`) — unlike the per-slot cache
@@ -59,6 +63,7 @@ class KVPoolState:
     axes: dict
     spill: dict | None = None
     spill_writes: jax.Array | None = None
+    spill_axes: dict | None = None
 
     @property
     def num_slots(self) -> int:
@@ -69,20 +74,23 @@ class KVPoolState:
     def num_spill_lanes(self) -> int:
         if self.spill is None:
             return 0
+        axes = self.axes if self.spill_axes is None else self.spill_axes
         leaf = jax.tree.leaves(self.spill)[0]
-        return leaf.shape[jax.tree.leaves(self.axes)[0]]
+        return leaf.shape[jax.tree.leaves(axes)[0]]
 
     def tree_flatten(self):
         axes_leaves, axes_def = jax.tree_util.tree_flatten(self.axes)
+        sp_leaves, sp_def = jax.tree_util.tree_flatten(self.spill_axes)
         return ((self.cache, self.spill, self.spill_writes),
-                (tuple(axes_leaves), axes_def))
+                (tuple(axes_leaves), axes_def, tuple(sp_leaves), sp_def))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         axes = jax.tree_util.tree_unflatten(aux[1], list(aux[0]))
+        spill_axes = jax.tree_util.tree_unflatten(aux[3], list(aux[2]))
         cache, spill, spill_writes = children
         return cls(cache=cache, axes=axes, spill=spill,
-                   spill_writes=spill_writes)
+                   spill_writes=spill_writes, spill_axes=spill_axes)
 
 
 def batch_axes(model, cache: dict) -> dict:
@@ -101,6 +109,20 @@ def tree_expand(tree: dict, axes: dict) -> dict:
 
 def tree_squeeze(tree: dict, axes: dict) -> dict:
     return jax.tree.map(lambda l, a: jnp.squeeze(l, axis=a), tree, axes)
+
+
+def map_spill_stores(tree, fn):
+    """Rebuild a cache/spill tree with every TIERED store dict (one
+    carrying a hot ring — 'hot', or its compressed 'hot_q' form) passed
+    through ``fn``; flat stores and recurrent-state subtrees are left in
+    place. This is the structural transform between a slot image and its
+    compressed spill-lane form (and between their metadata trees — axis
+    indices and shardings transform with `kv_tiers.spill_store_meta`)."""
+    if isinstance(tree, dict):
+        if "hot" in tree or "hot_q" in tree:
+            return fn(tree)
+        return {k: map_spill_stores(v, fn) for k, v in tree.items()}
+    return tree
 
 
 # keys of the sequence-store leaves inside a block cache; anything else
@@ -142,6 +164,30 @@ def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
         hot = seq_elems * max_len * cd + state_bytes
         cold = 0
     return int(hot), int(cold)
+
+
+def spill_lane_bytes(model, max_len: int, compressed: bool = False) -> int:
+    """RRAM bytes ONE occupied spill lane pins while a request is parked.
+
+    A verbatim lane holds the full slot image (hot + cold halves of
+    `slot_kv_bytes`). A compressed lane stores the hot ring in the int8
+    codec form — int8 payload + per-(token, head) f32 scales — while the
+    cold tier, scales and recurrent states ride verbatim; with a flat
+    (untiered) cache there is no hot ring and compression changes
+    nothing. This is the byte the scheduler charges against the RRAM
+    budget per parked request, and what `n_lanes = budget // lane_bytes`
+    sizing should use — the capacity lever compressed lanes exist for."""
+    hot, cold = slot_kv_bytes(model, max_len)
+    cfg = model.cfg
+    if not compressed or cfg.kv_policy != "tiered":
+        return hot + cold
+    cd = jnp.dtype(cfg.compute_dtype).itemsize
+    W = min(cfg.kv_hot_window, max_len)
+    ring = kv_elems_per_token(cfg) * W * cd
+    ring_q = kv_elems_per_token(cfg) * W          # int8 payload
+    ring_scale = kv_scale_elems_per_token(cfg) * W \
+        * jnp.dtype(jnp.float32).itemsize
+    return hot - ring + ring_q + ring_scale + cold
 
 
 class TieredKVPool:
@@ -245,7 +291,11 @@ class TieredKVPool:
 
         Spill lanes are reported alongside: their counters are cumulative
         RRAM wear (one write per touched block per spill event, never
-        reset on lane recycling).
+        reset on lane recycling). The spill keys are ALWAYS present —
+        zero before the lazily-materialized lane arrays exist — so a
+        report taken early in a run aggregates identically to one taken
+        after the first spill, and ``total_rram_writes`` folds the lane
+        writes into the cold-tier total unconditionally.
         """
         worst = self.worst_case_writes()
         if worst is None:
@@ -268,7 +318,9 @@ class TieredKVPool:
             }
         sw = self.state.spill_writes
         rep["spill_lanes"] = self.num_spill_lanes
-        if sw is not None:
-            rep["total_spill_writes"] = int(jnp.sum(sw))
-            rep["max_spill_writes_per_block"] = int(jnp.max(sw))
+        rep["total_spill_writes"] = 0 if sw is None else int(jnp.sum(sw))
+        rep["max_spill_writes_per_block"] = \
+            0 if sw is None else int(jnp.max(sw))
+        rep["total_rram_writes"] = rep.get("total_cold_writes", 0) \
+            + rep["total_spill_writes"]
         return rep

@@ -32,7 +32,9 @@ def request_metrics(req) -> dict:
         "ttft_s": req.first_token_s - req.arrival_s,
         "latency_s": req.finish_s - req.arrival_s,
         "priority": req.priority,
-        "preemptions": req.n_evictions,
+        "spills": req.n_evictions,
+        "preemptions": req.n_preemptions,
+        "idle_offloads": req.n_idle_offloads,
     }
     spilled = _restore_latencies(req)
     if spilled.size:
@@ -73,9 +75,12 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
         m["tbt_p50_s"] = float(np.percentile(tbt, 50))
         m["tbt_p95_s"] = float(np.percentile(tbt, 95))
         m["tbt_max_s"] = float(tbt.max())
-    # preemption: how often requests were spilled to RRAM, and how long
-    # they sat there before their bit-exact restore
-    m["preemptions"] = int(sum(r.n_evictions for r in finished))
+    # spills: how often requests were parked in RRAM (split into
+    # priority preemptions vs capacity-driven idle offloads) and how
+    # long they sat there before their restore
+    m["spills"] = int(sum(r.n_evictions for r in finished))
+    m["preemptions"] = int(sum(r.n_preemptions for r in finished))
+    m["idle_offloads"] = int(sum(r.n_idle_offloads for r in finished))
     m["restores"] = int(sum(len(r.restore_times) for r in finished))
     rl = np.concatenate([_restore_latencies(r) for r in finished]
                         or [np.zeros(0)])
@@ -85,14 +90,19 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
     return m
 
 
-def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:
+def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
+                         spill_compressed: bool = False) -> dict:
     """Simulated time/energy for the served trace on ``platform``.
 
     Each request contributes a VQA workload of its own (prompt length,
     generated step count); the per-token attention cost grows with that
     request's context exactly as the engine's tiered reads did.
-    Preempted requests additionally pay the simulated RRAM spill/restore
-    traffic for each recorded eviction context (`kv_spill_cost`).
+    Spilled requests (preemption victims and idle cold-KV offloads
+    alike) additionally pay the simulated RRAM spill/restore traffic for
+    each recorded eviction context (`kv_spill_cost`);
+    ``spill_compressed`` prices the int8 compressed-lane representation
+    instead of the full-precision image (pass the backend's
+    ``spill_compress``).
     """
     energy = sim_s = 0.0
     spill_j = spill_s = 0.0
@@ -100,8 +110,10 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:
     tokens = 0
     for req in finished:
         for ctx in req.evict_ctx:
-            ts, es = kv_spill_cost(cfg, platform, int(ctx))
-            tr, er = kv_spill_cost(cfg, platform, int(ctx), restore=True)
+            ts, es = kv_spill_cost(cfg, platform, int(ctx),
+                                   compressed=spill_compressed)
+            tr, er = kv_spill_cost(cfg, platform, int(ctx), restore=True,
+                                   compressed=spill_compressed)
             spill_s += ts + tr
             spill_j += es + er
             n_spills += 1
@@ -121,6 +133,7 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME) -> dict:
         "sim_energy_j": energy,
         "sim_total_s": sim_s,
         "sim_spills": n_spills,
+        "sim_spill_compressed": bool(spill_compressed),
         "sim_spill_energy_j": spill_j,
         "sim_spill_s": spill_s,
         "sim_tokens_per_j": tokens / energy if energy else 0.0,

@@ -43,11 +43,19 @@ class Request:
     token_times: list = dataclasses.field(default_factory=list)
     # scheduler-owned admission recency (victim tie-break)
     admit_seq: int = -1
-    # preemption trace: paired evict/restore timestamps (engine clock)
-    # and the context length each eviction packed into its spill lane
+    # decode steps taken since this request last got a slot (admission
+    # or restore); the idle-offload policy's residency clock — a runner
+    # is offloadable for an equal-priority waiter once it reaches the
+    # scheduler's idle_offload_steps
+    resident_steps: int = 0
+    # spill trace: paired evict/restore timestamps (engine clock) and
+    # the context length each spill packed into its lane — preemptions
+    # AND idle offloads both land here (they share the machinery);
+    # ``n_idle_offloads`` says how many of the events were offloads
     evict_times: list = dataclasses.field(default_factory=list)
     restore_times: list = dataclasses.field(default_factory=list)
     evict_ctx: list = dataclasses.field(default_factory=list)
+    n_idle_offloads: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -73,7 +81,14 @@ class Request:
 
     @property
     def n_evictions(self) -> int:
+        """Total spill events (priority preemptions + idle offloads)."""
         return len(self.evict_times)
+
+    @property
+    def n_preemptions(self) -> int:
+        """Spill events where a strictly higher-priority waiter forced
+        this request out (excludes capacity-driven idle offloads)."""
+        return len(self.evict_times) - self.n_idle_offloads
 
     def emit(self, token: int):
         self.generated.append(int(token))

@@ -29,6 +29,18 @@ DRAM admission gate by that factor — the marginal resident's bulk KV is
 RRAM-resident cold tier, and the overflow must be covered by free spill
 lanes so any overflow slot can always be paged out (Cambricon-LLM/SLIM-
 style spill-to-dense-tier serving beyond DRAM capacity).
+
+Since PR 5 RRAM is a first-class CAPACITY tier, not just a preemption
+parking lot: with ``idle_offload_steps=N`` set, a waiter that cannot get
+in (and does not strictly outrank anyone — so PR 4 preemption did not
+fire) may still be admitted by OFFLOADING a runner that has been
+resident >= N decode steps (`StepPlan.offloads` — the same verbatim,
+bit-exact evict/restore machinery; equal-priority rotation is
+RRAM-backed time slicing with quantum N). The freed DRAM hot bytes admit
+the waiter under the BASE byte gates — no all-or-nothing oversubscribe
+factor. ``lane_bytes`` is what one parked image charges against the
+RRAM budget: compressed lanes (int8 hot ring, see `core/quant.py`)
+shrink it, which is how a fixed RRAM spill budget backs more lanes.
 """
 
 from __future__ import annotations
@@ -118,6 +130,10 @@ class StepPlan:
     decode: bool
     evictions: tuple = ()         # Requests leaving their slot for a lane
     restores: tuple = ()          # Requests resuming from a lane
+    offloads: tuple = ()          # idle residents parking for a waiter
+    #   (executed exactly like evictions; split out so the engine's
+    #   preemption and capacity-offload stats stay distinguishable —
+    #   at most ONE of evictions/offloads is non-empty per plan)
 
     @property
     def prefill_tokens(self) -> int:
@@ -144,6 +160,13 @@ class FCFSScheduler:
     from the backend) bounds simultaneous preemptions; when a waiter
     strictly outranks a running request and no slot is free, `plan`
     evicts the lowest-priority, most-recently-admitted victim.
+
+    ``idle_offload_steps`` (>= 1, None = engine-resolved, default off)
+    enables proactive idle cold-KV offload: a blocked waiter of EQUAL or
+    higher priority may park a runner resident >= that many decode steps
+    (see the module docstring). ``lane_bytes`` (None = engine fills it
+    from the backend; falls back to one full slot image) is the RRAM
+    bytes one parked spill image charges against the budget.
     """
 
     def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
@@ -151,7 +174,9 @@ class FCFSScheduler:
                  token_budget: int | None = None,
                  chunk_tokens: int | None = None,
                  oversubscribe: float | None = None,
-                 spill_lanes: int | None = None):
+                 spill_lanes: int | None = None,
+                 idle_offload_steps: int | None = None,
+                 lane_bytes: int | None = None):
         if chunk_tokens is not None and chunk_tokens < 1:
             # a cap < 1 would make plan() emit degenerate chunks forever
             raise ValueError(f"chunk_tokens must be >= 1 or None, got "
@@ -162,6 +187,11 @@ class FCFSScheduler:
         if oversubscribe is not None and oversubscribe < 1:
             raise ValueError(f"oversubscribe must be >= 1 or None, got "
                              f"{oversubscribe}")
+        if idle_offload_steps is not None and idle_offload_steps < 1:
+            # < 1 would offload a request the same step it got its slot:
+            # zero guaranteed progress per rotation = potential livelock
+            raise ValueError(f"idle_offload_steps must be >= 1 or None, "
+                             f"got {idle_offload_steps}")
         self.budget = budget
         self.hot_bytes_per_slot = hot_bytes_per_slot
         self.cold_bytes_per_slot = cold_bytes_per_slot
@@ -169,6 +199,8 @@ class FCFSScheduler:
         self.chunk_tokens = chunk_tokens
         self.oversubscribe = oversubscribe
         self.spill_lanes = spill_lanes
+        self.idle_offload_steps = idle_offload_steps
+        self.lane_bytes = lane_bytes
         self._queue: collections.deque[Request] = collections.deque()
         self._spilled: list[Request] = []
         self.admitted = 0
@@ -202,12 +234,14 @@ class FCFSScheduler:
     def _admits(self, n_active: int, spilled_after: int) -> bool:
         """Byte/lane gate for one more resident, with ``spilled_after``
         requests (still) parked in the spill store."""
+        lane_b = (self._slot_bytes if self.lane_bytes is None
+                  else self.lane_bytes)
         return self.budget.admits(
             n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot,
             oversubscribe=self.oversubscribe or 1.0,
             spilled=spilled_after,
             spill_lanes=self.spill_lanes or 0,
-            spilled_bytes=spilled_after * self._slot_bytes)
+            spilled_bytes=spilled_after * lane_b)
 
     @property
     def max_concurrent(self) -> int:
@@ -236,13 +270,39 @@ class FCFSScheduler:
         preempted) and ``free_lanes`` the spill lanes available.
 
         Planning is a COMMITMENT, not a peek: admissions pop the queue,
-        evictions move the victim into the scheduler's spilled set, and
-        restores pop it back — the engine executes every entry of the
-        returned plan within the same step, in eviction -> restore ->
-        chunk -> decode order."""
+        evictions/offloads move the victim into the scheduler's spilled
+        set, and restores pop it back — the engine executes every entry
+        of the returned plan within the same step, in eviction ->
+        offload -> restore -> chunk -> decode order."""
         evictions: list[Request] = []
+        offloads: list[Request] = []
         restores: list[Request] = []
         victims = list(running)
+
+        def waiter_priority():
+            """Priority of the best waiter that could take a freed slot
+            this step: the spilled head, or the queue head when no
+            prompt is in flight. None = nobody is waiting."""
+            prio = None
+            if self._spilled:
+                prio = self._spilled[0].priority
+            if self._queue and inflight is None:
+                qp = self._queue[0].priority
+                prio = qp if prio is None else max(prio, qp)
+            return prio
+
+        def park(victim, into):
+            """Commit one victim to a spill lane: shared bookkeeping of
+            phases 1/1b (the one-victim-per-step accounting must never
+            diverge between preemption and idle offload)."""
+            nonlocal free_lanes, free_slots, active_slots, decode_slots
+            into.append(victim)
+            victims.remove(victim)
+            self._spill_insert(victim)
+            free_lanes -= 1
+            free_slots += 1
+            active_slots -= 1
+            decode_slots -= 1
 
         # ---- phase 1: preemptive eviction --------------------------------
         # one victim per step: when the best waiter (spilled or queue
@@ -256,26 +316,57 @@ class FCFSScheduler:
         waiter_blocked = free_slots == 0 \
             or not self._admits(active_slots, self.spilled)
         if waiter_blocked and free_lanes > 0 and victims:
-            waiter_prio = None
-            if self._spilled:
-                waiter_prio = self._spilled[0].priority
-            if self._queue and inflight is None:
-                qp = self._queue[0].priority
-                waiter_prio = qp if waiter_prio is None \
-                    else max(waiter_prio, qp)
+            waiter_prio = waiter_priority()
             if waiter_prio is not None:
                 victim = min(victims, key=lambda r: (r.priority,
                                                      -r.admit_seq))
                 if victim.priority < waiter_prio \
                         and self._admits(active_slots - 1,
                                          self.spilled + 1):
-                    evictions.append(victim)
-                    victims.remove(victim)
-                    self._spill_insert(victim)
-                    free_lanes -= 1
-                    free_slots += 1
-                    active_slots -= 1
-                    decode_slots -= 1
+                    park(victim, evictions)
+
+        # ---- phase 1b: proactive idle cold-KV offload --------------------
+        # RRAM as a capacity tier: when the waiter STILL cannot get in —
+        # nobody strictly outranked anyone, so phase 1 did not fire —
+        # any runner that has been resident >= idle_offload_steps decode
+        # steps has had its time slice and may be parked for an equal-
+        # or higher-priority waiter. Same victim pick, same admissibility
+        # guard, same one-victim-per-step discipline as preemption; the
+        # parked image restores FCFS once capacity frees, so at equal
+        # priority this is RRAM-backed round-robin with quantum N. The
+        # freed DRAM hot bytes admit the waiter under the BASE gates —
+        # no oversubscribe factor involved.
+        if self.idle_offload_steps is not None and not evictions:
+            blocked = free_slots == 0 \
+                or not self._admits(active_slots, self.spilled)
+            if blocked and free_lanes > 0 and victims:
+                waiter_prio = waiter_priority()
+                if waiter_prio is not None:
+                    eligible = [
+                        r for r in victims
+                        if r.resident_steps >= self.idle_offload_steps
+                        and r.priority <= waiter_prio]
+                    if eligible and self._admits(active_slots - 1,
+                                                 self.spilled + 1):
+                        victim = min(eligible,
+                                     key=lambda r: (r.priority,
+                                                    -r.admit_seq))
+                        # the parking must actually BENEFIT a waiter:
+                        # either the queue head takes the freed slot
+                        # (phase 3), or the spilled head restores into
+                        # it (phase 2) — which it only does if it sorts
+                        # before the victim in restore order; otherwise
+                        # the victim itself would bounce straight back
+                        # next step, a useless RRAM round trip that
+                        # starves the real waiter.
+                        vkey = (-victim.priority, victim.admit_seq)
+                        queue_takes = bool(self._queue) \
+                            and inflight is None
+                        head = self._spilled[0] if self._spilled else None
+                        spill_takes = head is not None and \
+                            (-head.priority, head.admit_seq) < vkey
+                        if queue_takes or spill_takes:
+                            park(victim, offloads)
 
         # ---- phase 2: restores ------------------------------------------
         # spilled requests resume in (priority, admission) order, but
@@ -286,7 +377,8 @@ class FCFSScheduler:
         # loop would never drain.
         while self._spilled and free_slots > 0:
             cand = self._spilled[0]
-            if any(cand is e for e in evictions):
+            if any(cand is e for e in evictions) \
+                    or any(cand is o for o in offloads):
                 break                     # never round-trip within a step
             if self._queue and inflight is None \
                     and self._queue[0].priority > cand.priority \
@@ -334,7 +426,8 @@ class FCFSScheduler:
                         decode=decode_slots > 0
                         or any(c.commit for c in chunks),
                         evictions=tuple(evictions),
-                        restores=tuple(restores))
+                        restores=tuple(restores),
+                        offloads=tuple(offloads))
 
     def _spill_insert(self, req: Request):
         """Park an evicted request, keeping the spilled set in

@@ -165,15 +165,27 @@ def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
 
 
 def kv_spill_cost(cfg: ModelConfig, platform: Platform, ctx: int,
-                  restore: bool = False) -> tuple[float, float]:
+                  restore: bool = False,
+                  compressed: bool = False) -> tuple[float, float]:
     """Analytical (time_s, energy_j) of moving ONE request's ``ctx``-token
     KV image between the DRAM stack and the RRAM spill store across UCIe
-    — the per-event cost of a serving preemption. Mirrors
-    `decode_token_cost`'s terms: bytes from the same
+    — the per-event cost of a serving preemption or idle offload.
+    Mirrors `decode_token_cost`'s terms: bytes from the same
     `kv_bytes_per_token` the capacity admission uses, time bounded by the
     slower of the UCIe link and the RRAM interface, energy from the RRAM
-    write (spill) or read (restore) energy plus the UCIe transfer."""
-    kv_bytes = kv_bytes_per_token(cfg) * max(ctx, 0)
+    write (spill) or read (restore) energy plus the UCIe transfer.
+    ``compressed`` prices the int8 spill-lane codec instead: one byte per
+    cached element plus the f32 per-(token, head) scales — the same byte
+    math `serving.kv_pool.spill_lane_bytes` charges the RRAM budget. A
+    flat (untiered) cache has no hot ring to compress, so its lanes are
+    always verbatim and the flag is ignored (mirroring the backend)."""
+    per_tok = kv_bytes_per_token(cfg)
+    if compressed and cfg.kv_policy == "tiered":
+        from repro.models.counting import (kv_elems_per_token,
+                                           kv_scale_elems_per_token)
+        per_tok = kv_elems_per_token(cfg) \
+            + 4 * kv_scale_elems_per_token(cfg)
+    kv_bytes = per_tok * max(ctx, 0)
     rram = platform.domains.get("rram", platform.domains["dram"])
     bw = rram.internal_bw
     ucie_e = 0.0

@@ -2,8 +2,8 @@
 
 Over random request streams (lengths, priorities), random byte budgets
 and random knob settings (token budget, chunk cap, oversubscription,
-spill lanes), a simulated engine loop drives `FCFSScheduler.plan` and
-checks on every step that the scheduler:
+spill lanes, idle-offload threshold), a simulated engine loop drives
+`FCFSScheduler.plan` and checks on every step that the scheduler:
 
 * never plans prefill past the per-step token budget (decode slots,
   including restored ones, take one token each; chunk_unit=1 so no
@@ -14,10 +14,20 @@ checks on every step that the scheduler:
 * preserves FCFS admission order within a priority class;
 * only evicts running victims that a strictly higher-priority waiter
   outranks, and only into free lanes; only restores what it spilled;
+* offload legality: spills at most ONE victim per plan (eviction OR
+  idle offload), only offloads runners resident >= the idle threshold,
+  never offloads a request it also restores or admits in the same plan,
+  and conserves lanes (parked images never exceed spill_lanes);
 * with preemption out of the picture (uniform priorities, no
-  oversubscription), drains every request (liveness).
+  oversubscription), drains every request (liveness) — with AND without
+  idle offload enabled;
+* idle-threshold monotonicity: from one identical planning state, a
+  larger idle_offload_steps never offloads more than a smaller one.
 
-Host-only: no jax, no model — thousands of scheduler steps per second.
+The scheduler-loop tests are host-only (no jax, no model — thousands of
+scheduler steps per second); the int8 spill-codec round-trip suite at
+the bottom imports jax to hold `core.quant`'s compress/decompress to the
+documented error bound over random shapes and scales.
 """
 
 import numpy as np
@@ -49,12 +59,14 @@ def scenarios(draw):
     chunk_tokens = draw(st.one_of(st.none(), st.integers(1, 8)))
     oversubscribe = draw(st.sampled_from([None, 1.0, 1.5, 2.0]))
     spill_lanes = draw(st.integers(0, 4))
+    idle_offload = draw(st.one_of(st.none(), st.integers(1, 4)))
     return (reqs, dram_slots, rram_slots, num_slots, token_budget,
-            chunk_tokens, oversubscribe, spill_lanes)
+            chunk_tokens, oversubscribe, spill_lanes, idle_offload)
 
 
 def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
-           chunk_tokens, oversubscribe, spill_lanes, max_steps=80):
+           chunk_tokens, oversubscribe, spill_lanes, idle_offload=None,
+           max_steps=80):
     """Simulated engine loop; returns (admitted_log, finished, state)."""
     dram_bytes = HOT * dram_slots
     rram_bytes = COLD * rram_slots + SLOT * spill_lanes
@@ -62,7 +74,8 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
                           HOT, COLD, token_budget=token_budget,
                           chunk_tokens=chunk_tokens,
                           oversubscribe=oversubscribe,
-                          spill_lanes=spill_lanes)
+                          spill_lanes=spill_lanes,
+                          idle_offload_steps=idle_offload)
     requests = [_req(i, p, g, pr) for i, (p, g, pr) in enumerate(reqs)]
     for r in requests:
         sched.submit(r)
@@ -72,6 +85,7 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
     spilled: dict = {}         # rid -> remaining_gen
     admitted_log: list = []
     finished: list = []
+    offload_events = 0
     factor = oversubscribe or 1.0
 
     def gates_ok(residents, n_spilled):
@@ -94,18 +108,32 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
             running=running,
             free_lanes=spill_lanes - len(spilled))
 
-        # ---- evictions: only running victims, only into free lanes ----
-        for r in plan.evictions:
+        # ---- spills: at most ONE victim per plan (preemption OR idle
+        # offload), only running victims, only into free lanes ----------
+        assert len(plan.evictions) + len(plan.offloads) <= 1, \
+            "more than one victim in a single plan"
+        for r in plan.offloads:
+            assert idle_offload is not None, "offload with the knob off"
+            assert r.resident_steps >= idle_offload, \
+                "offloaded a runner inside its time slice"
+            assert not any(r is o for o in plan.restores), \
+                "offloaded a request restored in the same plan"
+            assert not any(r is c.req for c in plan.chunks), \
+                "offloaded a request admitted in the same plan"
+            offload_events += 1
+        for r in plan.evictions + plan.offloads:
             assert any(rr is r for rr, _ in active), "evicted non-runner"
             assert len(spilled) < spill_lanes, "evicted without a lane"
             gen = next(g for rr, g in active if rr is r)
             active = [(rr, g) for rr, g in active if rr is not r]
             spilled[r.rid] = gen
             free_slots += 1
+        assert len(spilled) <= spill_lanes, "lane conservation violated"
         # ---- restores: only what was spilled -------------------------
         for r in plan.restores:
             assert r.rid in spilled, "restored a never-spilled request"
             assert free_slots > 0
+            r.resident_steps = 0
             active.append((r, spilled.pop(r.rid)))
             free_slots -= 1
 
@@ -131,6 +159,7 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
             inflight = None if c.commit else (r, p + c.length)
             if c.commit:
                 assert p + c.length == r.prompt_len
+                r.resident_steps = 0
                 if r.max_new_tokens == 1:
                     finished.append(r)
                     free_slots += 1
@@ -146,6 +175,7 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
             nxt = []
             for r, g in active:
                 g -= 1
+                r.resident_steps += 1
                 if g <= 0:
                     finished.append(r)
                     free_slots += 1
@@ -154,17 +184,19 @@ def _drive(reqs, dram_slots, rram_slots, num_slots, token_budget,
             active = nxt
         if not (active or inflight or spilled or sched.pending):
             break
-    return admitted_log, finished, (active, inflight, spilled, sched)
+    return admitted_log, finished, (active, inflight, spilled, sched,
+                                    offload_events)
 
 
 @settings(max_examples=60, deadline=None)
 @given(scenarios())
 def test_scheduler_invariants_over_random_streams(sc):
     (reqs, dram_slots, rram_slots, num_slots, token_budget,
-     chunk_tokens, oversubscribe, spill_lanes) = sc
+     chunk_tokens, oversubscribe, spill_lanes, idle_offload) = sc
     admitted, finished, _ = _drive(reqs, dram_slots, rram_slots,
                                    num_slots, token_budget, chunk_tokens,
-                                   oversubscribe, spill_lanes)
+                                   oversubscribe, spill_lanes,
+                                   idle_offload)
     # FCFS within a priority class: rids are submission-ordered
     for prio in {pr for _, _, pr in reqs}:
         rids = [r.rid for r in admitted if r.priority == prio]
@@ -180,11 +212,111 @@ def test_scheduler_drains_uniform_priority_streams(sc):
     """Liveness: no priorities, no oversubscription -> every submitted
     request finishes (FCFS cannot wedge while one resident fits)."""
     (reqs, dram_slots, rram_slots, num_slots, token_budget,
-     chunk_tokens, _, _) = sc
+     chunk_tokens, _, _, _) = sc
     reqs = [(p, g, 0) for p, g, _ in reqs]
-    _, finished, (active, inflight, spilled, sched) = _drive(
+    _, finished, (active, inflight, spilled, sched, _) = _drive(
         reqs, dram_slots, rram_slots, num_slots, token_budget,
         chunk_tokens, None, 0,
         max_steps=40 + sum(p + g for p, g, _ in reqs) * 2)
     assert not (active or inflight or spilled or sched.pending)
     assert len(finished) == len(reqs)
+
+
+@settings(max_examples=40, deadline=None)
+@given(scenarios())
+def test_scheduler_drains_with_idle_offload(sc):
+    """Liveness under idle offload: equal-priority rotation through the
+    RRAM lanes is time slicing, not starvation — every request still
+    finishes, because a resident must decode idle_offload_steps (>= 1)
+    tokens before it can be parked again."""
+    (reqs, dram_slots, rram_slots, num_slots, token_budget,
+     chunk_tokens, _, spill_lanes, idle_offload) = sc
+    reqs = [(p, g, 0) for p, g, _ in reqs]
+    _, finished, (active, inflight, spilled, sched, offloads) = _drive(
+        reqs, dram_slots, rram_slots, num_slots, token_budget,
+        chunk_tokens, None, spill_lanes, idle_offload or 1,
+        max_steps=80 + sum(p + g for p, g, _ in reqs) * 6)
+    assert not (active or inflight or spilled or sched.pending)
+    assert len(finished) == len(reqs)
+
+
+@settings(max_examples=60, deadline=None)
+@given(scenarios(), st.integers(1, 3), st.integers(1, 4))
+def test_idle_threshold_monotone_in_a_fixed_planning_state(sc, n_lo, dn):
+    """From one identical planning state, raising idle_offload_steps can
+    only shrink the offload set: every runner eligible at N + dn is
+    eligible at N, and the rest of the plan inputs are equal."""
+    (reqs, dram_slots, rram_slots, num_slots, token_budget,
+     chunk_tokens, oversubscribe, spill_lanes, _) = sc
+    spill_lanes = max(spill_lanes, 1)
+    n_hi = n_lo + dn
+
+    def _one_plan(threshold):
+        dram_bytes = HOT * dram_slots
+        rram_bytes = COLD * rram_slots + SLOT * spill_lanes
+        sched = FCFSScheduler(CapacityBudget(dram_bytes, rram_bytes),
+                              HOT, COLD, token_budget=token_budget,
+                              chunk_tokens=chunk_tokens,
+                              oversubscribe=oversubscribe,
+                              spill_lanes=spill_lanes,
+                              idle_offload_steps=threshold)
+        running = []
+        for i, (p, g, pr) in enumerate(reqs[1:]):
+            r = _req(100 + i, p, g, pr)
+            r.admit_seq = i
+            r.resident_steps = p % 5        # deterministic residencies
+            running.append(r)
+        waiter = _req(0, *reqs[0])
+        sched.submit(waiter)
+        n_run = min(len(running), num_slots)
+        running = running[:n_run]
+        plan = sched.plan(active_slots=n_run, decode_slots=n_run,
+                          free_slots=max(num_slots - n_run, 0),
+                          inflight=None, running=tuple(running),
+                          free_lanes=spill_lanes)
+        return len(plan.offloads)
+
+    assert _one_plan(n_hi) <= _one_plan(n_lo)
+
+
+# ---------------------------------------------------------------------------
+# int8 spill-codec round trip: |x - decode(encode(x))| <= rowmax / 254
+# elementwise over random shapes and scales (core/quant.py contract).
+# ---------------------------------------------------------------------------
+@st.composite
+def codec_arrays(draw):
+    ndim = draw(st.integers(1, 4))
+    shape = tuple(draw(st.integers(1, 6)) for _ in range(ndim - 1)) \
+        + (draw(st.integers(1, 16)),)
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    log_scale = draw(st.floats(-4.0, 4.0))
+    kind = draw(st.sampled_from(["normal", "uniform", "sparse", "zeros"]))
+    return shape, seed, log_scale, kind
+
+
+@settings(max_examples=60, deadline=None)
+@given(codec_arrays())
+def test_int8_spill_codec_round_trip_bound(arr):
+    from repro.core.quant import (compress_spill_hot, decompress_spill_hot,
+                                  spill_codec_bound)
+    shape, seed, log_scale, kind = arr
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32) * 10.0 ** log_scale
+    if kind == "uniform":
+        x = rng.uniform(-1, 1, shape).astype(np.float32) \
+            * 10.0 ** log_scale
+    elif kind == "sparse":
+        x = x * (rng.uniform(size=shape) < 0.3)
+    elif kind == "zeros":
+        x = np.zeros(shape, np.float32)
+    q, scale = compress_spill_hot(x)
+    assert np.asarray(q).dtype == np.int8
+    assert np.asarray(scale).shape == shape[:-1] + (1,)
+    back = np.asarray(decompress_spill_hot(q, scale, np.float32))
+    bound = np.asarray(spill_codec_bound(x))
+    # a hair of float32 slack on top of the analytic rowmax/254 bound
+    assert np.all(np.abs(x - back) <= bound * (1 + 1e-4) + 1e-30), (
+        np.max(np.abs(x - back) - bound), shape, kind)
+    # all-zero rows reconstruct exactly
+    rowmax = np.max(np.abs(x), axis=-1, keepdims=True)
+    assert np.all(np.where(rowmax == 0, back == 0, True))

@@ -1,13 +1,18 @@
 """Per-architecture smoke tests: REDUCED configs of the same family, one
 forward + one train-grad step on CPU, asserting shapes and finiteness.
-The FULL configs are exercised only via the dry-run (abstract lowering)."""
+The FULL configs are exercised only via the dry-run (abstract lowering).
+
+Models come from the shared `tests/conftest.py` `build_model` cache, so
+every (arch, kv_policy, hot_window) is initialized once per session and
+shared with the serving suites instead of rebuilt per test."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import build_model
 
-from repro.configs.base import ASSIGNED_ARCHS, PAPER_MODELS, get_config
+from repro.configs.base import ASSIGNED_ARCHS, PAPER_MODELS
 from repro.models import Model
 
 jax.config.update("jax_platform_name", "cpu")
@@ -42,10 +47,7 @@ def make_batch(cfg, rng):
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS + PAPER_MODELS)
 def test_forward_shapes_finite(arch):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = build_model(arch)
     batch = make_batch(cfg, jax.random.PRNGKey(1))
     logits = jax.jit(model.forward)(params, batch)
     assert logits.shape == (B, S, model.padded_vocab)
@@ -54,10 +56,10 @@ def test_forward_shapes_finite(arch):
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_train_grad_step(arch):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="full")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    # the cached params are remat-agnostic; only the loss graph needs
+    # the remat="full" twin
+    cfg, _, params = build_model(arch)
+    model = Model(cfg.replace(remat="full"))
     batch = make_batch(cfg, jax.random.PRNGKey(1))
     loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
     assert np.isfinite(float(loss))
@@ -70,11 +72,8 @@ def test_train_grad_step(arch):
                                   if a != "hubert-xlarge"])
 @pytest.mark.parametrize("kv_policy", ["flat", "tiered"])
 def test_prefill_then_decode(arch, kv_policy):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none",
-        kv_policy=kv_policy, kv_hot_window=16)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = build_model(arch, kv_policy=kv_policy,
+                                     hot_window=16)
     batch = make_batch(cfg, jax.random.PRNGKey(1))
     batch.pop("labels", None)
     max_len = S + 8
@@ -96,10 +95,7 @@ def test_prefill_then_decode(arch, kv_policy):
 def test_decode_matches_full_forward_dense():
     """Decoding token-by-token must agree with the full parallel forward —
     the strongest correctness property of the cache path."""
-    cfg = get_config("granite-3-2b", reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = build_model("granite-3-2b", kv_policy="flat")
     tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
                                 cfg.vocab_size)
     full_logits = model.forward(params, {"tokens": tokens})
@@ -119,10 +115,7 @@ def test_decode_matches_full_forward_dense():
 
 def test_decode_matches_full_forward_ssm():
     """Same agreement property for the recurrent-state path (rwkv6)."""
-    cfg = get_config("rwkv6-7b", reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none")
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = build_model("rwkv6-7b", kv_policy="flat")
     tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0,
                                 cfg.vocab_size)
     full_logits = model.forward(params, {"tokens": tokens})

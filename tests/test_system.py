@@ -1,17 +1,22 @@
 """End-to-end system behaviour: training convergence, checkpoint/restart
 equivalence, fault-tolerant loop recovery, data-pipeline determinism,
-simulator paper-claim validation."""
+simulator paper-claim validation.
+
+Models come from the shared `tests/conftest.py` `build_model` cache (one
+init per reduced config for the whole session; kv_policy/hot_window only
+shape the decode cache, which training never touches), so this suite no
+longer pays its own model builds."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import build_model
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import get_config
 from repro.data import DataConfig, SyntheticPipeline
 from repro.launch.steps import make_train_step
-from repro.models import Model
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime.fault import FaultPolicy, FaultTolerantLoop
 
@@ -19,12 +24,9 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 def _setup(arch="granite-3-2b", steps=20):
-    cfg = get_config(arch, reduced=True).replace(
-        param_dtype="float32", compute_dtype="float32", remat="none")
-    model = Model(cfg)
+    cfg, model, params = build_model(arch)
     opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
     pipe = SyntheticPipeline(cfg, DataConfig(4, 32, seed=0))
-    params = model.init(jax.random.PRNGKey(0))
     state = adamw_init(params, opt_cfg)
     step_fn = jax.jit(make_train_step(model, opt_cfg))
     return cfg, model, pipe, state, step_fn
@@ -48,7 +50,8 @@ def test_microbatched_step_matches_plain():
     micro = jax.jit(make_train_step(model, opt_cfg, microbatches=2))
     b = pipe.host_slice(0)
     s1, m1 = plain(state, b)
-    state2 = adamw_init(model.init(jax.random.PRNGKey(0)), opt_cfg)
+    # same cached params: microbatching must match from identical init
+    state2 = adamw_init(build_model()[2], opt_cfg)
     s2, m2 = micro(state2, b)
     np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
                                rtol=1e-4)
