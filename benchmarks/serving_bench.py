@@ -28,9 +28,12 @@ separately (decode-BEARING: some request waited on the step for its
 next token, whether or not a prefill chunk co-ran): with --chunk-tokens
 their p95 is bounded by one small chunk, while whole-prompt admission
 (chunk 0) drags every co-resident request's next token behind a full
-prompt. Results append
-to the BENCH json trajectory at ``experiments/bench/serving.json`` so
-successive PRs can be compared.
+prompt. A third (telemetry-enabled) pass per configuration records the
+simulated tier-traffic ledger — per-tier bytes, the DRAM/RRAM/compute
+energy split, the engine phase breakdown and scheduler decision counts —
+and asserts it reconciles bit-for-bit with ``simulated_efficiency``.
+Results append to the BENCH json trajectory at
+``experiments/bench/serving.json`` so successive PRs can be compared.
 """
 
 from __future__ import annotations
@@ -46,7 +49,7 @@ import numpy as np
 from repro.configs.base import get_config
 from repro.models import Model
 from repro.serving import (CapacityBudget, Engine, FCFSScheduler,
-                           aggregate_metrics, make_backend,
+                           Telemetry, aggregate_metrics, make_backend,
                            make_synthetic_requests, simulated_efficiency)
 from repro.simulator.hardware import CHIME
 
@@ -70,7 +73,7 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
                            mesh=mesh, n_spill=n_spill,
                            spill_compress=spill_compress)
 
-    def fresh_engine():
+    def fresh_engine(telemetry=None):
         # verbatim: None consults the env knobs, explicit 0 disables.
         # With a --oversubscribe comparison, the DRAM byte budget is
         # clamped to dram_budget_slots residents: the blocked baseline
@@ -97,7 +100,8 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
                       token_budget=token_budget,
                       oversubscribe=None if sched else oversubscribe,
                       idle_offload_steps=None if sched
-                      else idle_offload_steps)
+                      else idle_offload_steps,
+                      telemetry=telemetry)
 
     def stream(seed):
         return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
@@ -151,6 +155,40 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["endurance"] = engine.endurance_report()
     m["sim"] = simulated_efficiency(
         cfg, done, spill_compressed=backend.spill_compress)
+    # third pass: telemetry ON over the same stream — records the
+    # per-tier traffic/energy ledger + phase breakdown into the BENCH
+    # trajectory, checks the ledger reconciles bit-for-bit against
+    # simulated_efficiency, and measures the enabled-vs-disabled
+    # wall-clock overhead (the <2% contract is on DISABLED telemetry;
+    # the enabled cost recorded here is informational)
+    tel = Telemetry()
+    tel_engine = fresh_engine(telemetry=tel)
+    for r in stream(1):
+        tel_engine.submit(r)
+    t0 = time.perf_counter()
+    while not tel_engine.idle:
+        tel_engine.step()
+    tel_wall = time.perf_counter() - t0
+    tel_sim = simulated_efficiency(cfg, tel_engine.finished,
+                                   spill_compressed=backend.spill_compress)
+    led = tel.ledger.totals()
+    summary = tel.summary()
+    m["telemetry"] = {
+        "tier_bytes": {k: led[k] for k in
+                       ("dram_hot_ring_bytes", "rram_cold_read_bytes",
+                        "rram_spill_bytes", "dram_stream_bytes",
+                        "rram_stream_bytes", "kv_append_bytes",
+                        "ucie_bytes")},
+        "energy_split_j": led["sim_energy_split_j"],
+        "phase_s": summary["phase_s"],
+        "decisions": summary["decisions"],
+        "ledger_reconciles": (
+            led["sim_energy_j"] == tel_sim["sim_energy_j"]
+            and led["sim_total_s"] == tel_sim["sim_total_s"]
+            and led["sim_energy_split_j"]
+            == tel_sim["sim_energy_split_j"]),
+        "enabled_overhead_pct": (tel_wall / max(wall, 1e-9) - 1.0) * 100,
+    }
     return m
 
 
@@ -243,12 +281,19 @@ def main(argv=None):
               f"step p50={r['p50_step_s'] * 1e3:.1f}ms "
               f"p95={r['p95_step_s'] * 1e3:.1f}ms "
               f"decode p95={r.get('p95_decode_step_s', 0.0) * 1e3:.1f}ms  "
-              f"ttft p95={r['ttft_p95_s'] * 1e3:.1f}ms "
+              f"ttft p95={r.get('ttft_p95_s', 0.0) * 1e3:.1f}ms "
               f"tbt p95={r.get('tbt_p95_s', 0.0) * 1e3:.1f}ms  "
               f"sim={r['sim']['sim_tokens_per_j']:.1f} tok/J  "
               f"endurance max writes/block="
               f"{rep['max_writes_per_cold_slot']:.2f} "
               f"({'OK' if rep['write_once_ok'] else 'VIOLATED'})")
+        t = r["telemetry"]
+        split = t["energy_split_j"]
+        print(f"[bench]   ledger: dram={split.get('dram', 0.0):.3g} J "
+              f"rram={split.get('rram', 0.0):.3g} J "
+              f"compute={split.get('compute', 0.0):.3g} J "
+              f"({'reconciles EXACT' if t['ledger_reconciles'] else 'DRIFT'}"
+              f"; telemetry-on overhead {t['enabled_overhead_pct']:+.1f}%)")
 
     results = []
     if args.oversubscribe and args.oversubscribe > 1 \

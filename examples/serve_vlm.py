@@ -81,7 +81,7 @@ def serve_mixed_stream(n_requests: int = 8, concurrency: int = 4,
           f"{m['requests'] - n_img} text) on {concurrency} slots: "
           f"{m['total_tokens']} tokens in {wall:.2f}s "
           f"({m['tok_per_s']:.1f} tok/s incl. compile, "
-          f"mean ttft {m['mean_ttft_s'] * 1e3:.0f} ms)")
+          f"mean ttft {m.get('mean_ttft_s', 0.0) * 1e3:.0f} ms)")
     rep = engine.endurance_report()
     print(f"[engine] endurance after recycling: max writes/cold-slot="
           f"{rep['max_writes_per_cold_slot']:.2f} "

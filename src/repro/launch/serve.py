@@ -38,6 +38,15 @@ generate()). --spill-compress stores the lanes' hot ring int8-quantized
 (a parked image costs ~the cold tier's bytes; restore is then
 bounded-error rather than bit-exact — see the codec contract in
 core/quant.py).
+
+--trace-out / --metrics-out / --snapshots-out / --stats-every turn on
+the serving telemetry hub (serving/telemetry.py): a Perfetto/Chrome
+timeline of engine phases and per-slot/lane/request lifecycles, a
+Prometheus text exposition of the counters/gauges/decision codes, and
+periodic JSONL snapshots including the simulated per-tier traffic
+ledger (which reconciles bit-for-bit with `simulated_efficiency` on a
+drained run). Telemetry is off — a no-op null object — unless one of
+these flags is given.
 """
 
 from __future__ import annotations
@@ -76,8 +85,8 @@ def generate(model: Model, params, batch: dict, prompt_len: int,
 
 def main(argv=None):
     from repro.launch.mesh import get_mesh
-    from repro.serving import (Engine, aggregate_metrics, make_backend,
-                               make_synthetic_requests,
+    from repro.serving import (Engine, Telemetry, aggregate_metrics,
+                               make_backend, make_synthetic_requests,
                                simulated_efficiency)
 
     ap = argparse.ArgumentParser()
@@ -137,6 +146,19 @@ def main(argv=None):
                          "(0 = off even under "
                          "REPRO_SERVE_IDLE_OFFLOAD_STEPS; default: "
                          "consult the env knob)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON timeline "
+                         "(open in ui.perfetto.dev) — enables telemetry")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text exposition at the end "
+                         "of the run — enables telemetry")
+    ap.add_argument("--snapshots-out", default=None, metavar="PATH",
+                    help="append JSONL telemetry snapshots every "
+                         "--stats-every steps — enables telemetry")
+    ap.add_argument("--stats-every", type=int, default=0,
+                    help="print (and --snapshots-out: persist) a "
+                         "telemetry snapshot every N engine steps "
+                         "(0 = only at exit) — enables telemetry")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced).replace(
@@ -156,12 +178,20 @@ def main(argv=None):
         max_len=max_len,
         mesh=get_mesh(args.mesh) if args.backend == "sharded" else None,
         n_spill=args.spill_lanes, spill_compress=args.spill_compress)
+    # telemetry is opt-in: any of the export flags (or --stats-every)
+    # turns the hub on; otherwise Engine installs the no-op NullTelemetry
+    want_tel = (args.trace_out or args.metrics_out or args.snapshots_out
+                or args.stats_every)
+    tel = Telemetry(stats_every=args.stats_every,
+                    snapshot_path=args.snapshots_out,
+                    printer=print) if want_tel else None
     # pass through verbatim: None consults the env knobs, an explicit 0
     # disables (Engine treats 0 as the disable sentinel)
     engine = Engine(backend, chunk_tokens=args.chunk_tokens,
                     token_budget=args.token_budget,
                     oversubscribe=args.oversubscribe,
-                    idle_offload_steps=args.idle_offload_steps)
+                    idle_offload_steps=args.idle_offload_steps,
+                    telemetry=tel)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
                                    args.gen, image_every=args.image_every,
                                    priority_every=args.priority_every)
@@ -188,9 +218,9 @@ def main(argv=None):
           f"slots={args.concurrency}: {m['requests']} requests, "
           f"{m['total_tokens']} tokens in {wall:.2f}s "
           f"({m['tok_per_s']:.1f} tok/s incl. compile; "
-          f"ttft p95 {m['ttft_p95_s'] * 1e3:.0f} ms, "
+          f"ttft p95 {m.get('ttft_p95_s', 0.0) * 1e3:.0f} ms, "
           f"tbt p95 {m.get('tbt_p95_s', 0.0) * 1e3:.0f} ms, "
-          f"p95 latency {m['p95_latency_s']:.2f} s)")
+          f"p95 latency {m.get('p95_latency_s', 0.0):.2f} s)")
     if args.chunk_tokens:
         s = engine.stats
         print(f"[serve] chunked prefill: {s['prefill_chunks']} chunks / "
@@ -214,6 +244,27 @@ def main(argv=None):
     print(f"[serve] simulated on {sim['platform']}: "
           f"{sim['sim_tokens_per_j']:.1f} tok/J, "
           f"{sim['sim_energy_j']:.3f} J total")
+    if tel is not None:
+        if args.trace_out:
+            tel.write_chrome_trace(args.trace_out)
+            print(f"[serve] telemetry: Perfetto trace -> {args.trace_out}")
+        if args.metrics_out:
+            tel.write_prometheus(args.metrics_out)
+            print(f"[serve] telemetry: Prometheus exposition -> "
+                  f"{args.metrics_out}")
+        if args.snapshots_out:
+            print(f"[serve] telemetry: JSONL snapshots -> "
+                  f"{args.snapshots_out}")
+        led = tel.ledger.totals() if tel.ledger is not None else {}
+        if led:
+            split = led["sim_energy_split_j"]
+            drift = abs(led["sim_energy_j"] - sim["sim_energy_j"])
+            print(f"[serve] ledger: dram={split.get('dram', 0.0):.4g} J "
+                  f"rram={split.get('rram', 0.0):.4g} J "
+                  f"compute={split.get('compute', 0.0):.4g} J "
+                  f"(reconciles with simulated_efficiency: "
+                  f"{'EXACT' if drift == 0.0 else f'drift {drift:.3g} J'})")
+        tel.close()
     print("[serve] sample token ids:", done[0].generated[:12])
     return done
 

@@ -33,6 +33,12 @@ single-request `launch/serve.py` path into a serving engine:
 * `metrics.py`   — per-request latency + TTFT/TBT percentiles +
                    aggregate tok/s + simulated tokens/J via
                    simulator/chime_sim.py cost terms
+* `telemetry.py` — opt-in observability hub: step-span tracer
+                   (Chrome-trace/Perfetto export, one lane per KV
+                   slot/RRAM lane/request), simulated tier-traffic
+                   ledger that reconciles bit-for-bit with
+                   `simulated_efficiency`, scheduler decision log and
+                   Prometheus text exposition
 """
 
 from repro.serving.backend import (InferenceBackend, LocalBackend,
@@ -45,6 +51,10 @@ from repro.serving.metrics import (aggregate_metrics, request_metrics,
 from repro.serving.request import Request, make_synthetic_requests
 from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
                                      PrefillChunk, StepPlan)
+from repro.serving.telemetry import (REASON_CODES, NullTelemetry,
+                                     Telemetry, TierLedger,
+                                     parse_prometheus,
+                                     validate_chrome_trace)
 
 __all__ = [
     "Engine", "InferenceBackend", "KVPoolState", "LocalBackend",
@@ -52,4 +62,6 @@ __all__ = [
     "aggregate_metrics", "make_backend", "make_synthetic_requests",
     "request_metrics", "simulated_efficiency", "slot_kv_bytes",
     "spill_lane_bytes", "Request", "CapacityBudget", "FCFSScheduler",
+    "Telemetry", "NullTelemetry", "TierLedger", "REASON_CODES",
+    "parse_prometheus", "validate_chrome_trace",
 ]

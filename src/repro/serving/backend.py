@@ -103,6 +103,13 @@ class InferenceBackend(Protocol):
         per-parked-image charge; smaller under spill_compress)."""
         ...
 
+    def sim_context(self) -> tuple:
+        """(model config, spill_compress) — what the telemetry ledger
+        needs to price traffic through the analytical simulator. The
+        engine degrades to a ledger-less telemetry hub when a custom
+        backend lacks this (it probes via getattr)."""
+        ...
+
     def make_pool(self) -> TieredKVPool:
         """Fresh slot pool wired to this backend's insert arithmetic."""
         ...
@@ -364,6 +371,9 @@ class _JittedBackend:
     def spill_lane_bytes(self) -> int:
         return spill_lane_bytes(self.model, self.max_len,
                                 self.spill_compress)
+
+    def sim_context(self) -> tuple:
+        return self.model.cfg, self.spill_compress
 
     def init_pool(self) -> KVPoolState:
         # spill buffers are LAZY: n_spill lanes are reserved (host-side

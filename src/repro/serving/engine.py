@@ -57,6 +57,7 @@ from repro.serving.backend import InferenceBackend, LocalBackend
 from repro.serving.request import FINISHED, PREEMPTED, RUNNING, Request
 from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
                                      PrefillChunk, StepPlan)
+from repro.serving.telemetry import NullTelemetry
 from repro.simulator.hardware import CHIME
 
 
@@ -145,7 +146,10 @@ class Engine:
     0/None = off) enables proactive idle cold-KV offload: a blocked
     equal-or-higher-priority waiter may park a runner resident at least
     that many decode steps into an RRAM lane (bit-exact, same machinery
-    as preemption) and take its freed DRAM under the base byte gates."""
+    as preemption) and take its freed DRAM under the base byte gates.
+    ``telemetry`` attaches a `serving.telemetry.Telemetry` hub (span
+    tracer + tier-traffic ledger + gauges/decision log); None (default)
+    installs the no-op `NullTelemetry`."""
 
     def __init__(self, backend, params=None, num_slots: int | None = None,
                  max_len: int | None = None,
@@ -154,7 +158,8 @@ class Engine:
                  token_budget: int | None = None,
                  chunk_tokens: int | None = None,
                  oversubscribe: float | None = None,
-                 idle_offload_steps: int | None = None):
+                 idle_offload_steps: int | None = None,
+                 telemetry=None):
         if params is not None or num_slots is not None or max_len is not None:
             # one-release compat shim: Engine(model, params, num_slots=,
             # max_len=) builds the local backend the seed engine inlined
@@ -297,6 +302,23 @@ class Engine:
                       "decode_steps": 0, "decode_tokens": 0,
                       "evictions": 0, "restores": 0, "idle_offloads": 0}
 
+        # ---- telemetry (opt-in; None = no-op hooks, <2% contract) ----
+        self.telemetry = telemetry if telemetry is not None \
+            else NullTelemetry()
+        if self.telemetry.enabled:
+            ctx_fn = getattr(backend, "sim_context", None)
+            t_cfg, t_comp = ctx_fn() if callable(ctx_fn) else (None, False)
+            self.telemetry.bind(cfg=t_cfg, spill_compressed=t_comp,
+                                clock=self.clock, platform=platform,
+                                on_snapshot=self.endurance_report)
+            # the scheduler logs decision codes through the same hub; a
+            # user-built scheduler that already carries one keeps it
+            if getattr(self.scheduler, "telemetry", None) is None:
+                try:
+                    self.scheduler.telemetry = self.telemetry
+                except AttributeError:
+                    pass                       # __slots__ scheduler
+
     # ------------------------------------------------------------------
     # request intake
     # ------------------------------------------------------------------
@@ -310,6 +332,7 @@ class Engine:
         self._next_rid = max(self._next_rid, req.rid + 1)
         req.arrival_s = self.clock()
         self.scheduler.submit(req)
+        self.telemetry.request_submitted(req)
         return req
 
     # ------------------------------------------------------------------
@@ -359,6 +382,8 @@ class Engine:
             slot = self.pool.alloc()
             self._inflight = _Inflight(req=ch.req, slot=slot, pos=0,
                                        ext=self.backend.fresh_extend())
+            ch.req.admit_s = self.clock()
+            self.telemetry.request_admitted(ch.req, slot)
         fl = self._inflight
         assert fl is not None and fl.req is ch.req and fl.pos == ch.start
         req = ch.req
@@ -391,10 +416,13 @@ class Engine:
                 ) -> list[tuple[int, int, bool]]:
         req, slot = fl.req, fl.slot
         self._inflight = None
+        tel = self.telemetry
+        tel.phase_begin("commit")
         req.first_token_s = self.clock()
         req.status = RUNNING
         req.emit(tok)
         req.token_times.append(self.clock())
+        tel.request_first_token(req)
         # the slot's cache now holds this request's stores either way;
         # record its occupancy so the endurance audit stays truthful
         self._slot_prefill_len[slot] = req.prompt_len
@@ -402,6 +430,7 @@ class Engine:
         if req.finished_by(tok):
             self._finish(req)            # 1-token request: retires at once
             self.pool.free(slot)
+            tel.phase_end(rid=req.rid)
             return [(req.rid, tok, True)]
         req.slot = slot
         req.resident_steps = 0           # fresh residency (offload clock)
@@ -409,6 +438,7 @@ class Engine:
         self._tok[slot, 0] = tok
         self._pos[slot] = req.prompt_len
         self._active[slot] = True
+        tel.phase_end(rid=req.rid)
         return [(req.rid, tok, False)]
 
     # ------------------------------------------------------------------
@@ -418,6 +448,7 @@ class Engine:
         req.status = FINISHED
         req.finish_s = self.clock()
         self.finished.append(req)
+        self.telemetry.request_finished(req)
 
     def _retire(self, slot: int):
         req = self._slot_req[slot]
@@ -459,6 +490,7 @@ class Engine:
         self._active[slot] = False
         self.pool.free(slot)
         self.stats["idle_offloads" if offload else "evictions"] += 1
+        self.telemetry.request_evicted(req, slot, lane, ctx, offload)
 
     def _restore(self, req: Request):
         """Scatter ``req``'s spill lane back into a (possibly different)
@@ -479,6 +511,7 @@ class Engine:
         self._slot_prefill_len[slot] = rec.prefill_len
         self._slot_total_len[slot] = rec.total_len
         self.stats["restores"] += 1
+        self.telemetry.request_restored(req, rec.lane, slot, rec.pos)
 
     def _plan_legacy(self):
         """Whole-prompt StepPlan through a subclass's next_request
@@ -510,6 +543,9 @@ class Engine:
         executes every entry in it before decoding."""
         events: list[tuple[int, int, bool]] = []
         fl = self._inflight
+        tel = self.telemetry
+        tel.step_begin(self.stats["steps"])
+        tel.phase_begin("plan")
         if self._legacy_sched:
             plan = self._plan_legacy()
         else:
@@ -525,38 +561,75 @@ class Engine:
                 free_slots=self.pool.free_slots,
                 inflight=None if fl is None else (fl.req, fl.pos),
                 chunk_unit=self.backend.chunk_unit, **kwargs)
-        for req in getattr(plan, "evictions", ()):
+        evictions = tuple(getattr(plan, "evictions", ()))
+        offloads = tuple(getattr(plan, "offloads", ()))
+        restores = tuple(getattr(plan, "restores", ()))
+        tel.phase_end(chunks=len(plan.chunks))
+        tel.phase_begin("evict")
+        for req in evictions:
             self._evict(req)
-        for req in getattr(plan, "offloads", ()):
+        tel.phase_end(count=len(evictions))
+        tel.phase_begin("idle-offload")
+        for req in offloads:
             self._evict(req, offload=True)
-        for req in getattr(plan, "restores", ()):
+        tel.phase_end(count=len(offloads))
+        tel.phase_begin("restore")
+        for req in restores:
             self._restore(req)
+        tel.phase_end(count=len(restores))
+        tel.phase_begin("chunk-prefill")
         for ch in plan.chunks:
             events.extend(self._run_chunk(ch))
+        tel.phase_end(count=len(plan.chunks))
         self.stats["steps"] += 1
         # plan.decode is the planner's say (a custom planner may dedicate
         # a step to prefill); _active is the physical guard
         if not plan.decode or not self._active.any():
+            tel.step_end(self._gauges() if tel.enabled else None)
             return events
+        tel.phase_begin("decode")
         ntoks, self.pool.state = self.backend.decode_step(
             self._tok, self.pool.state, self._pos, self._active)
         ntoks = np.asarray(ntoks)
         self.stats["decode_steps"] += 1
+        n_emitted = 0
         for slot in np.nonzero(self._active)[0]:
             req = self._slot_req[slot]
             tok = int(ntoks[slot])
             req.emit(tok)
             req.token_times.append(self.clock())
+            tel.token(req)
             req.resident_steps += 1
             self._pos[slot] += 1
             self._slot_total_len[slot] += 1
             self._tok[slot, 0] = tok
             self.stats["decode_tokens"] += 1
+            n_emitted += 1
             done = req.finished_by(tok)
             events.append((req.rid, tok, done))
             if done:
                 self._retire(int(slot))
+        tel.phase_end(count=n_emitted)
+        tel.step_end(self._gauges() if tel.enabled else None)
         return events
+
+    def _gauges(self) -> dict:
+        """Occupancy/queue snapshot for the telemetry hub (built only
+        when telemetry is enabled)."""
+        queue = getattr(self.scheduler, "_queue", ())
+        depth: dict[int, int] = {}
+        for r in queue:
+            depth[r.priority] = depth.get(r.priority, 0) + 1
+        return {
+            "slots_total": self.backend.num_slots,
+            "slots_active": self.pool.active_slots,
+            "slots_free": self.pool.free_slots,
+            "slots_decoding": int(self._active.sum()),
+            "lanes_free": self.pool.free_lanes,
+            "spilled_requests": len(self._spilled),
+            "inflight": 0 if self._inflight is None else 1,
+            "queue_depth": depth,
+        }
 
     @property
     def idle(self) -> bool:

@@ -6,13 +6,21 @@ tokens/J is *simulated*: each finished request's (prompt, step-count)
 trace is fed through the CHIME analytical simulator's per-kernel cost
 terms (`simulator/chime_sim.py`) on the target platform — the same
 instrument the paper-claims tests validate.
+
+Partial metrics: a request that never emitted a token has no TTFT and a
+request that never finished has no latency — those keys are simply
+absent rather than computed from the dataclass' 0.0 defaults (which
+yielded negative garbage). Evictions whose restore never happened are
+excluded from restore-latency pairing and surfaced as
+``unrestored_evictions``.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.simulator.chime_sim import Workload, kv_spill_cost, simulate
+from repro.simulator.chime_sim import (cost_layers, request_terms,
+                                       spill_terms, sum_terms)
 from repro.simulator.hardware import CHIME, Platform
 
 
@@ -25,20 +33,33 @@ def _restore_latencies(req) -> np.ndarray:
 
 
 def request_metrics(req) -> dict:
+    """Per-request metrics; partial for in-flight/never-run requests.
+
+    ``ttft_s`` only exists once a first token was emitted, ``latency_s``
+    only once the request finished — `Request` defaults both stamps to
+    0.0, so subtracting a real arrival time from them is meaningless."""
     m = {
         "rid": req.rid,
         "prompt_len": req.prompt_len,
         "n_generated": req.n_generated,
-        "ttft_s": req.first_token_s - req.arrival_s,
-        "latency_s": req.finish_s - req.arrival_s,
+        "finished": req.finish_s > 0.0,
         "priority": req.priority,
         "spills": req.n_evictions,
         "preemptions": req.n_preemptions,
         "idle_offloads": req.n_idle_offloads,
     }
+    if req.admit_s > 0.0:
+        m["queue_s"] = req.admit_s - req.arrival_s
+    if req.first_token_s > 0.0:
+        m["ttft_s"] = req.first_token_s - req.arrival_s
+    if req.finish_s > 0.0:
+        m["latency_s"] = req.finish_s - req.arrival_s
     spilled = _restore_latencies(req)
     if spilled.size:
         m["spilled_s"] = float(spilled.sum())
+    unrestored = len(req.evict_times) - len(req.restore_times)
+    if unrestored > 0:
+        m["unrestored_evictions"] = unrestored
     tbt = np.diff(req.token_times)
     if tbt.size:
         m["tbt_p50_s"] = float(np.percentile(tbt, 50))
@@ -53,22 +74,36 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
     TTFT percentiles are over requests; time-between-tokens (TBT)
     percentiles pool every request's inter-token gaps — the tail that
     chunked prefill exists to bound (a whole-prompt prefill stalls every
-    in-flight request's next token for the full prompt duration)."""
+    in-flight request's next token for the full prompt duration).
+
+    Tolerates a mixed population: requests that never emitted a token
+    (zero-generation admissions, drained queues) are excluded from the
+    TTFT pool, unfinished requests from the latency pool, and the counts
+    of both exclusions are reported instead of poisoning the
+    percentiles with zero-based garbage."""
     if not finished:
         return {"requests": 0, "total_tokens": 0, "tok_per_s": 0.0}
-    lat = np.array([r.finish_s - r.arrival_s for r in finished])
-    ttft = np.array([r.first_token_s - r.arrival_s for r in finished])
     total = int(sum(r.n_generated for r in finished))
     m = {
         "requests": len(finished),
         "total_tokens": total,
         "tok_per_s": total / max(wall_s, 1e-9),
-        "mean_ttft_s": float(ttft.mean()),
-        "ttft_p50_s": float(np.percentile(ttft, 50)),
-        "ttft_p95_s": float(np.percentile(ttft, 95)),
-        "mean_latency_s": float(lat.mean()),
-        "p95_latency_s": float(np.percentile(lat, 95)),
     }
+    ttft = np.array([r.first_token_s - r.arrival_s for r in finished
+                     if r.first_token_s > 0.0])
+    if ttft.size:
+        m["mean_ttft_s"] = float(ttft.mean())
+        m["ttft_p50_s"] = float(np.percentile(ttft, 50))
+        m["ttft_p95_s"] = float(np.percentile(ttft, 95))
+    lat = np.array([r.finish_s - r.arrival_s for r in finished
+                    if r.finish_s > 0.0])
+    if lat.size:
+        m["mean_latency_s"] = float(lat.mean())
+        m["p95_latency_s"] = float(np.percentile(lat, 95))
+    m["no_token_requests"] = int(
+        sum(1 for r in finished if r.first_token_s <= 0.0))
+    m["unfinished_requests"] = int(
+        sum(1 for r in finished if r.finish_s <= 0.0))
     tbt = np.concatenate(
         [np.diff(r.token_times) for r in finished] or [np.zeros(0)])
     if tbt.size:
@@ -82,6 +117,9 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
     m["preemptions"] = int(sum(r.n_preemptions for r in finished))
     m["idle_offloads"] = int(sum(r.n_idle_offloads for r in finished))
     m["restores"] = int(sum(len(r.restore_times) for r in finished))
+    m["unrestored_evictions"] = int(
+        sum(max(len(r.evict_times) - len(r.restore_times), 0)
+            for r in finished))
     rl = np.concatenate([_restore_latencies(r) for r in finished]
                         or [np.zeros(0)])
     if rl.size:
@@ -99,43 +137,44 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
     request's context exactly as the engine's tiered reads did.
     Spilled requests (preemption victims and idle cold-KV offloads
     alike) additionally pay the simulated RRAM spill/restore traffic for
-    each recorded eviction context (`kv_spill_cost`);
-    ``spill_compressed`` prices the int8 compressed-lane representation
-    instead of the full-precision image (pass the backend's
-    ``spill_compress``).
+    each recorded eviction context (`spill_terms`); ``spill_compressed``
+    prices the int8 compressed-lane representation instead of the
+    full-precision image (pass the backend's ``spill_compress``).
+
+    Implemented as a `math.fsum` over the flat `CostTerm` stream of the
+    whole trace (`chime_sim.request_terms`), which makes the totals
+    order-independent: the telemetry `TierLedger`, which prices the SAME
+    events step-by-step as the engine runs, reconciles with this
+    function bit-for-bit on a drained run.
     """
-    energy = sim_s = 0.0
-    spill_j = spill_s = 0.0
+    layers = cost_layers(cfg)
+    terms = []
     n_spills = 0
     tokens = 0
     for req in finished:
         for ctx in req.evict_ctx:
-            ts, es = kv_spill_cost(cfg, platform, int(ctx),
-                                   compressed=spill_compressed)
-            tr, er = kv_spill_cost(cfg, platform, int(ctx), restore=True,
-                                   compressed=spill_compressed)
-            spill_s += ts + tr
-            spill_j += es + er
+            terms += spill_terms(cfg, platform, int(ctx),
+                                 compressed=spill_compressed)
+            terms += spill_terms(cfg, platform, int(ctx), restore=True,
+                                 compressed=spill_compressed)
             n_spills += 1
         if req.n_generated == 0:
             continue
         image = req.has_image and cfg.frontend is not None
-        wl = Workload(text_tokens=int(req.tokens.shape[0]),
-                      output_tokens=req.n_generated, image=image)
-        res = simulate(cfg, platform, wl)
-        energy += res.energy_j
-        sim_s += res.total_s
+        terms += request_terms(cfg, platform, int(req.tokens.shape[0]),
+                               req.n_generated, image, layers)
         tokens += req.n_generated
-    energy += spill_j
-    sim_s += spill_s
+    agg = sum_terms(terms)
+    energy, sim_s = agg["sim_energy_j"], agg["sim_total_s"]
     return {
         "platform": platform.name,
         "sim_energy_j": energy,
         "sim_total_s": sim_s,
         "sim_spills": n_spills,
         "sim_spill_compressed": bool(spill_compressed),
-        "sim_spill_energy_j": spill_j,
-        "sim_spill_s": spill_s,
+        "sim_spill_energy_j": agg["sim_spill_energy_j"],
+        "sim_spill_s": agg["sim_spill_s"],
+        "sim_energy_split_j": agg["sim_energy_split_j"],
         "sim_tokens_per_j": tokens / energy if energy else 0.0,
         "sim_tok_per_s_sequential": tokens / sim_s if sim_s else 0.0,
     }

@@ -36,6 +36,9 @@ class Request:
     slot: int = -1
     generated: list = dataclasses.field(default_factory=list)
     arrival_s: float = 0.0
+    # engine-clock stamp of slot admission (0.0 = never admitted);
+    # admit_s - arrival_s is the request's queue wait
+    admit_s: float = 0.0
     first_token_s: float = 0.0
     finish_s: float = 0.0
     # per-token emission timestamps (engine clock); diffs are the

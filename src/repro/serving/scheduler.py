@@ -91,15 +91,30 @@ class CapacityBudget:
         ``spilled`` requests already parked in RRAM must fit in
         ``spill_lanes`` lanes, and ``spilled_bytes`` (the parked images)
         counts against the RRAM budget alongside the cold tiers."""
+        return self.deny_reason(
+            n_resident, hot_bytes_per_slot, cold_bytes_per_slot,
+            oversubscribe=oversubscribe, spilled=spilled,
+            spill_lanes=spill_lanes, spilled_bytes=spilled_bytes) is None
+
+    def deny_reason(self, n_resident: int, hot_bytes_per_slot: int,
+                    cold_bytes_per_slot: int, *,
+                    oversubscribe: float = 1.0, spilled: int = 0,
+                    spill_lanes: int = 0,
+                    spilled_bytes: float = 0.0) -> str | None:
+        """`admits`, but naming WHICH gate blocks: ``dram_budget``,
+        ``spill_lanes`` or ``rram_budget`` (None = admissible) — the
+        telemetry decision log's admission-denial reason codes."""
         hot, cold = hot_bytes_per_slot, cold_bytes_per_slot
         n = n_resident + 1
         if n * hot > self.dram_bytes * oversubscribe:
-            return False
+            return "dram_budget"
         if hot > 0 and oversubscribe > 1.0:
             overflow = n - int(self.dram_bytes // hot)
             if overflow > 0 and overflow + spilled > spill_lanes:
-                return False
-        return n * cold + spilled_bytes <= self.rram_bytes
+                return "spill_lanes"
+        if n * cold + spilled_bytes > self.rram_bytes:
+            return "rram_budget"
+        return None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,6 +220,16 @@ class FCFSScheduler:
         self._spilled: list[Request] = []
         self.admitted = 0
         self._seq = 0                 # admission recency (victim pick)
+        # decision-log sink: the engine attaches its Telemetry hub here
+        # (None = no logging; `_note` is then a cheap None check)
+        self.telemetry = None
+
+    def _note(self, code: str, req: Request | None = None, **args):
+        """Log one scheduler decision (reason codes in
+        `telemetry.REASON_CODES`) if a telemetry hub is attached."""
+        if self.telemetry is not None:
+            self.telemetry.decision(
+                code, rid=None if req is None else req.rid, **args)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -234,9 +259,14 @@ class FCFSScheduler:
     def _admits(self, n_active: int, spilled_after: int) -> bool:
         """Byte/lane gate for one more resident, with ``spilled_after``
         requests (still) parked in the spill store."""
+        return self._deny_reason(n_active, spilled_after) is None
+
+    def _deny_reason(self, n_active: int,
+                     spilled_after: int) -> str | None:
+        """`_admits` with the blocking gate named (None = admissible)."""
         lane_b = (self._slot_bytes if self.lane_bytes is None
                   else self.lane_bytes)
-        return self.budget.admits(
+        return self.budget.deny_reason(
             n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot,
             oversubscribe=self.oversubscribe or 1.0,
             spilled=spilled_after,
@@ -324,6 +354,8 @@ class FCFSScheduler:
                         and self._admits(active_slots - 1,
                                          self.spilled + 1):
                     park(victim, evictions)
+                    self._note("evict_priority", victim,
+                               waiter_priority=waiter_prio)
 
         # ---- phase 1b: proactive idle cold-KV offload --------------------
         # RRAM as a capacity tier: when the waiter STILL cannot get in —
@@ -367,6 +399,8 @@ class FCFSScheduler:
                             (-head.priority, head.admit_seq) < vkey
                         if queue_takes or spill_takes:
                             park(victim, offloads)
+                            self._note("offload_idle", victim,
+                                       waiter_priority=waiter_prio)
 
         # ---- phase 2: restores ------------------------------------------
         # spilled requests resume in (priority, admission) order, but
@@ -383,10 +417,15 @@ class FCFSScheduler:
             if self._queue and inflight is None \
                     and self._queue[0].priority > cand.priority \
                     and self._admits(active_slots, self.spilled):
+                self._note("restore_yield", cand,
+                           to_rid=self._queue[0].rid)
                 break
-            if not self._admits(active_slots, self.spilled - 1):
+            reason = self._deny_reason(active_slots, self.spilled - 1)
+            if reason is not None:
+                self._note("deny_restore_" + reason, cand)
                 break
             restores.append(self._spilled.pop(0))
+            self._note("restore", restores[-1])
             free_slots -= 1
             active_slots += 1
             decode_slots += 1             # a restored slot decodes now
@@ -400,9 +439,14 @@ class FCFSScheduler:
         while budget > 0:
             admit = False
             if cur is None:
-                if not self._queue or free_slots <= 0:
+                if not self._queue:
                     break
-                if not self._admits(active_slots, self.spilled):
+                if free_slots <= 0:
+                    self._note("deny_no_free_slot", self._queue[0])
+                    break
+                reason = self._deny_reason(active_slots, self.spilled)
+                if reason is not None:
+                    self._note("deny_" + reason, self._queue[0])
                     break
                 req = self._queue.popleft()
                 admit = True
@@ -411,6 +455,7 @@ class FCFSScheduler:
                 self.admitted += 1
                 req.admit_seq = self._seq
                 self._seq += 1
+                self._note("admit", req)
                 cur = (req, 0)
             req, p = cur
             remaining = req.prompt_len - p
@@ -422,6 +467,9 @@ class FCFSScheduler:
             chunks.append(PrefillChunk(req, admit, p, c, commit))
             budget -= c
             cur = None if commit else (req, p + c)
+        if self._queue and cur is None and free_slots > 0 \
+                and budget <= 0:
+            self._note("deny_token_budget", self._queue[0])
         return StepPlan(chunks=tuple(chunks),
                         decode=decode_slots > 0
                         or any(c.commit for c in chunks),

@@ -16,6 +16,8 @@ FFN(t); exactly AttnOut/FFNOut cross UCIe per layer.
 from __future__ import annotations
 
 import dataclasses
+import math
+import typing
 
 from repro.configs.base import ModelConfig
 from repro.core.planner import plan_for
@@ -111,13 +113,49 @@ def visual_tokens(cfg: ModelConfig) -> int:
     return cfg.frontend.num_tokens if cfg.frontend else 0
 
 
-def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
-                      layers: list[dict] | None = None
-                      ) -> tuple[float, float, dict]:
-    """Analytical (time_s, energy_j, breakdown) of ONE decode step at
-    context length ``ctx`` — the per-step cost term. `simulate` sums it
-    over a growing context; the serving metrics feed it measured per-slot
-    step counts instead."""
+class CostTerm(typing.NamedTuple):
+    """One atomic priced event: a kernel's memory stream, its MACs, a UCIe
+    cut, a KV append write, a spill transfer, or a closing static-power
+    charge. Every simulated cost in this module decomposes into a flat
+    list of these, and every aggregate is a `math.fsum` over them — fsum
+    is correctly rounded and therefore order-independent, so two code
+    paths that price the SAME multiset of terms (e.g. the serving
+    telemetry ledger step-by-step vs. `simulated_efficiency` end-of-run)
+    produce bitwise-identical totals."""
+
+    name: str
+    domain: str        # dram|rram|compute|ucie|kv_write|overhead|encoder
+    #                  # |spill|static
+    time_s: float
+    energy_j: float
+    bytes_moved: float
+
+
+def cost_layers(cfg: ModelConfig) -> list[dict]:
+    """Public handle on the per-layer fused-kernel table so callers that
+    price many events (the telemetry ledger, `simulated_efficiency`) can
+    plan once and share."""
+    return _layer_kernels(cfg)
+
+
+def _kernel_terms(name: str, dom_name: str, dom, flops: float,
+                  bytes_r: float, pj_flop: float) -> list[CostTerm]:
+    """A fused kernel as two terms: the near-memory stream (carries the
+    kernel's time and byte energy on its home domain) and the MACs
+    (energy only, attributed to `compute`)."""
+    t = max(flops / dom.peak_flops, bytes_r / dom.internal_bw)
+    return [
+        CostTerm(name, dom_name, t,
+                 bytes_r * 8 * dom.read_energy_pj_bit * 1e-12,
+                 float(bytes_r)),
+        CostTerm(name + "/mac", "compute", 0.0,
+                 flops * pj_flop * 1e-12, 0.0),
+    ]
+
+
+def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
+                       layers: list[dict] | None = None) -> list[CostTerm]:
+    """The cost terms of ONE decode step at context length ``ctx``."""
     if layers is None:
         layers = _layer_kernels(cfg)
     n_layers = len(layers)
@@ -130,9 +168,7 @@ def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
                       if platform.cross_domain_bw else 0.0)
     kv_tok = kv_bytes_per_token(cfg)
     n_attn = max(sum(1 for l in layers if l["has_attn"]), 1)
-    tok_t = energy = 0.0
-    br = {"dram_s": 0.0, "rram_s": 0.0, "attn_kv_s": 0.0, "ucie_s": 0.0,
-          "busy_dram": 0.0, "busy_rram": 0.0}
+    terms: list[CostTerm] = []
     for lay in layers:
         for name, dom_name, flops, bytes_r in lay["kernels"]:
             dom = dram if dom_name == "dram" else rram
@@ -140,27 +176,183 @@ def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
                 # stream the KV cache for this layer
                 bytes_r = kv_tok / n_attn * ctx
                 flops = bytes_r  # ~1 MAC per cached byte at fp16
-            t, e = _kernel_time_energy(dom, flops, bytes_r,
-                                       platform.compute_pj_flop)
-            tok_t += t
-            energy += e
-            br["busy_" + dom_name] += t
-            if dom_name == "dram" or name == "FUSED_ATTN_STREAM":
-                if name == "FUSED_ATTN_STREAM":
-                    br["attn_kv_s"] += t
-                else:
-                    br["dram_s"] += t
-            else:
-                br["rram_s"] += t
+            terms += _kernel_terms(name, dom_name, dom, flops, bytes_r,
+                                   platform.compute_pj_flop)
         if lay["has_ffn"]:
-            tok_t += 2 * ucie_t_per_cut
-            br["ucie_s"] += 2 * ucie_t_per_cut
-            energy += 2 * ucie_e_per_cut
+            # AttnOut -> RRAM and FFNOut -> DRAM cross UCIe (2 cuts)
+            terms.append(CostTerm(
+                "UCIE_CUT", "ucie", 2 * ucie_t_per_cut, 2 * ucie_e_per_cut,
+                2 * 2 * D if platform.cross_domain_bw else 0.0))
         # KV append write energy (DRAM tier-0; write-once discipline)
-        energy += kv_tok / max(n_layers, 1) * 8 \
-            * dram.write_energy_pj_bit * 1e-12
-    tok_t += platform.layer_overhead_s * n_layers \
-        + platform.fixed_token_overhead_s
+        terms.append(CostTerm(
+            "KV_APPEND", "kv_write", 0.0,
+            kv_tok / max(n_layers, 1) * 8
+            * dram.write_energy_pj_bit * 1e-12,
+            kv_tok / max(n_layers, 1)))
+    terms.append(CostTerm(
+        "STEP_OVERHEAD", "overhead",
+        platform.layer_overhead_s * n_layers
+        + platform.fixed_token_overhead_s, 0.0, 0.0))
+    return terms
+
+
+def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
+                  image: bool,
+                  layers: list[dict] | None = None) -> list[CostTerm]:
+    """The cost terms of one whole-prompt prefill (weights read once per
+    layer and reused across prompt tokens; compute scales with prompt)."""
+    if layers is None:
+        layers = _layer_kernels(cfg)
+    n_layers = len(layers)
+    dram = platform.domains["dram"]
+    rram = platform.domains["rram"] if "rram" in platform.domains else dram
+    D = cfg.d_model
+    vis = visual_tokens(cfg) if image else 0
+    prompt = vis + text_tokens
+    kv_tok = kv_bytes_per_token(cfg)
+    terms: list[CostTerm] = []
+    for lay in layers:
+        for name, dom_name, flops, bytes_r in lay["kernels"]:
+            dom = dram if dom_name == "dram" else rram
+            if name == "FUSED_ATTN_STREAM":
+                flops = 2.0 * prompt * prompt * D
+                bytes_r = prompt * kv_tok / max(n_layers, 1)
+            else:
+                flops = flops * prompt
+            terms += _kernel_terms(name, dom_name, dom, flops, bytes_r,
+                                   platform.compute_pj_flop)
+    # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP
+    if image and cfg.frontend is not None:
+        enc_flops = 20e9
+        terms.append(CostTerm(
+            "VISION_ENCODER", "encoder", enc_flops / dram.peak_flops,
+            enc_flops * platform.compute_pj_flop * 1e-12, 0.0))
+    terms.append(CostTerm(
+        "PREFILL_OVERHEAD", "overhead",
+        platform.layer_overhead_s * n_layers
+        + platform.fixed_token_overhead_s, 0.0, 0.0))
+    return terms
+
+
+def spill_terms(cfg: ModelConfig, platform: Platform, ctx: int,
+                restore: bool = False,
+                compressed: bool = False) -> list[CostTerm]:
+    """The cost terms of moving ONE request's ``ctx``-token KV image
+    between the DRAM stack and the RRAM spill store across UCIe — the
+    RRAM write (spill) or read (restore) plus the UCIe transfer, both
+    under the `spill` domain so spill traffic stays separable from model
+    compute in every energy split."""
+    per_tok = kv_bytes_per_token(cfg)
+    if compressed and cfg.kv_policy == "tiered":
+        from repro.models.counting import (kv_elems_per_token,
+                                           kv_scale_elems_per_token)
+        per_tok = kv_elems_per_token(cfg) \
+            + 4 * kv_scale_elems_per_token(cfg)
+    kv_bytes = per_tok * max(ctx, 0)
+    rram = platform.domains.get("rram", platform.domains["dram"])
+    bw = rram.internal_bw
+    ucie_e = 0.0
+    if platform.cross_domain_bw:
+        bw = min(bw, platform.cross_domain_bw)
+        ucie_e = kv_bytes * 8 * platform.cross_domain_pj_bit * 1e-12
+    pj_bit = (rram.read_energy_pj_bit if restore
+              else rram.write_energy_pj_bit)
+    name = "KV_RESTORE" if restore else "KV_SPILL"
+    terms = [CostTerm(name, "spill", kv_bytes / bw if bw else 0.0,
+                      kv_bytes * 8 * pj_bit * 1e-12, float(kv_bytes))]
+    if ucie_e:
+        terms.append(CostTerm(name + "/ucie", "spill", 0.0, ucie_e, 0.0))
+    return terms
+
+
+def closing_terms(platform: Platform,
+                  terms: list[CostTerm]) -> list[CostTerm]:
+    """Static/uncore power charges that close out a priced term stream.
+
+    Monolithic platforms (``power_w`` set) charge board power over the
+    whole busy wall; the chiplet platform duty-cycles NMP static power
+    over each domain's busy time plus the always-on uncore (paper Fig. 7:
+    ~1 W). Spill-domain terms are excluded — spill traffic happens off
+    the critical decode path and `simulated_efficiency` has always priced
+    it additively, outside the per-request closing charge."""
+    total = math.fsum(t.time_s for t in terms if t.domain != "spill")
+    if platform.power_w is not None:
+        return [CostTerm("BOARD_STATIC", "static", 0.0,
+                         platform.power_w * total, 0.0)]
+    from repro.simulator.hardware import CHIME_UNCORE_W
+    dram = platform.domains["dram"]
+    rram = platform.domains.get("rram", dram)
+    busy_d = math.fsum(t.time_s for t in terms if t.domain == "dram")
+    busy_r = math.fsum(t.time_s for t in terms if t.domain == "rram")
+    return [
+        CostTerm("DRAM_STATIC", "static", 0.0,
+                 dram.static_power_w * busy_d, 0.0),
+        CostTerm("RRAM_STATIC", "static", 0.0,
+                 rram.static_power_w * busy_r, 0.0),
+        CostTerm("UNCORE", "static", 0.0, CHIME_UNCORE_W * total, 0.0),
+    ]
+
+
+def request_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
+                  output_tokens: int, image: bool,
+                  layers: list[dict] | None = None) -> list[CostTerm]:
+    """Every cost term of one served request: prefill, each decode step
+    at its growing context, and the closing static charge — the unit
+    `simulated_efficiency` and the telemetry ledger both sum."""
+    if layers is None:
+        layers = _layer_kernels(cfg)
+    terms = prefill_terms(cfg, platform, text_tokens, image, layers)
+    prompt = (visual_tokens(cfg) if image else 0) + text_tokens
+    for step in range(output_tokens):
+        terms += decode_token_terms(cfg, platform, prompt + step, layers)
+    terms += closing_terms(platform, terms)
+    return terms
+
+
+def sum_terms(terms: list[CostTerm]) -> dict:
+    """Order-independent aggregate of a term stream: total simulated
+    energy/time, the spill share, and the per-domain energy split. Both
+    `simulated_efficiency` and the telemetry `TierLedger` report THIS —
+    identical term multisets reconcile bit-for-bit."""
+    split: dict[str, list[float]] = {}
+    for tm in terms:
+        split.setdefault(tm.domain, []).append(tm.energy_j)
+    return {
+        "sim_energy_j": math.fsum(tm.energy_j for tm in terms),
+        "sim_total_s": math.fsum(tm.time_s for tm in terms),
+        "sim_spill_energy_j": math.fsum(split.get("spill", ())),
+        "sim_spill_s": math.fsum(tm.time_s for tm in terms
+                                 if tm.domain == "spill"),
+        "sim_energy_split_j": {d: math.fsum(v)
+                               for d, v in sorted(split.items())},
+    }
+
+
+def decode_token_cost(cfg: ModelConfig, platform: Platform, ctx: int,
+                      layers: list[dict] | None = None
+                      ) -> tuple[float, float, dict]:
+    """Analytical (time_s, energy_j, breakdown) of ONE decode step at
+    context length ``ctx`` — the per-step cost term. `simulate` sums it
+    over a growing context; the serving metrics feed it measured per-slot
+    step counts instead. Backed by `decode_token_terms` — same multiset
+    of priced events, folded into the legacy breakdown shape."""
+    terms = decode_token_terms(cfg, platform, ctx, layers)
+    tok_t = energy = 0.0
+    br = {"dram_s": 0.0, "rram_s": 0.0, "attn_kv_s": 0.0, "ucie_s": 0.0,
+          "busy_dram": 0.0, "busy_rram": 0.0}
+    for tm in terms:
+        tok_t += tm.time_s
+        energy += tm.energy_j
+        if tm.domain in ("dram", "rram"):
+            br["busy_" + tm.domain] += tm.time_s
+            if tm.name == "FUSED_ATTN_STREAM":
+                br["attn_kv_s"] += tm.time_s
+            elif tm.domain == "dram":
+                br["dram_s"] += tm.time_s
+            else:
+                br["rram_s"] += tm.time_s
+        elif tm.domain == "ucie":
+            br["ucie_s"] += tm.time_s
     return tok_t, energy, br
 
 
@@ -178,48 +370,28 @@ def kv_spill_cost(cfg: ModelConfig, platform: Platform, ctx: int,
     cached element plus the f32 per-(token, head) scales — the same byte
     math `serving.kv_pool.spill_lane_bytes` charges the RRAM budget. A
     flat (untiered) cache has no hot ring to compress, so its lanes are
-    always verbatim and the flag is ignored (mirroring the backend)."""
-    per_tok = kv_bytes_per_token(cfg)
-    if compressed and cfg.kv_policy == "tiered":
-        from repro.models.counting import (kv_elems_per_token,
-                                           kv_scale_elems_per_token)
-        per_tok = kv_elems_per_token(cfg) \
-            + 4 * kv_scale_elems_per_token(cfg)
-    kv_bytes = per_tok * max(ctx, 0)
-    rram = platform.domains.get("rram", platform.domains["dram"])
-    bw = rram.internal_bw
-    ucie_e = 0.0
-    if platform.cross_domain_bw:
-        bw = min(bw, platform.cross_domain_bw)
-        ucie_e = kv_bytes * 8 * platform.cross_domain_pj_bit * 1e-12
-    pj_bit = (rram.read_energy_pj_bit if restore
-              else rram.write_energy_pj_bit)
-    t = kv_bytes / bw if bw else 0.0
-    e = kv_bytes * 8 * pj_bit * 1e-12 + ucie_e
-    return t, e
+    always verbatim and the flag is ignored (mirroring the backend).
+    Backed by `spill_terms` — same priced events, folded to a pair."""
+    terms = spill_terms(cfg, platform, ctx, restore=restore,
+                        compressed=compressed)
+    return (math.fsum(tm.time_s for tm in terms),
+            math.fsum(tm.energy_j for tm in terms))
 
 
 def simulate(cfg: ModelConfig, platform: Platform = CHIME,
              wl: Workload = Workload()) -> SimResult:
-    D = cfg.d_model
     layers = _layer_kernels(cfg)
     n_layers = len(layers)
-    vis = visual_tokens(cfg) if wl.image else 0
-    prompt = vis + wl.text_tokens
+    prompt = (visual_tokens(cfg) if wl.image else 0) + wl.text_tokens
 
     dram = platform.domains["dram"]
     rram = platform.domains["rram"] if "rram" in platform.domains else dram
-    ucie_t_per_cut = (2 * D / platform.cross_domain_bw
-                      if platform.cross_domain_bw else 0.0)
-    ucie_e_per_cut = (2 * D * 8 * platform.cross_domain_pj_bit * 1e-12
-                      if platform.cross_domain_bw else 0.0)
 
     # ---- decode: per output token t (context grows) -------------------
     decode_s = 0.0
     energy = 0.0
     t_dram = t_rram = t_ucie = t_attn_kv = 0.0
     busy = {"dram": 0.0, "rram": 0.0}
-    kv_tok = kv_bytes_per_token(cfg)
     for step in range(wl.output_tokens):
         tok_t, tok_e, br = decode_token_cost(cfg, platform, prompt + step,
                                              layers)
@@ -234,28 +406,15 @@ def simulate(cfg: ModelConfig, platform: Platform = CHIME,
 
     # ---- prefill (+ encoder/connector, paper: <15% of runtime) --------
     # weights read once per layer, reused across prompt tokens (batched
-    # GEMM); compute scales with prompt length
-    prefill_s = 0.0
-    for lay in layers:
-        for name, dom_name, flops, bytes_r in lay["kernels"]:
-            dom = dram if dom_name == "dram" else rram
-            if name == "FUSED_ATTN_STREAM":
-                flops = 2.0 * prompt * prompt * D
-                bytes_r = prompt * kv_tok / max(n_layers, 1)
-            else:
-                flops = flops * prompt
-            t, e = _kernel_time_energy(dom, flops, bytes_r,
-                                       platform.compute_pj_flop)
-            prefill_s += t
-            energy += e
-            busy[dom_name] += t
-    # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP
-    if wl.image and cfg.frontend is not None:
-        enc_flops = 20e9
-        prefill_s += enc_flops / dram.peak_flops
-        energy += enc_flops * platform.compute_pj_flop * 1e-12
-    prefill_s += platform.layer_overhead_s * n_layers \
-        + platform.fixed_token_overhead_s
+    # GEMM); compute scales with prompt length — priced by the same
+    # `prefill_terms` the serving telemetry ledger records
+    pre = prefill_terms(cfg, platform, wl.text_tokens, wl.image, layers)
+    prefill_s = math.fsum(tm.time_s for tm in pre)
+    energy += math.fsum(tm.energy_j for tm in pre)
+    busy["dram"] += math.fsum(tm.time_s for tm in pre
+                              if tm.domain == "dram")
+    busy["rram"] += math.fsum(tm.time_s for tm in pre
+                              if tm.domain == "rram")
 
     total = prefill_s + decode_s
     if platform.power_w is not None:
