@@ -16,6 +16,12 @@ shared tiered KV pool actually buy aggregate tok/s?
     PYTHONPATH=src python benchmarks/serving_bench.py --arch mobilevlm-1.7b \
         --image-every 2 --prompt-len 48 --gen 16 --chunk-tokens 8 \
         --oversubscribe 2 --spill-compress
+    # prefix sharing: every request opens with the same 28-token system
+    # prompt; compare slot-charged vs block-charged admission at a DRAM
+    # budget of 3 worst-case slots, plus queue-free hit vs cold TTFT:
+    PYTHONPATH=src python benchmarks/serving_bench.py --arch granite-3-2b \
+        --prompt-len 32 --gen 16 --hot-window 48 --prefix-share 28 \
+        --block-tokens 4 --dram-budget-slots 3 --requests 12
 
 For each slot count in {1, --concurrency} the bench drains the SAME
 request stream (2x the slot count, so slots recycle) through a fresh
@@ -192,6 +198,131 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     return m
 
 
+def bench_prefix_share(model, params, cfg, backend_kind: str,
+                       concurrency: int, n_requests: int, prompt_len: int,
+                       gen: int, max_len: int, shared: int,
+                       dram_budget_slots: int, mesh=None,
+                       chunk_tokens: int | None = None,
+                       token_budget: int | None = None,
+                       image_every: int = 0,
+                       block_tokens: int | None = None) -> dict:
+    """Prefix-sharing capacity + TTFT comparison at a FIXED DRAM budget.
+
+    Every request in the stream opens with the same ``shared``-token
+    system prompt (and, for VQA requests, the same image), the admission
+    gate's DRAM budget is clamped to ``dram_budget_slots`` worst-case
+    residents, and the SAME stream drains twice:
+
+    - slot mode (``paged=False``): every resident is charged the
+      worst-case ``max_len`` slot image, so peak concurrency is pinned
+      at the budgeted slot count no matter how much of each prompt is
+      duplicated work;
+    - paged (``paged=True``): residents are charged their live block
+      count and a prefix hit charges only the unshared tail, so the
+      same bytes admit the redundant requests concurrently.
+
+    Peak concurrent residents (and residents per DRAM GiB) is the
+    capacity comparison; the two passes must agree token-for-token.
+    A third, unconstrained pass submits requests one at a time so TTFT
+    is pure admit-to-first-token: request 0 pays the cold prefill,
+    every later request adopts the registered chain — prefix-hit TTFT
+    vs cold-prefill TTFT without queueing noise."""
+    backend = make_backend(backend_kind, model, params,
+                           num_slots=concurrency, max_len=max_len,
+                           mesh=mesh, block_tokens=block_tokens)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    dram_budget = dram_budget_slots * hot_b
+    rram = CapacityBudget.from_platform(CHIME).rram_bytes
+
+    def fresh_engine(paged, budget=True, telemetry=None):
+        sched = None
+        if budget:
+            sched = FCFSScheduler(
+                CapacityBudget(dram_budget, rram), hot_b, cold_b,
+                spill_lanes=backend.n_spill,
+                lane_bytes=backend.spill_lane_bytes())
+        return Engine(backend, scheduler=sched,
+                      chunk_tokens=chunk_tokens,
+                      token_budget=token_budget, paged=paged,
+                      telemetry=telemetry)
+
+    def stream(seed):
+        return make_synthetic_requests(cfg, n_requests, prompt_len, gen,
+                                       seed=seed, image_every=image_every,
+                                       shared_prefix=shared)
+
+    fresh_engine(True).run(stream(0))          # warm-up: pays compilation
+
+    def drain(paged):
+        engine = fresh_engine(paged)
+        for r in stream(1):
+            engine.submit(r)
+        peak, step_s = 0, []
+        t0 = time.perf_counter()
+        while not engine.idle:
+            ts = time.perf_counter()
+            engine.step()
+            step_s.append(time.perf_counter() - ts)
+            peak = max(peak, engine.pool.active_slots)
+        wall = time.perf_counter() - t0
+        m = aggregate_metrics(engine.finished, wall)
+        m["paged"] = paged
+        m["peak_concurrency"] = peak
+        m["requests_per_dram_gib"] = peak / (dram_budget / 2**30)
+        m["steps"] = len(step_s)
+        m["p50_step_s"] = float(np.percentile(step_s, 50))
+        m["p95_step_s"] = float(np.percentile(step_s, 95))
+        m["engine_stats"] = dict(engine.stats)
+        m["endurance"] = engine.endurance_report()
+        m["sim"] = simulated_efficiency(cfg, engine.finished)
+        if engine.block_pool is not None:
+            bp = engine.block_pool
+            m["block_pool"] = {k: int(v) for k, v in bp.stats.items()
+                               if k != "block_writes"}
+            m["block_pool"]["peak_used_blocks"] = bp.used_blocks
+        return m, {r.rid: list(r.generated) for r in engine.finished}
+
+    slot_m, slot_toks = drain(False)
+    paged_m, paged_toks = drain(True)
+    parity = slot_toks == paged_toks
+
+    # TTFT pass: unconstrained budget, one request in flight at a time,
+    # so TTFT is admit-to-first-token with an empty queue. Request 0 is
+    # the cold prefill that registers the chain; later requests hit it.
+    eng = fresh_engine(True, budget=False)
+    for r in stream(2):
+        eng.submit(r)
+        while not eng.idle:
+            eng.step()
+    seq = eng.finished[-n_requests:]
+    cold = [r for r in seq if r.prefix_hit == 0]
+    hits = [r for r in seq if r.prefix_hit > 0]
+    cold_ttft = float(np.mean([r.first_token_s - r.arrival_s
+                               for r in cold])) if cold else 0.0
+    hit_ttft = float(np.mean([r.first_token_s - r.arrival_s
+                              for r in hits])) if hits else 0.0
+
+    return {
+        "mode": "prefix-share",
+        "shared_prefix": shared,
+        "block_tokens": backend.block_tokens,
+        "dram_budget_slots": dram_budget_slots,
+        "dram_budget_bytes": dram_budget,
+        "slot": slot_m,
+        "paged": paged_m,
+        "token_parity": parity,
+        "capacity_gain": (paged_m["peak_concurrency"]
+                          / max(slot_m["peak_concurrency"], 1)),
+        "sequential_ttft": {
+            "cold_requests": len(cold),
+            "hit_requests": len(hits),
+            "cold_mean_ttft_s": cold_ttft,
+            "prefix_hit_mean_ttft_s": hit_ttft,
+            "hit_faster": bool(hits) and hit_ttft < cold_ttft,
+        },
+    }
+
+
 def append_bench_json(record: dict, path: pathlib.Path = BENCH_JSON):
     """Append one run record to the serving BENCH trajectory. Tolerates a
     truncated/corrupt file (starts fresh) and replaces atomically so an
@@ -253,6 +384,21 @@ def main(argv=None):
     ap.add_argument("--idle-offload-steps", type=int, default=None,
                     help="enable proactive idle cold-KV offload at this "
                          "residency threshold (see serving/scheduler.py)")
+    ap.add_argument("--prefix-share", type=int, default=0, metavar="N",
+                    help="prefix-sharing comparison: every request opens "
+                         "with the same N-token system prompt (and VQA "
+                         "requests share one image); drains the stream "
+                         "slot-charged vs block-charged at the same "
+                         "clamped DRAM budget and measures peak "
+                         "concurrency, hit rate and prefix-hit vs cold "
+                         "TTFT (0 = off)")
+    ap.add_argument("--block-tokens", type=int, default=None,
+                    help="prefix-share page size in tokens (default: "
+                         "backend's, i.e. ENDURANCE_BLOCK clamped to "
+                         "max_len and the chunk grid)")
+    ap.add_argument("--dram-budget-slots", type=int, default=0,
+                    help="prefix-share DRAM budget, in worst-case slot "
+                         "images (0 = concurrency // 2)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip appending to the BENCH json trajectory")
     args = ap.parse_args(argv)
@@ -296,7 +442,40 @@ def main(argv=None):
               f"; telemetry-on overhead {t['enabled_overhead_pct']:+.1f}%)")
 
     results = []
-    if args.oversubscribe and args.oversubscribe > 1 \
+    if args.prefix_share:
+        # prefix-sharing capacity comparison: same stream, same DRAM
+        # budget, slot-charged vs block-charged admission (+ a
+        # sequential pass for queue-free hit-vs-cold TTFT)
+        base = args.dram_budget_slots or max(1, args.concurrency // 2)
+        r = bench_prefix_share(
+            model, params, cfg, args.backend, args.concurrency,
+            n_requests, args.prompt_len, args.gen, max_len,
+            args.prefix_share, base, mesh=mesh,
+            chunk_tokens=args.chunk_tokens,
+            token_budget=args.token_budget,
+            image_every=args.image_every,
+            block_tokens=args.block_tokens)
+        results.append(r)
+        sm, pm, tt = r["slot"], r["paged"], r["sequential_ttft"]
+        print(f"[bench] shared prefix {args.prefix_share} tok, DRAM "
+              f"budget {base} worst-case slots "
+              f"({r['dram_budget_bytes']} B), block={r['block_tokens']}:")
+        print(f"[bench]   slot-charged: peak {sm['peak_concurrency']} "
+              f"concurrent ({sm['requests_per_dram_gib']:.1f}/GiB), "
+              f"{sm['tok_per_s']:.1f} tok/s")
+        print(f"[bench]   block-charged: peak {pm['peak_concurrency']} "
+              f"concurrent ({pm['requests_per_dram_gib']:.1f}/GiB), "
+              f"{pm['tok_per_s']:.1f} tok/s, hit rate "
+              f"{pm.get('prefix_hit_rate', 0.0):.2f}, "
+              f"{pm.get('block_pool', {}).get('cow_copies', 0)} CoW "
+              f"(tokens {'MATCH' if r['token_parity'] else 'DIVERGE'})")
+        print(f"[bench]   capacity x{r['capacity_gain']:.2f} at the same "
+              f"DRAM budget; sequential TTFT: cold "
+              f"{tt['cold_mean_ttft_s'] * 1e3:.1f} ms vs prefix-hit "
+              f"{tt['prefix_hit_mean_ttft_s'] * 1e3:.1f} ms over "
+              f"{tt['hit_requests']} hits "
+              f"({'hit faster' if tt['hit_faster'] else 'NO SPEEDUP'})")
+    elif args.oversubscribe and args.oversubscribe > 1 \
             and args.spill_compress:
         # CAPACITY comparison at fixed DRAM *and* RRAM spill budgets:
         # oversubscribed residents beyond the DRAM base must be backed
@@ -394,8 +573,10 @@ def main(argv=None):
             "hot_window": args.hot_window,
             "prompt_len": args.prompt_len,
             "gen": args.gen,
-            "chunk_tokens": results[-1]["chunk_tokens"],
+            "chunk_tokens": results[-1].get("chunk_tokens",
+                                            args.chunk_tokens or 0),
             "image_every": args.image_every,
+            "prefix_share": args.prefix_share or 0,
             "oversubscribe": args.oversubscribe or 0,
             "spill_compress": bool(args.spill_compress),
             "idle_offload_steps": args.idle_offload_steps or 0,

@@ -111,6 +111,11 @@ def main(argv=None):
                     help="KV pool length per slot (0 = prompt+gen)")
     ap.add_argument("--image-every", type=int, default=0,
                     help="every k-th request is a VQA request (0 = none)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="every request opens with the same N-token "
+                         "system prompt (VQA requests also share one "
+                         "image) — the stream shape --prefix-cache "
+                         "exists for (0 = fully distinct prompts)")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="chunked prefill: cap a prefill chunk at this "
                          "many tokens (0 = whole-prompt chunks, even if "
@@ -139,6 +144,16 @@ def main(argv=None):
                          "(bounded-error restore; a parked image then "
                          "costs ~the cold tier's RRAM bytes; default: "
                          "consult REPRO_SERVE_SPILL_COMPRESS)")
+    ap.add_argument("--paged", action="store_true", default=None,
+                    help="charge the admission gate per live KV block "
+                         "instead of per worst-case slot (default: "
+                         "consult REPRO_SERVE_PAGED; implies "
+                         "--prefix-cache)")
+    ap.add_argument("--prefix-cache", action="store_true", default=None,
+                    help="hash-indexed prefix reuse over the paged pool: "
+                         "admissions whose prompt head matches a cached "
+                         "block chain skip prefill for the hit blocks "
+                         "(default: on whenever paged)")
     ap.add_argument("--idle-offload-steps", type=int, default=None,
                     help="proactively offload a runner resident >= this "
                          "many decode steps to an RRAM lane when an "
@@ -191,10 +206,12 @@ def main(argv=None):
                     token_budget=args.token_budget,
                     oversubscribe=args.oversubscribe,
                     idle_offload_steps=args.idle_offload_steps,
+                    paged=args.paged, prefix_cache=args.prefix_cache,
                     telemetry=tel)
     reqs = make_synthetic_requests(cfg, args.requests, args.prompt_len,
                                    args.gen, image_every=args.image_every,
-                                   priority_every=args.priority_every)
+                                   priority_every=args.priority_every,
+                                   shared_prefix=args.shared_prefix)
     t0 = time.time()
     if args.priority_every:
         # interactive traffic lands mid-run: batch work first, then the
@@ -234,6 +251,13 @@ def main(argv=None):
               f"{engine.stats['restores']} restores "
               f"(restore latency p95 "
               f"{m.get('restore_latency_p95_s', 0.0) * 1e3:.1f} ms)")
+    if engine.block_pool is not None:
+        bp = engine.block_pool
+        print(f"[serve] prefix cache: {m.get('prefix_hits', 0)} hits / "
+              f"{m.get('prefix_hit_tokens', 0)} tokens skipped "
+              f"(hit rate {m.get('prefix_hit_rate', 0.0):.2f}); "
+              f"{bp.stats['cow_copies']} CoW copies, "
+              f"{bp.used_blocks}/{bp.num_blocks} blocks live")
     if args.kv_policy == "tiered":
         rep = engine.endurance_report()
         print(f"[serve] endurance: max writes/cold-slot="

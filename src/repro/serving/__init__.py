@@ -7,6 +7,12 @@ time leaves both domains idle most of the step. This package turns the
 single-request `launch/serve.py` path into a serving engine:
 
 * `request.py`   — request/timing dataclasses and the FCFS stream
+* `block_pool.py`— host-side paged prefix sharing: `ENDURANCE_BLOCK`-
+                   granular block chains keyed by content hash (token
+                   ids + image patch digests), free-list + per-block
+                   refcounts + LRU eviction, copy-on-write on first
+                   divergence inside a shared block, and write-once
+                   endurance bookkeeping for N-way-shared blocks
 * `kv_pool.py`   — model-free slot pool: `KVPoolState` (explicit typed
                    pytree) + host-side slot bookkeeping + endurance audit
 * `scheduler.py` — `StepPlan` production: priority classes (FCFS within
@@ -43,6 +49,8 @@ single-request `launch/serve.py` path into a serving engine:
 
 from repro.serving.backend import (InferenceBackend, LocalBackend,
                                    ShardedBackend, make_backend)
+from repro.serving.block_pool import (BlockPool, PrefixHit,
+                                      request_prefix_keys)
 from repro.serving.engine import Engine
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool,
                                    slot_kv_bytes, spill_lane_bytes)
@@ -57,6 +65,7 @@ from repro.serving.telemetry import (REASON_CODES, NullTelemetry,
                                      validate_chrome_trace)
 
 __all__ = [
+    "BlockPool", "PrefixHit", "request_prefix_keys",
     "Engine", "InferenceBackend", "KVPoolState", "LocalBackend",
     "PrefillChunk", "ShardedBackend", "StepPlan", "TieredKVPool",
     "aggregate_metrics", "make_backend", "make_synthetic_requests",

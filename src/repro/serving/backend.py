@@ -17,9 +17,20 @@ The old two-phase admission surface — `prefill(batch, length)` building a
 detached batch-1 cache, then `insert(state, req_cache, slot)` scattering
 it into the pool — is subsumed by `extend_step`: the final (``commit``)
 chunk folds the in-flight workspace into the flat/tiered stores and
-scatters them into the slot inside one jitted program. `prefill` and
-`insert` remain as one-release deprecation shims (DeprecationWarning),
-mirroring the PR 2 `Engine(model, params)` shim.
+scatters them into the slot inside one jitted program. (The `prefill` /
+`insert` deprecation shims rode for their one release and are gone.)
+
+Backends also carry the PAGED PREFIX BLOCK STORE (PR 7): a lazy tree of
+``prefix_blocks`` x ``block_tokens`` full-precision workspace K/V rows
+(plus per-block recurrent-state snapshots), with four tiny jitted block
+copies — `prefix_save_ws`/`prefix_load_ws` move one block's rows between
+the store and an in-flight extend workspace, `prefix_save_state`/
+`prefix_load_state` snapshot/seed the SSM states. Which block holds
+which prefix is host-side state in `serving.block_pool.BlockPool`; the
+engine seeds hit blocks into a fresh workspace at admission ("gather on
+admit") and registers new blocks at commit, so decode and the committed
+slot layout are completely untouched — which is why a paged engine holds
+exact token parity with the slot-pool oracle.
 
 Two implementations ship:
 
@@ -46,7 +57,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import warnings
 from typing import Protocol, runtime_checkable
 
 import jax
@@ -93,9 +103,17 @@ class InferenceBackend(Protocol):
     #   cold tier, scales, recurrent states and flat stores still ride
     #   verbatim). Default off: REPRO_SERVE_SPILL_COMPRESS / CLI
     #   --spill-compress.
+    block_tokens: int          # prefix-page granularity (tokens/block);
+    #   defaults to core.kv_tiers.ENDURANCE_BLOCK clamped to max_len and
+    #   rounded to the chunk grid for recurrent architectures
+    prefix_blocks: int         # physical blocks in the prefix store
 
-    def slot_kv_bytes(self) -> tuple[int, int]:
-        """(dram_hot, rram_cold) bytes one resident request pins."""
+    def slot_kv_bytes(self, *, length: int | None = None
+                      ) -> tuple[int, int]:
+        """(dram_hot, rram_cold) bytes one resident request pins —
+        worst-case ``max_len`` residency by default, or the live
+        block-granular charge for a request of total span ``length``
+        (what the paged admission gate prices)."""
         ...
 
     def spill_lane_bytes(self) -> int:
@@ -155,18 +173,6 @@ class InferenceBackend(Protocol):
         counters move."""
         ...
 
-    def prefill(self, batch: dict, length: int
-                ) -> tuple[jax.Array, dict]:
-        """DEPRECATED (use `extend_step`): whole-prompt prefill to a
-        detached batch-1 cache."""
-        ...
-
-    def insert(self, state: KVPoolState, req_cache: dict, slot
-               ) -> KVPoolState:
-        """DEPRECATED (use `extend_step`): scatter a batch-1 cache into
-        slot ``slot``."""
-        ...
-
 
 class _JittedBackend:
     """Shared scaffolding: validates the config, derives the slot-axis
@@ -175,7 +181,9 @@ class _JittedBackend:
 
     def __init__(self, model: Model, params, num_slots: int, max_len: int,
                  n_spill: int | None = None,
-                 spill_compress: bool | None = None):
+                 spill_compress: bool | None = None,
+                 prefix_blocks: int | None = None,
+                 block_tokens: int | None = None):
         cfg = model.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only model cannot be served")
@@ -214,15 +222,46 @@ class _JittedBackend:
         self._spill_axes = (map_spill_stores(self._axes,
                                              KT.spill_store_meta)
                             if self.spill_compress else self._axes)
+        # paged prefix-store geometry (PR 7): the page size defaults to
+        # the RRAM endurance-block granularity, rounded to the canonical
+        # chunk grid for recurrent architectures (a state snapshot off
+        # the grid could never seed a bit-identical resume) and clamped
+        # to the slot length; the store defaults to enough blocks to
+        # re-page every slot. Arrays and traces are lazy — an engine
+        # that never pages pays nothing here.
+        bt = block_tokens if block_tokens is not None \
+            else min(KT.ENDURANCE_BLOCK, max_len)
+        if bt < 1:
+            raise ValueError(f"block_tokens must be >= 1, got {bt}")
+        if self.chunk_unit > 1:
+            bt = max((bt // self.chunk_unit) * self.chunk_unit,
+                     self.chunk_unit)
+        self.block_tokens = min(bt, max_len)
+        if prefix_blocks is None:
+            prefix_blocks = num_slots * (-(-max_len // self.block_tokens))
+        if prefix_blocks < 1:
+            raise ValueError(f"prefix_blocks must be >= 1, got "
+                             f"{prefix_blocks}")
+        self.prefix_blocks = prefix_blocks
+        ext_shapes, _ = model.extend_spec(1, max_len)
+        self._ext_axes = batch_axes(model, ext_shapes)
+        self.has_prefix_ws = any(
+            str(getattr(p[-1], "key", p[-1])).endswith("_ws")
+            for p, _ in jax.tree_util.tree_flatten_with_path(ext_shapes)[0])
         self._zero_slot = None
         self._zero_ext = None
         self._step = jax.jit(self._build_step())
-        self._prefill = jax.jit(self._build_prefill())
         self._insert = jax.jit(self._build_insert())
         self._ext_part = jax.jit(self._build_extend(commit=False))
         self._ext_commit = jax.jit(self._build_extend(commit=True))
         self._evict = jax.jit(self._build_evict())
         self._restore = jax.jit(self._build_restore())
+        self._pfx_save_ws = jax.jit(self._build_prefix_ws(save=True))
+        self._pfx_load_ws = jax.jit(self._build_prefix_ws(save=False))
+        self._pfx_save_state = jax.jit(
+            self._build_prefix_state(save=True))
+        self._pfx_load_state = jax.jit(
+            self._build_prefix_state(save=False))
 
     # ---- placement hooks (ShardedBackend overrides) ------------------
     def _place(self, cache: dict) -> dict:
@@ -242,6 +281,12 @@ class _JittedBackend:
 
     def _constrain_spill(self, spill: dict) -> dict:
         return spill
+
+    def _place_prefix(self, store: dict) -> dict:
+        return store
+
+    def _constrain_prefix(self, store: dict) -> dict:
+        return store
 
     # ---- jitted program builders -------------------------------------
     def _build_step(self):
@@ -270,16 +315,6 @@ class _JittedBackend:
                 jax.tree.map(sel, nc, cache, axes))
 
         return step
-
-    def _build_prefill(self):
-        model, max_len = self.model, self.max_len
-
-        def prefill(p, batch, length):
-            logits, cache = model.prefill(p, batch, max_len, length)
-            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-            return tok[0], cache
-
-        return prefill
 
     def _build_insert(self):
         axes = self._axes
@@ -364,9 +399,80 @@ class _JittedBackend:
 
         return restore
 
+    @staticmethod
+    def _is_ws(path) -> bool:
+        """Workspace leaves (`*_ws`) hold per-position K/V rows; every
+        other extend leaf is a recurrent-state snapshot."""
+        return str(getattr(path[-1], "key", path[-1])).endswith("_ws")
+
+    def _build_prefix_ws(self, save: bool):
+        """One-block workspace copy between the prefix store (block axis
+        ``a``, ``block_tokens`` rows) and an in-flight extend workspace
+        (batch-1, ``max_len`` rows at axis ``a+1``). State leaves ride
+        through untouched — they move with `_build_prefix_state` only at
+        a chain's terminal block."""
+        axes, bt, is_ws = self._ext_axes, self.block_tokens, self._is_ws
+
+        if save:
+            def save_ws(store, ext, bid, pos):
+                def leaf(path, s, e, a):
+                    if not is_ws(path):
+                        return s
+                    row = jax.lax.dynamic_slice_in_dim(e, pos, bt,
+                                                       axis=a + 1)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        s, row.astype(s.dtype), bid, axis=a)
+                return self._constrain_prefix(
+                    jax.tree_util.tree_map_with_path(leaf, store, ext,
+                                                     axes))
+            return save_ws
+
+        def load_ws(ext, store, bid, pos):
+            def leaf(path, e, s, a):
+                if not is_ws(path):
+                    return e
+                row = jax.lax.dynamic_slice_in_dim(s, bid, 1, axis=a)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    e, row.astype(e.dtype), pos, axis=a + 1)
+            return self._constrain_ext(
+                jax.tree_util.tree_map_with_path(leaf, ext, store, axes))
+        return load_ws
+
+    def _build_prefix_state(self, save: bool):
+        """Recurrent-state snapshot copy: the non-workspace extend
+        leaves (SSM/rwkv states after the whole prefix) move wholesale
+        between block ``bid``'s state rows and the batch-1 extend tree.
+        A pure-attention model has no such leaves and these programs are
+        identity copies that never run (`has_prefix_ws` gating)."""
+        axes, is_ws = self._ext_axes, self._is_ws
+
+        if save:
+            def save_state(store, ext, bid):
+                def leaf(path, s, e, a):
+                    if is_ws(path):
+                        return s
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        s, e.astype(s.dtype), bid, axis=a)
+                return self._constrain_prefix(
+                    jax.tree_util.tree_map_with_path(leaf, store, ext,
+                                                     axes))
+            return save_state
+
+        def load_state(ext, store, bid):
+            def leaf(path, e, s, a):
+                if is_ws(path):
+                    return e
+                return jax.lax.dynamic_slice_in_dim(
+                    s, bid, 1, axis=a).astype(e.dtype)
+            return self._constrain_ext(
+                jax.tree_util.tree_map_with_path(leaf, ext, store, axes))
+        return load_state
+
     # ---- InferenceBackend surface ------------------------------------
-    def slot_kv_bytes(self) -> tuple[int, int]:
-        return slot_kv_bytes(self.model, self.max_len)
+    def slot_kv_bytes(self, *, length: int | None = None
+                      ) -> tuple[int, int]:
+        return slot_kv_bytes(self.model, self.max_len, length=length,
+                             block_tokens=self.block_tokens)
 
     def spill_lane_bytes(self) -> int:
         return spill_lane_bytes(self.model, self.max_len,
@@ -465,22 +571,61 @@ class _JittedBackend:
                              jnp.asarray(slot, jnp.int32))
         return dataclasses.replace(state, cache=cache)
 
-    # ---- one-release deprecation shims (PR 3) ------------------------
-    def prefill(self, batch: dict, length) -> tuple[jax.Array, dict]:
-        warnings.warn(
-            "InferenceBackend.prefill is deprecated; admission now runs "
-            "through extend_step (chunked prefill directly into the pool "
-            "slot)", DeprecationWarning, stacklevel=2)
-        return self._prefill(self.params, batch,
-                             jnp.asarray(length, jnp.int32))
+    # ---- paged prefix block store (PR 7) -----------------------------
+    def ensure_prefix(self, state: KVPoolState) -> KVPoolState:
+        """Materialize the prefix block store on first use (lazy, like
+        the spill lanes): a zero extend tree with the batch axis sized
+        to ``prefix_blocks`` and the sequence axis to ``block_tokens``."""
+        if state.prefix is not None:
+            return state
+        store = self._place_prefix(self.model.init_extend_cache(
+            self.prefix_blocks, self.block_tokens))
+        return dataclasses.replace(state, prefix=store,
+                                   prefix_axes=self._ext_axes)
 
-    def insert(self, state: KVPoolState, req_cache: dict, slot
-               ) -> KVPoolState:
-        warnings.warn(
-            "InferenceBackend.insert is deprecated; the commit chunk of "
-            "extend_step scatters the request cache into its slot",
-            DeprecationWarning, stacklevel=2)
-        return self._insert_state(state, req_cache, slot)
+    def prefix_block_bytes(self) -> int:
+        """Bytes ONE prefix block pins (workspace rows + state-snapshot
+        rows) — what the scheduler charges the shared store against the
+        RRAM budget per live block."""
+        shapes, _ = self.model.extend_spec(1, self.block_tokens)
+        total = 0
+        for leaf in jax.tree.leaves(shapes):
+            n = jnp.dtype(leaf.dtype).itemsize
+            for d in leaf.shape:
+                n *= d
+            total += n
+        return int(total)
+
+    def prefix_save_ws(self, state: KVPoolState, ext: dict, bid, pos
+                       ) -> KVPoolState:
+        """Write workspace rows [pos, pos+block_tokens) of ``ext`` into
+        block ``bid`` — the ONE physical write a shared block ever
+        takes."""
+        store = self._pfx_save_ws(state.prefix, ext,
+                                  jnp.asarray(bid, jnp.int32),
+                                  jnp.asarray(pos, jnp.int32))
+        return dataclasses.replace(state, prefix=store)
+
+    def prefix_load_ws(self, state: KVPoolState, ext: dict, bid, pos
+                       ) -> dict:
+        """Seed block ``bid``'s rows into ``ext`` at position ``pos``
+        (admission gather of one hit block)."""
+        return self._pfx_load_ws(ext, state.prefix,
+                                 jnp.asarray(bid, jnp.int32),
+                                 jnp.asarray(pos, jnp.int32))
+
+    def prefix_save_state(self, state: KVPoolState, ext: dict, bid
+                          ) -> KVPoolState:
+        """Snapshot ``ext``'s recurrent states into block ``bid`` (the
+        chain-terminal resume point for SSM architectures)."""
+        store = self._pfx_save_state(state.prefix, ext,
+                                     jnp.asarray(bid, jnp.int32))
+        return dataclasses.replace(state, prefix=store)
+
+    def prefix_load_state(self, state: KVPoolState, ext: dict, bid
+                          ) -> dict:
+        return self._pfx_load_state(ext, state.prefix,
+                                    jnp.asarray(bid, jnp.int32))
 
 
 class LocalBackend(_JittedBackend):
@@ -505,7 +650,9 @@ class ShardedBackend(_JittedBackend):
                  mesh: jax.sharding.Mesh | None = None,
                  rules: ShardingRules | None = None,
                  n_spill: int | None = None,
-                 spill_compress: bool | None = None):
+                 spill_compress: bool | None = None,
+                 prefix_blocks: int | None = None,
+                 block_tokens: int | None = None):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh()
@@ -535,8 +682,13 @@ class ShardedBackend(_JittedBackend):
                                               KT.spill_store_meta)
         params = jax.device_put(params,
                                 model.param_shardings(self.rules))
+        # prefix-store shardings depend on the block geometry the base
+        # ctor resolves, so they build lazily on first prefix use
+        self._pfx_sh = None
         super().__init__(model, params, num_slots, max_len,
-                         n_spill=n_spill, spill_compress=spill_compress)
+                         n_spill=n_spill, spill_compress=spill_compress,
+                         prefix_blocks=prefix_blocks,
+                         block_tokens=block_tokens)
 
     def _place(self, cache: dict) -> dict:
         return jax.device_put(cache, self._pool_sh)
@@ -556,18 +708,40 @@ class ShardedBackend(_JittedBackend):
     def _constrain_spill(self, spill: dict) -> dict:
         return jax.lax.with_sharding_constraint(spill, self._spill_sh)
 
+    def _prefix_shardings(self):
+        """Blocks shard like slots ('data'); the per-block sequence axis
+        (block_tokens wide) keeps the workspace logical axes, with the
+        resolver's divisibility fallback to replicated."""
+        if self._pfx_sh is None:
+            self._pfx_sh = self.model.extend_shardings(
+                self.rules, self.prefix_blocks, self.block_tokens)
+        return self._pfx_sh
+
+    def _place_prefix(self, store: dict) -> dict:
+        return jax.device_put(store, self._prefix_shardings())
+
+    def _constrain_prefix(self, store: dict) -> dict:
+        return jax.lax.with_sharding_constraint(store,
+                                                self._prefix_shardings())
+
 
 def make_backend(kind: str, model: Model, params, *, num_slots: int,
                  max_len: int, mesh=None,
                  n_spill: int | None = None,
-                 spill_compress: bool | None = None) -> InferenceBackend:
+                 spill_compress: bool | None = None,
+                 prefix_blocks: int | None = None,
+                 block_tokens: int | None = None) -> InferenceBackend:
     """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
     if kind == "local":
         return LocalBackend(model, params, num_slots, max_len,
                             n_spill=n_spill,
-                            spill_compress=spill_compress)
+                            spill_compress=spill_compress,
+                            prefix_blocks=prefix_blocks,
+                            block_tokens=block_tokens)
     if kind == "sharded":
         return ShardedBackend(model, params, num_slots, max_len, mesh=mesh,
                               n_spill=n_spill,
-                              spill_compress=spill_compress)
+                              spill_compress=spill_compress,
+                              prefix_blocks=prefix_blocks,
+                              block_tokens=block_tokens)
     raise ValueError(f"unknown backend kind {kind!r}")

@@ -53,10 +53,12 @@ import warnings
 
 import numpy as np
 
-from repro.serving.backend import InferenceBackend, LocalBackend
+from repro.serving.backend import InferenceBackend
+from repro.serving.block_pool import (BlockPool, PrefixHit,
+                                      request_prefix_keys)
 from repro.serving.request import FINISHED, PREEMPTED, RUNNING, Request
 from repro.serving.scheduler import (CapacityBudget, FCFSScheduler,
-                                     PrefillChunk, StepPlan)
+                                     PrefillChunk)
 from repro.serving.telemetry import NullTelemetry
 from repro.simulator.hardware import CHIME
 
@@ -109,11 +111,14 @@ def _env_float(name: str) -> float | None:
 class _Inflight:
     """The one prompt currently prefilling: its pool slot is already
     allocated (it pins the byte budgets) and ``ext`` carries the
-    chunk-resumable state between extend calls."""
+    chunk-resumable state between extend calls. ``prefix`` holds the
+    acquired prefix-cache hit (refcounts released once the prompt
+    commits and re-registers its chain)."""
     req: Request
     slot: int
     pos: int
     ext: dict
+    prefix: PrefixHit | None = None
 
 
 @dataclasses.dataclass
@@ -149,26 +154,32 @@ class Engine:
     as preemption) and take its freed DRAM under the base byte gates.
     ``telemetry`` attaches a `serving.telemetry.Telemetry` hub (span
     tracer + tier-traffic ledger + gauges/decision log); None (default)
-    installs the no-op `NullTelemetry`."""
+    installs the no-op `NullTelemetry`.
 
-    def __init__(self, backend, params=None, num_slots: int | None = None,
-                 max_len: int | None = None,
+    ``paged`` (env ``REPRO_SERVE_PAGED``, default off) switches the
+    admission gate from per-slot worst-case ``max_len`` byte charges to
+    live block-granular charges (each resident prices its block-rounded
+    prompt+generation span). ``prefix_cache`` (default = ``paged``, and
+    implying it) additionally shares identical request prefixes through
+    the host-side `serving.block_pool.BlockPool`: an admitted request
+    whose token/patch prefix hashes to cached chains seeds its prefill
+    workspace from the shared blocks and starts prefilling at the hit
+    position — only the tail is computed (and charged) — while shared
+    blocks take exactly ONE physical write regardless of how many
+    requests reference them (the RRAM write-once discipline). The slot
+    pool semantics are unchanged either way, so ``Engine(paged=False)``
+    stays the exact parity oracle."""
+
+    def __init__(self, backend,
                  scheduler: FCFSScheduler | None = None,
                  platform=CHIME, clock=time.perf_counter,
                  token_budget: int | None = None,
                  chunk_tokens: int | None = None,
                  oversubscribe: float | None = None,
                  idle_offload_steps: int | None = None,
+                 paged: bool | None = None,
+                 prefix_cache: bool | None = None,
                  telemetry=None):
-        if params is not None or num_slots is not None or max_len is not None:
-            # one-release compat shim: Engine(model, params, num_slots=,
-            # max_len=) builds the local backend the seed engine inlined
-            warnings.warn(
-                "Engine(model, params, num_slots=..., max_len=...) is "
-                "deprecated; build a serving.backend (LocalBackend / "
-                "ShardedBackend) and pass Engine(backend) instead",
-                DeprecationWarning, stacklevel=2)
-            backend = LocalBackend(backend, params, num_slots, max_len)
         self.backend: InferenceBackend = backend
         self.max_len = backend.max_len
         self.clock = clock
@@ -211,6 +222,25 @@ class Engine:
         if (token_budget is None and not explicit_unbounded
                 and chunk_tokens is not None):
             token_budget = chunk_tokens + backend.num_slots
+        # ---- paged accounting + prefix cache -------------------------
+        if paged is None:
+            paged = bool(_env_int("REPRO_SERVE_PAGED"))
+        if prefix_cache is None:
+            prefix_cache = paged
+        self.prefix_cache = bool(prefix_cache)
+        self.paged = bool(paged) or self.prefix_cache   # cache implies it
+        self.block_pool: BlockPool | None = None
+        self._probed: dict[int, PrefixHit] = {}
+        self._prefix_block_bytes = 0
+        if self.prefix_cache:
+            if not (hasattr(backend, "prefix_blocks")
+                    and hasattr(backend, "block_tokens")):
+                raise ValueError(
+                    "prefix_cache/paged needs a backend with the prefix "
+                    "block surface (prefix_blocks/block_tokens)")
+            self.block_pool = BlockPool(backend.prefix_blocks,
+                                        backend.block_tokens)
+            self._prefix_block_bytes = backend.prefix_block_bytes()
         # a PR-2/3-era custom backend predates the spill surface: degrade
         # to preemption-disabled instead of crashing on the missing attr
         n_spill = getattr(backend, "n_spill", 0)
@@ -247,6 +277,25 @@ class Engine:
                 scheduler.idle_offload_steps = idle_offload_steps
             if scheduler.lane_bytes is None:
                 scheduler.lane_bytes = lane_b
+        if self.paged:
+            # live-block charges + prefix probing: back-fill only unset
+            # hooks so a custom scheduler's own policy wins
+            if getattr(scheduler, "charge_fn", None) is None:
+                try:
+                    scheduler.charge_fn = self._charge
+                except AttributeError:
+                    pass                       # __slots__ scheduler
+            if self.prefix_cache \
+                    and getattr(scheduler, "prefix_probe", None) is None:
+                try:
+                    scheduler.prefix_probe = self._probe
+                except AttributeError:
+                    pass
+            if getattr(scheduler, "shared_bytes_fn", None) is None:
+                try:
+                    scheduler.shared_bytes_fn = self._shared_bytes
+                except AttributeError:
+                    pass
         self.scheduler = scheduler
         # one-release compat: a PR-3-era custom plan() override that does
         # not accept the preemption kwargs (running/free_lanes) still
@@ -263,19 +312,6 @@ class Engine:
                 "scheduler.plan() does not accept running=/free_lanes=; "
                 "the engine will plan without preemption. Accept those "
                 "keywords to enable it",
-                DeprecationWarning, stacklevel=2)
-        # one-release compat: a PR 1/2-era scheduler subclass that
-        # overrides next_request (custom admission policy) but not plan()
-        # would silently regress to base-class FCFS planning — drive it
-        # through a whole-prompt legacy adapter instead (see _plan_legacy)
-        self._legacy_sched = (
-            type(scheduler).next_request is not FCFSScheduler.next_request
-            and type(scheduler).plan is FCFSScheduler.plan)
-        if self._legacy_sched:
-            warnings.warn(
-                "scheduler overrides next_request but not plan(); the "
-                "engine will drive it through a whole-prompt admission "
-                "adapter (no chunked prefill). Override plan() instead",
                 DeprecationWarning, stacklevel=2)
         if scheduler.max_concurrent < 1:
             raise ValueError(
@@ -300,7 +336,8 @@ class Engine:
         self._next_rid = 0
         self.stats = {"steps": 0, "prefill_chunks": 0, "extend_calls": 0,
                       "decode_steps": 0, "decode_tokens": 0,
-                      "evictions": 0, "restores": 0, "idle_offloads": 0}
+                      "evictions": 0, "restores": 0, "idle_offloads": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0}
 
         # ---- telemetry (opt-in; None = no-op hooks, <2% contract) ----
         self.telemetry = telemetry if telemetry is not None \
@@ -334,6 +371,49 @@ class Engine:
         self.scheduler.submit(req)
         self.telemetry.request_submitted(req)
         return req
+
+    # ------------------------------------------------------------------
+    # paged accounting + prefix cache hooks (scheduler callbacks)
+    # ------------------------------------------------------------------
+    def _probe(self, req: Request) -> int:
+        """Prefix-cache probe for the queue head: longest cached chain
+        matching the request's token/patch prefix, usable at the
+        backend's prefill grid. Probes are memoized per step (the charge
+        and the admission start position must see the SAME hit) and pin
+        their blocks against eviction for the step without refcounting —
+        a denied admission must not leak references."""
+        if self.block_pool is None:
+            return 0
+        if req.rid in self._probed:
+            return self._probed[req.rid].length
+        hit = self.block_pool.lookup(
+            request_prefix_keys(req), max_hit=req.prompt_len - 1,
+            require_state=self.backend.requires_exact_prefill,
+            grid=self.backend.chunk_unit)
+        self._probed[req.rid] = hit
+        return hit.length
+
+    def _charge(self, req: Request) -> tuple[int, int]:
+        """(hot, cold) bytes this request charges the byte gates: its
+        block-rounded total span, net of the FULL blocks its prefix hit
+        covers (those live in the shared store, charged once via
+        `_shared_bytes` no matter how many requests reference them)."""
+        hit = 0
+        if self.block_pool is not None:
+            bt = self.backend.block_tokens
+            hit = (self._probe(req) // bt) * bt
+        return self.backend.slot_kv_bytes(
+            length=max(req.total_len - hit, 1))
+
+    def _shared_bytes(self) -> int:
+        """Bytes the shared prefix store pins in RRAM: only blocks held
+        by a live admission count. Unreferenced cached blocks are
+        reclaimable (the pool LRU-evicts them when `register` runs dry),
+        so charging them would wedge admission behind a cache that
+        nothing ever shrinks."""
+        if self.block_pool is None:
+            return 0
+        return self.block_pool.pinned_blocks * self._prefix_block_bytes
 
     # ------------------------------------------------------------------
     # prefill chunks
@@ -384,6 +464,8 @@ class Engine:
                                        ext=self.backend.fresh_extend())
             ch.req.admit_s = self.clock()
             self.telemetry.request_admitted(ch.req, slot)
+            if ch.start > 0:
+                self._adopt_prefix(ch)
         fl = self._inflight
         assert fl is not None and fl.req is ch.req and fl.pos == ch.start
         req = ch.req
@@ -395,9 +477,19 @@ class Engine:
         if end > vis:
             parts.append(("tokens", max(ch.start, vis), end))
         tok = None
+        want_register = self.block_pool is not None and ch.commit
+        full_ws = None
         for i, (kind, a, b) in enumerate(parts):
             commit = ch.commit and i == len(parts) - 1
             batch, valid = self._chunk_batch(req, kind, a, b, fl.pos)
+            if commit and want_register:
+                # the commit call folds the workspace into the slot and
+                # returns the committed STORE form; registration needs
+                # the complete workspace, so rerun the final chunk
+                # uncommitted first (logits are identical either way)
+                _, full_ws, _ = self.backend.extend_step(
+                    batch, self.pool.state, fl.ext, fl.slot, fl.pos,
+                    valid, False)
             tok, ext, state = self.backend.extend_step(
                 batch, self.pool.state, fl.ext, fl.slot, fl.pos, valid,
                 commit)
@@ -410,7 +502,68 @@ class Engine:
         self.stats["prefill_chunks"] += 1
         if not ch.commit:
             return []
+        if want_register:
+            self._register_prefix(fl, full_ws)
         return self._commit(fl, int(tok))
+
+    def _adopt_prefix(self, ch: PrefillChunk):
+        """Seed the freshly-admitted prefill from its probed prefix-cache
+        hit: acquire the chain (refcounts drop at registration), gather
+        each hit block's workspace rows — and, for exact-prefill
+        (recurrent) backends, the chain-terminal state snapshot — into
+        the extend workspace, and resume prefill AT the hit position."""
+        fl = self._inflight
+        req = ch.req
+        hit = self._probed.get(req.rid)
+        assert hit is not None and hit.length == ch.start, \
+            "admission start desynced from the probed prefix hit"
+        pool = self.block_pool
+        pool.acquire(hit)
+        fl.prefix = hit
+        self.pool.state = self.backend.ensure_prefix(self.pool.state)
+        if self.backend.has_prefix_ws:
+            for node in hit.nodes:
+                fl.ext = self.backend.prefix_load_ws(
+                    self.pool.state, fl.ext, node.bid, node.start)
+        if self.backend.requires_exact_prefill:
+            fl.ext = self.backend.prefix_load_state(
+                self.pool.state, fl.ext, hit.nodes[-1].bid)
+        fl.pos = ch.start
+        req.prefix_hit = ch.start
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += ch.start
+        self.telemetry.decision("prefix_adopt", rid=req.rid,
+                                hit_tokens=ch.start,
+                                blocks=len(hit.nodes))
+
+    def _register_prefix(self, fl: _Inflight, full_ws: dict):
+        """Fold the committed prompt's prefix into the shared store:
+        dedup against existing chains, write ONLY the new (diverging)
+        blocks — each exactly once, the endurance contract — snapshot
+        the recurrent state at the chain terminal when the backend needs
+        exact resume points, and release the adopted hit's refcounts."""
+        req, pool = fl.req, self.block_pool
+        bt = self.backend.block_tokens
+        self.pool.state = self.backend.ensure_prefix(self.pool.state)
+        new, term = pool.register(request_prefix_keys(req),
+                                  max_start=self.max_len - bt)
+        for node in new:
+            if self.backend.has_prefix_ws:
+                self.pool.state = self.backend.prefix_save_ws(
+                    self.pool.state, full_ws, node.bid, node.start)
+            pool.note_write(node.bid)
+        if (self.backend.requires_exact_prefill and term is not None
+                and not term.has_state and term.end == req.prompt_len
+                and term.end % self.backend.chunk_unit == 0):
+            self.pool.state = self.backend.prefix_save_state(
+                self.pool.state, full_ws, term.bid)
+            pool.note_write(term.bid)
+            term.has_state = True
+        if fl.prefix is not None:
+            if fl.prefix.partial and new:
+                pool.stats["cow_copies"] += 1
+            pool.release(fl.prefix)
+            fl.prefix = None
 
     def _commit(self, fl: _Inflight, tok: int
                 ) -> list[tuple[int, int, bool]]:
@@ -447,6 +600,9 @@ class Engine:
     def _finish(self, req: Request):
         req.status = FINISHED
         req.finish_s = self.clock()
+        release = getattr(self.scheduler, "release", None)
+        if callable(release):
+            release(req)                 # retire its paged byte charge
         self.finished.append(req)
         self.telemetry.request_finished(req)
 
@@ -513,25 +669,6 @@ class Engine:
         self.stats["restores"] += 1
         self.telemetry.request_restored(req, rec.lane, slot, rec.pos)
 
-    def _plan_legacy(self):
-        """Whole-prompt StepPlan through a subclass's next_request
-        (PR 1/2 admission semantics; no chunking)."""
-        chunks = []
-        free = self.pool.free_slots
-        active = self.pool.active_slots
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            while free > 0:
-                req = self.scheduler.next_request(active)
-                if req is None:
-                    break
-                chunks.append(PrefillChunk(req, True, 0, req.prompt_len,
-                                           True))
-                free -= 1
-                active += 1
-        return StepPlan(chunks=tuple(chunks),
-                        decode=bool(self._active.any()) or bool(chunks))
-
     def step(self) -> list[tuple[int, int, bool]]:
         """Execute one StepPlan: spill evictions, restores, prefill
         chunks, then one decode token on every active slot. Returns
@@ -545,22 +682,24 @@ class Engine:
         fl = self._inflight
         tel = self.telemetry
         tel.step_begin(self.stats["steps"])
+        if self.block_pool is not None:
+            # fresh pin epoch: this step's probes protect their blocks
+            # from LRU eviction without taking refcounts
+            self.block_pool.begin_epoch()
+            self._probed.clear()
         tel.phase_begin("plan")
-        if self._legacy_sched:
-            plan = self._plan_legacy()
-        else:
-            kwargs = {}
-            if self._plan_preemptive:
-                kwargs = dict(
-                    running=tuple(r for r in self._slot_req
-                                  if r is not None),
-                    free_lanes=self.pool.free_lanes)
-            plan = self.scheduler.plan(
-                active_slots=self.pool.active_slots,
-                decode_slots=int(self._active.sum()),
-                free_slots=self.pool.free_slots,
-                inflight=None if fl is None else (fl.req, fl.pos),
-                chunk_unit=self.backend.chunk_unit, **kwargs)
+        kwargs = {}
+        if self._plan_preemptive:
+            kwargs = dict(
+                running=tuple(r for r in self._slot_req
+                              if r is not None),
+                free_lanes=self.pool.free_lanes)
+        plan = self.scheduler.plan(
+            active_slots=self.pool.active_slots,
+            decode_slots=int(self._active.sum()),
+            free_slots=self.pool.free_slots,
+            inflight=None if fl is None else (fl.req, fl.pos),
+            chunk_unit=self.backend.chunk_unit, **kwargs)
         evictions = tuple(getattr(plan, "evictions", ()))
         offloads = tuple(getattr(plan, "offloads", ()))
         restores = tuple(getattr(plan, "restores", ()))
@@ -620,7 +759,7 @@ class Engine:
         depth: dict[int, int] = {}
         for r in queue:
             depth[r.priority] = depth.get(r.priority, 0) + 1
-        return {
+        g = {
             "slots_total": self.backend.num_slots,
             "slots_active": self.pool.active_slots,
             "slots_free": self.pool.free_slots,
@@ -630,6 +769,19 @@ class Engine:
             "inflight": 0 if self._inflight is None else 1,
             "queue_depth": depth,
         }
+        if self.block_pool is not None:
+            bp = self.block_pool
+            g.update(
+                prefix_blocks_used=bp.used_blocks,
+                prefix_blocks_free=bp.free_blocks,
+                prefix_max_refcount=bp.max_refcount,
+                prefix_hits=self.stats["prefix_hits"],
+                prefix_hit_tokens=self.stats["prefix_hit_tokens"],
+                prefix_cow_copies=bp.stats["cow_copies"],
+                prefix_blocks_registered=bp.stats["blocks_registered"],
+                prefix_blocks_evicted=bp.stats["blocks_evicted"],
+            )
+        return g
 
     @property
     def idle(self) -> bool:

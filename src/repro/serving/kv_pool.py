@@ -57,6 +57,16 @@ class KVPoolState:
     `core.kv_tiers.bump_spill_writes`) — unlike the per-slot cache
     counters these never reset, because RRAM wear survives lane
     recycling.
+
+    ``prefix``: the paged prefix-sharing block store (PR 7) — a tree
+    shaped like the model's extend state with the batch axis
+    reinterpreted as *block ids* and the sequence axis shrunk to
+    ``block_tokens``: full-precision workspace K/V rows per block, plus
+    per-block recurrent-state snapshots for SSM architectures. Lazy like
+    ``spill``: None until the first prefix registration materializes it
+    (an engine with paging off never pays the copy). ``prefix_axes``
+    carries its block-axis index tree (static aux). Which block holds
+    what is host-side state in `serving.block_pool.BlockPool`.
     """
 
     cache: dict
@@ -64,6 +74,8 @@ class KVPoolState:
     spill: dict | None = None
     spill_writes: jax.Array | None = None
     spill_axes: dict | None = None
+    prefix: dict | None = None
+    prefix_axes: dict | None = None
 
     @property
     def num_slots(self) -> int:
@@ -81,16 +93,20 @@ class KVPoolState:
     def tree_flatten(self):
         axes_leaves, axes_def = jax.tree_util.tree_flatten(self.axes)
         sp_leaves, sp_def = jax.tree_util.tree_flatten(self.spill_axes)
-        return ((self.cache, self.spill, self.spill_writes),
-                (tuple(axes_leaves), axes_def, tuple(sp_leaves), sp_def))
+        px_leaves, px_def = jax.tree_util.tree_flatten(self.prefix_axes)
+        return ((self.cache, self.spill, self.spill_writes, self.prefix),
+                (tuple(axes_leaves), axes_def, tuple(sp_leaves), sp_def,
+                 tuple(px_leaves), px_def))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         axes = jax.tree_util.tree_unflatten(aux[1], list(aux[0]))
         spill_axes = jax.tree_util.tree_unflatten(aux[3], list(aux[2]))
-        cache, spill, spill_writes = children
+        prefix_axes = jax.tree_util.tree_unflatten(aux[5], list(aux[4]))
+        cache, spill, spill_writes, prefix = children
         return cls(cache=cache, axes=axes, spill=spill,
-                   spill_writes=spill_writes, spill_axes=spill_axes)
+                   spill_writes=spill_writes, spill_axes=spill_axes,
+                   prefix=prefix, prefix_axes=prefix_axes)
 
 
 def batch_axes(model, cache: dict) -> dict:
@@ -131,7 +147,28 @@ def map_spill_stores(tree, fn):
 _STORE_KEYS = frozenset({"hot", "cold_q", "cold_scale", "writes", "flat"})
 
 
-def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
+def _charged_len(max_len: int, length: int | None,
+                 block_tokens: int | None) -> int:
+    """Sequence positions one occupant is CHARGED for.
+
+    ``length=None`` keeps the historical worst case — every resident
+    pays ``max_len`` regardless of its actual prompt+generation span.
+    With a length, the charge is the request's own span rounded up to
+    whole ``block_tokens`` pages (a paged allocator hands out whole
+    blocks) and clamped to ``max_len``. This is the ACCOUNTING model the
+    admission gate and the capacity bench price — the physical XLA slot
+    buffers stay statically ``max_len``-shaped (simulated hardware, like
+    every energy number in this repo); the paged engine's point is that
+    a real block allocator would only materialize these bytes."""
+    if length is None:
+        return max_len
+    bt = block_tokens or KT.ENDURANCE_BLOCK
+    length = max(1, min(int(length), max_len))
+    return min(-(-length // bt) * bt, max_len)
+
+
+def slot_kv_bytes(model, max_len: int, *, length: int | None = None,
+                  block_tokens: int | None = None) -> tuple[int, int]:
     """(dram_hot_bytes, rram_cold_bytes) of ONE slot's cache.
 
     Hot ring, flat stores and SSM states live in the DRAM domain; the int8
@@ -140,10 +177,17 @@ def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
     `models/counting.kv_elems_per_token` — the same per-token element
     count behind the simulator's `kv_bytes_per_token` cost terms — so
     capacity admission and simulated efficiency share one KV byte math.
+
+    ``length`` (with ``block_tokens``) switches from the worst-case
+    ``max_len`` residency charge to a live block-granular charge for a
+    request of that total span (see `_charged_len`) — what the paged
+    admission gate and the capacity bench use so their math agrees with
+    what paging actually allocates.
     """
     cfg = model.cfg
     cd = jnp.dtype(cfg.compute_dtype).itemsize
     seq_elems = kv_elems_per_token(cfg)
+    L = _charged_len(max_len, length, block_tokens)
     shapes, _ = model.cache_spec(1, max_len)
     state_bytes = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
@@ -155,18 +199,20 @@ def slot_kv_bytes(model, max_len: int) -> tuple[int, int]:
             nbytes *= d
         state_bytes += nbytes
     if cfg.kv_policy == "tiered":
-        W = min(cfg.kv_hot_window, max_len)
+        W = min(cfg.kv_hot_window, L)
         hot = seq_elems * W * cd + state_bytes
-        cold = (seq_elems * max_len * jnp.dtype(jnp.int8).itemsize
-                + kv_scale_elems_per_token(cfg) * max_len
+        cold = (seq_elems * L * jnp.dtype(jnp.int8).itemsize
+                + kv_scale_elems_per_token(cfg) * L
                 * jnp.dtype(jnp.float32).itemsize)
     else:
-        hot = seq_elems * max_len * cd + state_bytes
+        hot = seq_elems * L * cd + state_bytes
         cold = 0
     return int(hot), int(cold)
 
 
-def spill_lane_bytes(model, max_len: int, compressed: bool = False) -> int:
+def spill_lane_bytes(model, max_len: int, compressed: bool = False, *,
+                     length: int | None = None,
+                     block_tokens: int | None = None) -> int:
     """RRAM bytes ONE occupied spill lane pins while a request is parked.
 
     A verbatim lane holds the full slot image (hot + cold halves of
@@ -176,13 +222,18 @@ def spill_lane_bytes(model, max_len: int, compressed: bool = False) -> int:
     (untiered) cache there is no hot ring and compression changes
     nothing. This is the byte the scheduler charges against the RRAM
     budget per parked request, and what `n_lanes = budget // lane_bytes`
-    sizing should use — the capacity lever compressed lanes exist for."""
-    hot, cold = slot_kv_bytes(model, max_len)
+    sizing should use — the capacity lever compressed lanes exist for.
+    ``length``/``block_tokens`` apply the same live block-granular
+    charge as `slot_kv_bytes` (a parked short request's image only
+    covers its own blocks)."""
+    hot, cold = slot_kv_bytes(model, max_len, length=length,
+                              block_tokens=block_tokens)
     cfg = model.cfg
     if not compressed or cfg.kv_policy != "tiered":
         return hot + cold
     cd = jnp.dtype(cfg.compute_dtype).itemsize
-    W = min(cfg.kv_hot_window, max_len)
+    W = min(cfg.kv_hot_window,
+            _charged_len(max_len, length, block_tokens))
     ring = kv_elems_per_token(cfg) * W * cd
     ring_q = kv_elems_per_token(cfg) * W          # int8 payload
     ring_scale = kv_scale_elems_per_token(cfg) * W \

@@ -48,6 +48,8 @@ def request_metrics(req) -> dict:
         "preemptions": req.n_preemptions,
         "idle_offloads": req.n_idle_offloads,
     }
+    if req.prefix_hit > 0:
+        m["prefix_hit_tokens"] = int(req.prefix_hit)
     if req.admit_s > 0.0:
         m["queue_s"] = req.admit_s - req.arrival_s
     if req.first_token_s > 0.0:
@@ -125,6 +127,22 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
     if rl.size:
         m["restore_latency_p50_s"] = float(np.percentile(rl, 50))
         m["restore_latency_p95_s"] = float(np.percentile(rl, 95))
+    # prefix cache: how many admissions skipped prefill work, how many
+    # prompt positions they adopted, and the hit rate over the stream
+    hits = [r for r in finished if r.prefix_hit > 0]
+    m["prefix_hits"] = len(hits)
+    m["prefix_hit_tokens"] = int(sum(r.prefix_hit for r in hits))
+    m["prefix_hit_rate"] = len(hits) / len(finished)
+    if hits:
+        hit_ttft = np.array([r.first_token_s - r.arrival_s for r in hits
+                             if r.first_token_s > 0.0])
+        if hit_ttft.size:
+            m["prefix_hit_mean_ttft_s"] = float(hit_ttft.mean())
+        cold_ttft = np.array(
+            [r.first_token_s - r.arrival_s for r in finished
+             if r.prefix_hit == 0 and r.first_token_s > 0.0])
+        if cold_ttft.size:
+            m["cold_mean_ttft_s"] = float(cold_ttft.mean())
     return m
 
 
@@ -162,7 +180,8 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
             continue
         image = req.has_image and cfg.frontend is not None
         terms += request_terms(cfg, platform, int(req.tokens.shape[0]),
-                               req.n_generated, image, layers)
+                               req.n_generated, image, layers,
+                               cached_prefix=int(req.prefix_hit))
         tokens += req.n_generated
     agg = sum_terms(terms)
     energy, sim_s = agg["sim_energy_j"], agg["sim_total_s"]

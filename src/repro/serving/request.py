@@ -59,6 +59,10 @@ class Request:
     restore_times: list = dataclasses.field(default_factory=list)
     evict_ctx: list = dataclasses.field(default_factory=list)
     n_idle_offloads: int = 0
+    # prompt positions adopted from the shared prefix cache at admission
+    # (0 = cold prefill); the telemetry ledger and the simulated-
+    # efficiency model both price only the prompt tail beyond this
+    prefix_hit: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -108,15 +112,23 @@ class Request:
 def make_synthetic_requests(cfg, n: int, prompt_len: int, gen_len: int,
                             seed: int = 0, image_every: int = 0,
                             jitter: int = 0,
-                            priority_every: int = 0) -> list[Request]:
+                            priority_every: int = 0,
+                            shared_prefix: int = 0) -> list[Request]:
     """A reproducible request stream for benchmarks/examples. Every
     ``image_every``-th request is a VQA request (visual patches + a text
     tail) when the config has a vision frontend; ``jitter`` varies prompt
     lengths +-jitter tokens to exercise bucketing; every
     ``priority_every``-th request is priority-1 interactive traffic
     (``priority_every=1`` marks all), so a saturated engine exercises
-    preemption."""
+    preemption. ``shared_prefix`` > 0 makes every request open with the
+    SAME ``shared_prefix`` leading prompt positions (one fixed system-
+    prompt token run, and for VQA requests one fixed image) — the
+    shared-system-prompt/shared-image stream the prefix cache is built
+    for; tails stay per-request random so divergence is exercised."""
     rng = np.random.default_rng(seed)
+    shared_toks = rng.integers(
+        0, cfg.vocab_size, max(shared_prefix, 0)).astype(np.int32)
+    shared_patches = None
     out = []
     for i in range(n):
         plen = prompt_len
@@ -127,10 +139,20 @@ def make_synthetic_requests(cfg, n: int, prompt_len: int, gen_len: int,
         if image_every and cfg.frontend is not None \
                 and i % image_every == 0:
             tv = cfg.frontend.num_tokens
-            patches = rng.standard_normal(
-                (tv, cfg.frontend.frontend_dim)).astype(np.float32)
+            if shared_prefix:
+                if shared_patches is None:
+                    shared_patches = rng.standard_normal(
+                        (tv, cfg.frontend.frontend_dim)).astype(
+                            np.float32)
+                patches = shared_patches
+            else:
+                patches = rng.standard_normal(
+                    (tv, cfg.frontend.frontend_dim)).astype(np.float32)
             plen = max(1, plen - tv)
         toks = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        if shared_prefix:
+            head = shared_toks[:min(shared_prefix, plen - 1)]
+            toks[:head.shape[0]] = head
         prio = (1 if priority_every
                 and i % priority_every == priority_every - 1 else 0)
         out.append(Request(rid=i, tokens=toks, max_new_tokens=gen_len,

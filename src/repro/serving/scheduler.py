@@ -47,7 +47,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import warnings
 
 from repro.serving.request import Request
 from repro.simulator.hardware import CHIME, Platform
@@ -113,6 +112,27 @@ class CapacityBudget:
             if overflow > 0 and overflow + spilled > spill_lanes:
                 return "spill_lanes"
         if n * cold + spilled_bytes > self.rram_bytes:
+            return "rram_budget"
+        return None
+
+    def deny_reason_bytes(self, hot_bytes: float, cold_bytes: float, *,
+                          hot_unit: int = 0, oversubscribe: float = 1.0,
+                          spilled: int = 0, spill_lanes: int = 0,
+                          spilled_bytes: float = 0.0) -> str | None:
+        """`deny_reason` for LIVE byte totals instead of uniform per-slot
+        worst cases: the paged pool charges each resident its block-
+        rounded prompt+generation footprint, so the gate compares the
+        summed hot/cold bytes (candidate included) directly against the
+        domain budgets. ``hot_unit`` (one full slot's hot bytes) converts
+        DRAM overflow into spill-lane slots for the oversubscribe gate."""
+        if hot_bytes > self.dram_bytes * oversubscribe:
+            return "dram_budget"
+        if hot_unit > 0 and oversubscribe > 1.0:
+            over = hot_bytes - self.dram_bytes
+            overflow = int(-(-over // hot_unit)) if over > 0 else 0
+            if overflow > 0 and overflow + spilled > spill_lanes:
+                return "spill_lanes"
+        if cold_bytes + spilled_bytes > self.rram_bytes:
             return "rram_budget"
         return None
 
@@ -182,6 +202,21 @@ class FCFSScheduler:
     (see the module docstring). ``lane_bytes`` (None = engine fills it
     from the backend; falls back to one full slot image) is the RRAM
     bytes one parked spill image charges against the budget.
+
+    ``charge_fn`` (None = per-slot worst case) switches the byte gates
+    to PAGED accounting: it maps a request to its (hot, cold) byte
+    charge — the engine supplies block-rounded prompt+generation bytes
+    net of the request's prefix-cache hit — and the scheduler sums live
+    charges across residents (admit adds, park subtracts, restore
+    re-adds, `release` retires) instead of multiplying a uniform slot
+    worst case. ``prefix_probe`` (None = no prefix cache) is called on
+    the queue head right before its admission check and returns the
+    cached-prefix hit length; the head's first chunk then STARTS at that
+    position, so only the tail charges the step token budget.
+    ``shared_bytes_fn`` reports the prefix store's *pinned* bytes
+    (blocks referenced by a live admission — unreferenced cached blocks
+    are reclaimable and must not gate admission), charged against the
+    RRAM budget alongside parked spill images.
     """
 
     def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
@@ -191,7 +226,9 @@ class FCFSScheduler:
                  oversubscribe: float | None = None,
                  spill_lanes: int | None = None,
                  idle_offload_steps: int | None = None,
-                 lane_bytes: int | None = None):
+                 lane_bytes: int | None = None,
+                 charge_fn=None, prefix_probe=None,
+                 shared_bytes_fn=None):
         if chunk_tokens is not None and chunk_tokens < 1:
             # a cap < 1 would make plan() emit degenerate chunks forever
             raise ValueError(f"chunk_tokens must be >= 1 or None, got "
@@ -216,6 +253,15 @@ class FCFSScheduler:
         self.spill_lanes = spill_lanes
         self.idle_offload_steps = idle_offload_steps
         self.lane_bytes = lane_bytes
+        self.charge_fn = charge_fn
+        self.prefix_probe = prefix_probe
+        self.shared_bytes_fn = shared_bytes_fn
+        # paged accounting: admission-time (hot, cold) charge per resident
+        # rid; parked requests keep their entry (sums drop, re-add on
+        # restore) so the round trip is charge-neutral
+        self._charges: dict[int, tuple[int, int]] = {}
+        self._charged_hot = 0
+        self._charged_cold = 0
         self._queue: collections.deque[Request] = collections.deque()
         self._spilled: list[Request] = []
         self.admitted = 0
@@ -256,22 +302,92 @@ class FCFSScheduler:
     def _slot_bytes(self) -> int:
         return self.hot_bytes_per_slot + self.cold_bytes_per_slot
 
-    def _admits(self, n_active: int, spilled_after: int) -> bool:
+    # ---- paged (live-byte) charge bookkeeping ------------------------
+    def _charge_of(self, req: Request | None) -> tuple[int, int]:
+        """(hot, cold) bytes ``req`` charges: the stored admission-time
+        value, a fresh ``charge_fn`` quote, or the slot worst case when
+        no candidate is known."""
+        if req is not None and req.rid in self._charges:
+            return self._charges[req.rid]
+        if req is not None and self.charge_fn is not None:
+            return self.charge_fn(req)
+        return (self.hot_bytes_per_slot, self.cold_bytes_per_slot)
+
+    def _charge_admit(self, req: Request):
+        if self.charge_fn is None:
+            return
+        h, c = self._charge_of(req)
+        self._charges[req.rid] = (h, c)
+        self._charged_hot += h
+        self._charged_cold += c
+
+    def _charge_drop(self, req: Request):
+        """Park: the resident's bytes leave the live sums (entry kept
+        for the symmetric re-add on restore)."""
+        if self.charge_fn is None or req.rid not in self._charges:
+            return
+        h, c = self._charges[req.rid]
+        self._charged_hot -= h
+        self._charged_cold -= c
+
+    def _charge_readd(self, req: Request):
+        if self.charge_fn is None or req.rid not in self._charges:
+            return
+        h, c = self._charges[req.rid]
+        self._charged_hot += h
+        self._charged_cold += c
+
+    def release(self, req: Request):
+        """Retire a finished request's byte charge (engine calls this
+        when the request leaves its slot for good). No-op in slot mode
+        and for rids never charged."""
+        if req.rid in self._charges:
+            h, c = self._charges.pop(req.rid)
+            self._charged_hot -= h
+            self._charged_cold -= c
+
+    def _admits(self, n_active: int, spilled_after: int,
+                cand: Request | None = None,
+                parked: Request | None = None) -> bool:
         """Byte/lane gate for one more resident, with ``spilled_after``
         requests (still) parked in the spill store."""
-        return self._deny_reason(n_active, spilled_after) is None
+        return self._deny_reason(n_active, spilled_after, cand=cand,
+                                 parked=parked) is None
 
-    def _deny_reason(self, n_active: int,
-                     spilled_after: int) -> str | None:
-        """`_admits` with the blocking gate named (None = admissible)."""
+    def _deny_reason(self, n_active: int, spilled_after: int,
+                     cand: Request | None = None,
+                     parked: Request | None = None) -> str | None:
+        """`_admits` with the blocking gate named (None = admissible).
+
+        Slot mode charges ``n_active + 1`` uniform worst cases. Charge
+        mode (``charge_fn`` set) sums the live per-resident charges,
+        minus ``parked`` (the victim this step would spill), plus the
+        actual ``cand`` charge (worst case when the candidate is not
+        known, e.g. `can_admit` probes)."""
         lane_b = (self._slot_bytes if self.lane_bytes is None
                   else self.lane_bytes)
-        return self.budget.deny_reason(
-            n_active, self.hot_bytes_per_slot, self.cold_bytes_per_slot,
+        shared = (self.shared_bytes_fn() if self.shared_bytes_fn
+                  is not None else 0)
+        if self.charge_fn is None:
+            return self.budget.deny_reason(
+                n_active, self.hot_bytes_per_slot,
+                self.cold_bytes_per_slot,
+                oversubscribe=self.oversubscribe or 1.0,
+                spilled=spilled_after,
+                spill_lanes=self.spill_lanes or 0,
+                spilled_bytes=spilled_after * lane_b + shared)
+        hot, cold = self._charged_hot, self._charged_cold
+        if parked is not None:
+            ph, pc = self._charge_of(parked)
+            hot, cold = hot - ph, cold - pc
+        ch, cc = self._charge_of(cand)
+        return self.budget.deny_reason_bytes(
+            hot + ch, cold + cc,
+            hot_unit=self.hot_bytes_per_slot,
             oversubscribe=self.oversubscribe or 1.0,
             spilled=spilled_after,
             spill_lanes=self.spill_lanes or 0,
-            spilled_bytes=spilled_after * lane_b)
+            spilled_bytes=spilled_after * lane_b + shared)
 
     @property
     def max_concurrent(self) -> int:
@@ -309,17 +425,17 @@ class FCFSScheduler:
         restores: list[Request] = []
         victims = list(running)
 
-        def waiter_priority():
-            """Priority of the best waiter that could take a freed slot
-            this step: the spilled head, or the queue head when no
-            prompt is in flight. None = nobody is waiting."""
-            prio = None
-            if self._spilled:
-                prio = self._spilled[0].priority
+        def best_waiter():
+            """The best waiter that could take a freed slot this step:
+            the spilled head, or the queue head when no prompt is in
+            flight — whichever has the higher priority (the spilled head
+            wins ties: it restores first). None = nobody is waiting."""
+            cand = self._spilled[0] if self._spilled else None
             if self._queue and inflight is None:
-                qp = self._queue[0].priority
-                prio = qp if prio is None else max(prio, qp)
-            return prio
+                head = self._queue[0]
+                if cand is None or head.priority > cand.priority:
+                    cand = head
+            return cand
 
         def park(victim, into):
             """Commit one victim to a spill lane: shared bookkeeping of
@@ -329,6 +445,7 @@ class FCFSScheduler:
             into.append(victim)
             victims.remove(victim)
             self._spill_insert(victim)
+            self._charge_drop(victim)
             free_lanes -= 1
             free_slots += 1
             active_slots -= 1
@@ -346,16 +463,17 @@ class FCFSScheduler:
         waiter_blocked = free_slots == 0 \
             or not self._admits(active_slots, self.spilled)
         if waiter_blocked and free_lanes > 0 and victims:
-            waiter_prio = waiter_priority()
-            if waiter_prio is not None:
+            waiter = best_waiter()
+            if waiter is not None:
                 victim = min(victims, key=lambda r: (r.priority,
                                                      -r.admit_seq))
-                if victim.priority < waiter_prio \
+                if victim.priority < waiter.priority \
                         and self._admits(active_slots - 1,
-                                         self.spilled + 1):
+                                         self.spilled + 1,
+                                         cand=waiter, parked=victim):
                     park(victim, evictions)
                     self._note("evict_priority", victim,
-                               waiter_priority=waiter_prio)
+                               waiter_priority=waiter.priority)
 
         # ---- phase 1b: proactive idle cold-KV offload --------------------
         # RRAM as a capacity tier: when the waiter STILL cannot get in —
@@ -372,17 +490,22 @@ class FCFSScheduler:
             blocked = free_slots == 0 \
                 or not self._admits(active_slots, self.spilled)
             if blocked and free_lanes > 0 and victims:
-                waiter_prio = waiter_priority()
-                if waiter_prio is not None:
+                waiter = best_waiter()
+                if waiter is not None:
+                    waiter_prio = waiter.priority
                     eligible = [
                         r for r in victims
                         if r.resident_steps >= self.idle_offload_steps
                         and r.priority <= waiter_prio]
-                    if eligible and self._admits(active_slots - 1,
-                                                 self.spilled + 1):
-                        victim = min(eligible,
-                                     key=lambda r: (r.priority,
-                                                    -r.admit_seq))
+                    victim = (min(eligible,
+                                  key=lambda r: (r.priority,
+                                                 -r.admit_seq))
+                              if eligible else None)
+                    if victim is not None \
+                            and self._admits(active_slots - 1,
+                                             self.spilled + 1,
+                                             cand=waiter,
+                                             parked=victim):
                         # the parking must actually BENEFIT a waiter:
                         # either the queue head takes the freed slot
                         # (phase 3), or the spilled head restores into
@@ -416,15 +539,18 @@ class FCFSScheduler:
                 break                     # never round-trip within a step
             if self._queue and inflight is None \
                     and self._queue[0].priority > cand.priority \
-                    and self._admits(active_slots, self.spilled):
+                    and self._admits(active_slots, self.spilled,
+                                     cand=self._queue[0]):
                 self._note("restore_yield", cand,
                            to_rid=self._queue[0].rid)
                 break
-            reason = self._deny_reason(active_slots, self.spilled - 1)
+            reason = self._deny_reason(active_slots, self.spilled - 1,
+                                       cand=cand)
             if reason is not None:
                 self._note("deny_restore_" + reason, cand)
                 break
             restores.append(self._spilled.pop(0))
+            self._charge_readd(restores[-1])
             self._note("restore", restores[-1])
             free_slots -= 1
             active_slots += 1
@@ -444,9 +570,17 @@ class FCFSScheduler:
                 if free_slots <= 0:
                     self._note("deny_no_free_slot", self._queue[0])
                     break
-                reason = self._deny_reason(active_slots, self.spilled)
+                head = self._queue[0]
+                # probe the prefix cache BEFORE the byte gate: the hit
+                # shrinks the head's charge (charge_fn reads the same
+                # probe result), and the admitted prefill starts at the
+                # hit position — only the tail charges the token budget
+                hit = (int(self.prefix_probe(head))
+                       if self.prefix_probe is not None else 0)
+                reason = self._deny_reason(active_slots, self.spilled,
+                                           cand=head)
                 if reason is not None:
-                    self._note("deny_" + reason, self._queue[0])
+                    self._note("deny_" + reason, head)
                     break
                 req = self._queue.popleft()
                 admit = True
@@ -455,8 +589,12 @@ class FCFSScheduler:
                 self.admitted += 1
                 req.admit_seq = self._seq
                 self._seq += 1
-                self._note("admit", req)
-                cur = (req, 0)
+                self._charge_admit(req)
+                if hit:
+                    self._note("admit", req, prefix_hit=hit)
+                else:
+                    self._note("admit", req)
+                cur = (req, hit)
             req, p = cur
             remaining = req.prompt_len - p
             c = int(min(remaining, budget, cap))
@@ -486,21 +624,3 @@ class FCFSScheduler:
                 self._spilled.insert(i, req)
                 return
         self._spilled.append(req)
-
-    # ---- one-release deprecation shim (PR 3) -------------------------
-    def next_request(self, n_active: int) -> Request | None:
-        """DEPRECATED: pop the queue head iff both domain budgets admit
-        one more resident request. Superseded by `plan`, which chunks the
-        head prompt under the step token budget instead of handing it out
-        whole."""
-        warnings.warn(
-            "FCFSScheduler.next_request is deprecated; the engine now "
-            "drives StepPlans from FCFSScheduler.plan()",
-            DeprecationWarning, stacklevel=2)
-        if not self.can_admit(n_active):
-            return None
-        self.admitted += 1
-        req = self._queue.popleft()
-        req.admit_seq = self._seq
-        self._seq += 1
-        return req

@@ -47,8 +47,9 @@ import time
 import numpy as np
 
 from repro.simulator.chime_sim import (cost_layers, decode_token_terms,
-                                       prefill_terms, spill_terms,
-                                       sum_terms, visual_tokens)
+                                       prefill_terms, prefix_adopt_terms,
+                                       spill_terms, sum_terms,
+                                       visual_tokens)
 from repro.simulator.chime_sim import closing_terms as _closing_terms
 from repro.simulator.hardware import CHIME
 
@@ -79,6 +80,8 @@ REASON_CODES = {
     "restore": "spilled request restored into a free slot",
     "restore_yield": "restore yielded its slot to a higher-priority "
                      "queue head",
+    "prefix_adopt": "admitted request seeded its prefill from cached "
+                    "prefix blocks (skipped recompute of the hit span)",
 }
 
 
@@ -128,6 +131,7 @@ class TierLedger:
                      "dram_hot_ring_bytes": 0.0,
                      "rram_cold_read_bytes": 0.0,
                      "rram_spill_bytes": 0.0,
+                     "prefix_adopt_bytes": 0.0,
                      "dram_stream_bytes": 0.0,
                      "rram_stream_bytes": 0.0,
                      "kv_append_bytes": 0.0,
@@ -153,21 +157,31 @@ class TierLedger:
                 row["rram_stream_bytes"] += tm.bytes_moved
             elif tm.domain == "spill":
                 row["rram_spill_bytes"] += tm.bytes_moved
+            elif tm.domain == "prefix":
+                row["prefix_adopt_bytes"] += tm.bytes_moved
             elif tm.domain == "kv_write":
                 row["kv_append_bytes"] += tm.bytes_moved
             elif tm.domain == "ucie":
                 row["ucie_bytes"] += tm.bytes_moved
 
     # -- priced events -------------------------------------------------
-    def prefill(self, rid: int, text_tokens: int, image: bool):
+    def prefill(self, rid: int, text_tokens: int, image: bool,
+                cached: int = 0):
         """Request committed its prompt: price the prefill and remember
         the prompt length that anchors its decode contexts — computed
         with the simulator's own `visual_tokens` formula so the ledger
-        and `simulated_efficiency` can never disagree on ctx."""
+        and `simulated_efficiency` can never disagree on ctx. ``cached``
+        prompt positions came from the shared prefix store: the prefill
+        prices only the tail (same `cached_prefix` path as
+        `request_terms`) plus the block-adoption transfer."""
         prompt = (visual_tokens(self.cfg) if image else 0) + text_tokens
         self._req_prompt[rid] = prompt
-        self._record(rid, prefill_terms(self.cfg, self.platform,
-                                        text_tokens, image, self._layers))
+        terms = prefill_terms(self.cfg, self.platform, text_tokens,
+                              image, self._layers, cached_prefix=cached)
+        if cached > 0:
+            terms = terms + prefix_adopt_terms(self.cfg, self.platform,
+                                               cached)
+        self._record(rid, terms)
 
     def decode(self, rid: int, n_generated: int):
         """One emitted token: n_generated is the post-emit count, so the
@@ -213,8 +227,9 @@ class TierLedger:
         out["tokens"] = int(sum(r["tokens"] for r in rows))
         out["requests_closed"] = self.requests_closed
         for k in ("dram_hot_ring_bytes", "rram_cold_read_bytes",
-                  "rram_spill_bytes", "dram_stream_bytes",
-                  "rram_stream_bytes", "kv_append_bytes", "ucie_bytes"):
+                  "rram_spill_bytes", "prefix_adopt_bytes",
+                  "dram_stream_bytes", "rram_stream_bytes",
+                  "kv_append_bytes", "ucie_bytes"):
             out[k] = math.fsum(r[k] for r in rows)
         return out
 
@@ -402,7 +417,8 @@ class Telemetry:
         self._instant(PID_REQUESTS, req.rid, "first-token", t)
         if self.ledger is not None:
             image = req.has_image and self.cfg.frontend is not None
-            self.ledger.prefill(req.rid, int(req.tokens.shape[0]), image)
+            self.ledger.prefill(req.rid, int(req.tokens.shape[0]), image,
+                                cached=int(getattr(req, "prefix_hit", 0)))
         self.token(req)
 
     def token(self, req):
@@ -610,9 +626,9 @@ class Telemetry:
                 "Simulated bytes moved per memory tier.",
                 [({"tier": k[:-len("_bytes")]}, repr(tot[k]))
                  for k in ("dram_hot_ring_bytes", "rram_cold_read_bytes",
-                           "rram_spill_bytes", "dram_stream_bytes",
-                           "rram_stream_bytes", "kv_append_bytes",
-                           "ucie_bytes")])
+                           "rram_spill_bytes", "prefix_adopt_bytes",
+                           "dram_stream_bytes", "rram_stream_bytes",
+                           "kv_append_bytes", "ucie_bytes")])
             fam("repro_serving_sim_energy_joules_total", "counter",
                 "Simulated energy by cost-term domain.",
                 [({"domain": d}, repr(e))
@@ -627,7 +643,23 @@ class Telemetry:
                            ("spilled_requests",
                             "Requests parked in the spill store."),
                            ("inflight",
-                            "Prompts currently prefilling (0 or 1).")):
+                            "Prompts currently prefilling (0 or 1)."),
+                           ("prefix_blocks_used",
+                            "Live prefix-cache blocks."),
+                           ("prefix_blocks_free",
+                            "Free prefix-cache blocks."),
+                           ("prefix_max_refcount",
+                            "Max concurrent sharers on one block."),
+                           ("prefix_hits",
+                            "Admissions that adopted a cached prefix."),
+                           ("prefix_hit_tokens",
+                            "Prompt positions skipped via prefix hits."),
+                           ("prefix_cow_copies",
+                            "Copy-on-write block copies."),
+                           ("prefix_blocks_registered",
+                            "Blocks ever registered (physical writes)."),
+                           ("prefix_blocks_evicted",
+                            "Blocks reclaimed from the prefix store.")):
             if key in g:
                 fam(f"repro_serving_{key}", "gauge", help_,
                     [(None, g[key])])

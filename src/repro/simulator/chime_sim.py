@@ -125,7 +125,7 @@ class CostTerm(typing.NamedTuple):
 
     name: str
     domain: str        # dram|rram|compute|ucie|kv_write|overhead|encoder
-    #                  # |spill|static
+    #                  # |spill|prefix|static
     time_s: float
     energy_j: float
     bytes_moved: float
@@ -198,9 +198,18 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
 
 def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                   image: bool,
-                  layers: list[dict] | None = None) -> list[CostTerm]:
+                  layers: list[dict] | None = None,
+                  cached_prefix: int = 0) -> list[CostTerm]:
     """The cost terms of one whole-prompt prefill (weights read once per
-    layer and reused across prompt tokens; compute scales with prompt)."""
+    layer and reused across prompt tokens; compute scales with prompt).
+
+    ``cached_prefix`` > 0 prices a prefix-cache hit: only the
+    ``prompt - cached_prefix`` tail tokens run through the projection /
+    mixer kernels (the hit positions' KV is adopted from the shared
+    block store — priced separately by `prefix_adopt_terms`), while the
+    attention stream still reads the FULL prompt's KV for the tail's
+    attention. ``cached_prefix=0`` is term-for-term identical to the
+    historical whole-prompt pricing."""
     if layers is None:
         layers = _layer_kernels(cfg)
     n_layers = len(layers)
@@ -209,20 +218,24 @@ def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
     D = cfg.d_model
     vis = visual_tokens(cfg) if image else 0
     prompt = vis + text_tokens
+    cached = min(max(int(cached_prefix), 0), prompt)
+    tail = prompt - cached
     kv_tok = kv_bytes_per_token(cfg)
     terms: list[CostTerm] = []
     for lay in layers:
         for name, dom_name, flops, bytes_r in lay["kernels"]:
             dom = dram if dom_name == "dram" else rram
             if name == "FUSED_ATTN_STREAM":
-                flops = 2.0 * prompt * prompt * D
+                flops = 2.0 * tail * prompt * D
                 bytes_r = prompt * kv_tok / max(n_layers, 1)
             else:
-                flops = flops * prompt
+                flops = flops * tail
             terms += _kernel_terms(name, dom_name, dom, flops, bytes_r,
                                    platform.compute_pj_flop)
-    # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP
-    if image and cfg.frontend is not None:
+    # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP.
+    # A cache hit covering the whole visual span skips the encoder —
+    # the shared image was encoded when its blocks were registered.
+    if image and cfg.frontend is not None and cached < vis:
         enc_flops = 20e9
         terms.append(CostTerm(
             "VISION_ENCODER", "encoder", enc_flops / dram.peak_flops,
@@ -265,6 +278,32 @@ def spill_terms(cfg: ModelConfig, platform: Platform, ctx: int,
     return terms
 
 
+def prefix_adopt_terms(cfg: ModelConfig, platform: Platform,
+                       tokens: int) -> list[CostTerm]:
+    """The cost terms of gathering ``tokens`` cached prefix positions
+    from the shared RRAM-resident block store into a fresh prefill
+    workspace on admission — the traffic a prefix-cache hit pays INSTEAD
+    of recomputing those positions. Priced like a spill restore (RRAM
+    read + UCIe transfer, bounded by the slower link) but under its own
+    ``prefix`` domain so skipped-prefill traffic stays separable in
+    every energy split."""
+    kv_bytes = kv_bytes_per_token(cfg) * max(int(tokens), 0)
+    rram = platform.domains.get("rram", platform.domains["dram"])
+    bw = rram.internal_bw
+    ucie_e = 0.0
+    if platform.cross_domain_bw:
+        bw = min(bw, platform.cross_domain_bw)
+        ucie_e = kv_bytes * 8 * platform.cross_domain_pj_bit * 1e-12
+    terms = [CostTerm("PREFIX_ADOPT", "prefix",
+                      kv_bytes / bw if bw else 0.0,
+                      kv_bytes * 8 * rram.read_energy_pj_bit * 1e-12,
+                      float(kv_bytes))]
+    if ucie_e:
+        terms.append(CostTerm("PREFIX_ADOPT/ucie", "prefix", 0.0,
+                              ucie_e, 0.0))
+    return terms
+
+
 def closing_terms(platform: Platform,
                   terms: list[CostTerm]) -> list[CostTerm]:
     """Static/uncore power charges that close out a priced term stream.
@@ -272,10 +311,12 @@ def closing_terms(platform: Platform,
     Monolithic platforms (``power_w`` set) charge board power over the
     whole busy wall; the chiplet platform duty-cycles NMP static power
     over each domain's busy time plus the always-on uncore (paper Fig. 7:
-    ~1 W). Spill-domain terms are excluded — spill traffic happens off
-    the critical decode path and `simulated_efficiency` has always priced
-    it additively, outside the per-request closing charge."""
-    total = math.fsum(t.time_s for t in terms if t.domain != "spill")
+    ~1 W). Spill- and prefix-domain terms are excluded — that traffic
+    happens off the critical decode path and `simulated_efficiency` has
+    always priced it additively, outside the per-request closing
+    charge."""
+    total = math.fsum(t.time_s for t in terms
+                      if t.domain not in ("spill", "prefix"))
     if platform.power_w is not None:
         return [CostTerm("BOARD_STATIC", "static", 0.0,
                          platform.power_w * total, 0.0)]
@@ -295,13 +336,19 @@ def closing_terms(platform: Platform,
 
 def request_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                   output_tokens: int, image: bool,
-                  layers: list[dict] | None = None) -> list[CostTerm]:
-    """Every cost term of one served request: prefill, each decode step
-    at its growing context, and the closing static charge — the unit
-    `simulated_efficiency` and the telemetry ledger both sum."""
+                  layers: list[dict] | None = None,
+                  cached_prefix: int = 0) -> list[CostTerm]:
+    """Every cost term of one served request: prefill (tail-only when
+    ``cached_prefix`` positions came from the shared prefix store, plus
+    the adoption transfer), each decode step at its growing context, and
+    the closing static charge — the unit `simulated_efficiency` and the
+    telemetry ledger both sum."""
     if layers is None:
         layers = _layer_kernels(cfg)
-    terms = prefill_terms(cfg, platform, text_tokens, image, layers)
+    terms = prefill_terms(cfg, platform, text_tokens, image, layers,
+                          cached_prefix=cached_prefix)
+    if cached_prefix > 0:
+        terms += prefix_adopt_terms(cfg, platform, cached_prefix)
     prompt = (visual_tokens(cfg) if image else 0) + text_tokens
     for step in range(output_tokens):
         terms += decode_token_terms(cfg, platform, prompt + step, layers)

@@ -255,19 +255,13 @@ def test_one_token_request_finishes_at_admission_with_event():
 # ---------------------------------------------------------------------------
 # backend API + compat shim
 # ---------------------------------------------------------------------------
-def test_engine_compat_shim_warns_and_matches_backend_path():
-    """One-release shim: Engine(model, params, num_slots=, max_len=)
-    still serves, warns DeprecationWarning, and produces the exact same
-    tokens as the explicit LocalBackend construction."""
+def test_engine_model_params_shim_removed():
+    """The PR 3 Engine(model, params, num_slots=, max_len=) compat shim
+    expired: positional model/params construction now fails loudly
+    instead of silently building a backend."""
     cfg, model, params = _model()
-    specs = [(8, 5), (13, 5)]
-    with pytest.warns(DeprecationWarning):
-        old_eng = Engine(model, params, num_slots=2, max_len=24)
-    old = old_eng.run(_requests(cfg, specs, seed=11), max_steps=100)
-    new = _engine(model, params, 2, 24).run(
-        _requests(cfg, specs, seed=11), max_steps=100)
-    assert ([r.generated for r in sorted(old, key=lambda r: r.rid)]
-            == [r.generated for r in sorted(new, key=lambda r: r.rid)])
+    with pytest.raises(TypeError):
+        Engine(model, params, num_slots=2, max_len=24)
 
 
 def test_backend_rejects_encoder_and_zero_slots():

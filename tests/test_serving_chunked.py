@@ -320,60 +320,29 @@ def test_run_max_steps_raises_at_exactly_max_steps():
         eng2.run(_requests(cfg, [(8, 3)]), max_steps=1)
 
 
-def test_backend_prefill_insert_shims_warn_and_work():
+def test_backend_prefill_insert_shims_removed():
+    """The PR 3 backend.prefill/insert deprecation shims expired: the
+    whole-prompt surface is gone (extend_step is the only prefill path)
+    while the pool-internal _insert_state recycling path still works."""
     cfg, model, params = _model()
     backend = LocalBackend(model, params, 2, 24)
+    assert not hasattr(backend, "prefill")
+    assert not hasattr(backend, "insert")
+    # pool-internal recycling never went through the deprecated surface
     pool = backend.make_pool()
-    batch = {"tokens": np.arange(8, dtype=np.int32)[None]}
-    with pytest.warns(DeprecationWarning, match="prefill is deprecated"):
-        tok, cache = backend.prefill(batch, 8)
-    with pytest.warns(DeprecationWarning, match="insert is deprecated"):
-        state = backend.insert(pool.state, cache, 1)
-    assert int(tok) >= 0 and state.num_slots == 2
-    # pool-internal recycling does NOT go through the deprecated surface
     import warnings as _w
     with _w.catch_warnings():
         _w.simplefilter("error", DeprecationWarning)
-        pool.insert(cache, 0)
         pool.reset(0)
 
 
-def test_legacy_scheduler_subclass_drives_whole_prompt_adapter():
-    """A PR 1/2-era scheduler subclass overriding next_request (custom
-    admission policy) still steers admission: the engine detects it,
-    warns, and drives it through a whole-prompt adapter instead of
-    silently planning with the base class."""
-    admitted_order = []
-
-    class LIFOScheduler(FCFSScheduler):
-        def next_request(self, n_active):
-            if not self._queue or not self.budget.admits(
-                    n_active, self.hot_bytes_per_slot,
-                    self.cold_bytes_per_slot):
-                return None
-            req = self._queue.pop()          # LIFO, not FCFS
-            admitted_order.append(req.rid)
-            return req
-
-    cfg, model, params = _model()
-    backend = LocalBackend(model, params, 1, 24)
-    hot_b, cold_b = backend.slot_kv_bytes()
-    sched = LIFOScheduler(
-        CapacityBudget(dram_bytes=1e12, rram_bytes=1e12), hot_b, cold_b)
-    with pytest.warns(DeprecationWarning, match="whole-prompt admission"):
-        eng = Engine(backend, scheduler=sched)
-    reqs = _requests(cfg, [(8, 2), (8, 2), (8, 2)])
-    done = eng.run(reqs, max_steps=100)
-    assert len(done) == 3
-    assert admitted_order == [2, 1, 0]       # the override really drove
-
-
-def test_scheduler_next_request_shim_warns():
-    cfg = get_config("granite-3-2b", reduced=True)
+def test_scheduler_next_request_shim_removed():
+    """The PR 3 FCFSScheduler.next_request shim expired: plan() is the
+    only admission surface, and a subclass override of the removed name
+    no longer steers the engine (it plans with the base class)."""
     sched = _sched()
-    sched.submit(_requests(cfg, [(8, 2)])[0])
-    with pytest.warns(DeprecationWarning, match="next_request"):
-        assert sched.next_request(0).rid == 0
+    assert not hasattr(FCFSScheduler, "next_request")
+    assert not hasattr(sched, "next_request")
 
 
 def test_metrics_report_ttft_and_tbt_percentiles():

@@ -1,0 +1,500 @@
+"""Paged prefix-sharing KV pool: exact-parity, copy-on-write, endurance
+and refcount-invariant tests for `serving.block_pool` + the engine's
+paged admission path.
+
+The contract under test (PR 7):
+
+* a paged engine (`Engine(paged=True)`) is EXACTLY token-equal to the
+  slot-pool engine over shared-prefix streams — across GQA / MLA / SSM /
+  hybrid mixers, local and sharded backends, whole-prompt and chunked
+  prefill, and under priority preemption through the RRAM spill lanes;
+* a request diverging strictly INSIDE a shared block still hits the
+  common prefix and registers its tail to a FRESH block (copy-on-write
+  — the shared block is never rewritten);
+* a shared block is physically written exactly once no matter how many
+  requests reference it (the RRAM write-once contract, audited via
+  `BlockPool.block_writes`), with recurrent state snapshots accounted
+  as one extra write on the chain terminal;
+* block-charged admission (`FCFSScheduler` charge mode) admits more
+  concurrent sharers than worst-case slot charging from the same DRAM
+  byte budget;
+* refcounts are conserved under arbitrary interleavings of
+  register / lookup+acquire / release / epoch (hypothesis), and
+  `BlockPool.check_invariants` holds throughout — eviction can never
+  free a referenced block.
+"""
+
+import numpy as np
+import pytest
+from conftest import build_model as _model
+from conftest import make_mesh as _mesh
+
+import jax
+
+from repro.serving import (BlockPool, CapacityBudget, Engine,
+                           FCFSScheduler, LocalBackend, Request,
+                           ShardedBackend, slot_kv_bytes,
+                           spill_lane_bytes)
+
+jax.config.update("jax_platform_name", "cpu")
+
+# per-arch geometry: ``head`` is the shared prefix every request opens
+# with, ``tails`` the per-request unique suffix lengths (request 0
+# registers the chain; the rest are sharers). Recurrent mixers need the
+# head ON the chunk grid and the registering prompt EQUAL to it (state
+# snapshots only attach to grid-aligned chain terminals).
+CASES = {
+    "granite-3-2b": dict(head=12, tails=(4, 1, 4), gen=5, bt=4,
+                         max_len=24, chunk=6),                 # GQA
+    "deepseek-v2-lite": dict(head=12, tails=(4, 1, 4), gen=5, bt=4,
+                             max_len=24, chunk=6),             # MLA
+    "rwkv6-7b": dict(head=32, tails=(0, 8, 8), gen=5, bt=32,
+                     max_len=48, chunk=32),                    # SSM
+    "zamba2-1.2b": dict(head=32, tails=(0, 8, 8), gen=5, bt=16,
+                        max_len=48, chunk=16),                 # hybrid
+}
+
+
+def _shared_head_requests(cfg, head, tails, gen, seed=3, priorities=None):
+    """Requests sharing a ``head``-token prompt prefix, with unique
+    random tails of the given lengths."""
+    rng = np.random.default_rng(seed)
+    head_toks = rng.integers(0, cfg.vocab_size, head).astype(np.int32)
+    reqs = []
+    for i, tail in enumerate(tails):
+        toks = head_toks if tail == 0 else np.concatenate(
+            [head_toks,
+             rng.integers(0, cfg.vocab_size, tail).astype(np.int32)])
+        reqs.append(Request(
+            rid=i, tokens=np.asarray(toks, np.int32), max_new_tokens=gen,
+            priority=0 if priorities is None else priorities[i]))
+    return reqs
+
+
+def _drain_warm(engine, reqs):
+    """Drain the chain-registering head request first, then the sharers
+    together — every sharer's admission probe then sees the registered
+    chain (FCFS admissions within one plan() call probe before the
+    earlier request's commit registers, so a single burst would
+    cold-prefill the whole first wave)."""
+    engine.submit(reqs[0])
+    while not engine.idle:
+        engine.step()
+    for r in reqs[1:]:
+        engine.submit(r)
+    while not engine.idle:
+        engine.step()
+    return {r.rid: list(r.generated) for r in engine.finished}
+
+
+_BASELINE: dict = {}
+
+
+def _requests(arch, **kw):
+    case = CASES[arch]
+    cfg, _, _ = _model(arch)
+    return _shared_head_requests(cfg, case["head"], case["tails"],
+                                 case["gen"], **kw)
+
+
+def _baseline(arch):
+    """Slot-pool (paged=False) reference tokens for the arch's shared
+    stream. Chunked/whole and local/sharded engines are all held
+    token-identical by the existing parity suites, so ONE baseline
+    serves every paged mode."""
+    if arch not in _BASELINE:
+        case = CASES[arch]
+        _, model, params = _model(arch)
+        eng = Engine(LocalBackend(model, params, num_slots=2,
+                                  max_len=case["max_len"]), paged=False)
+        _BASELINE[arch] = _drain_warm(eng, _requests(arch))
+    return _BASELINE[arch]
+
+
+def _check_paged(engine, arch, got):
+    case = CASES[arch]
+    n_sharers = len(case["tails"]) - 1
+    assert got == _baseline(arch), \
+        f"{arch}: paged tokens diverged from the slot pool"
+    assert engine.stats["prefix_hits"] == n_sharers
+    assert engine.stats["prefix_hit_tokens"] >= n_sharers * case["head"]
+    bp = engine.block_pool
+    bp.check_invariants()
+    assert bp.total_refcount == 0, "refcounts leaked past drain"
+    assert engine.endurance_report()["write_once_ok"]
+
+
+# ---------------------------------------------------------------------------
+# exact parity: GQA / MLA / SSM / hybrid x local / sharded x whole /
+# chunked prefill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list(CASES))
+@pytest.mark.parametrize("mode", ["whole", "chunked"])
+def test_paged_matches_slot_local(arch, mode):
+    case = CASES[arch]
+    _, model, params = _model(arch)
+    chunk = None if mode == "whole" else case["chunk"]
+    eng = Engine(LocalBackend(model, params, num_slots=2,
+                              max_len=case["max_len"],
+                              block_tokens=case["bt"]),
+                 chunk_tokens=chunk, paged=True)
+    _check_paged(eng, arch, _drain_warm(eng, _requests(arch)))
+
+
+@pytest.mark.parametrize("arch", list(CASES))
+@pytest.mark.parametrize("mode", ["whole", "chunked"])
+def test_paged_matches_slot_sharded(arch, mode):
+    """Paged admission under pjit placement: the prefix store shards
+    with the pool and block seeding stays exact."""
+    case = CASES[arch]
+    _, model, params = _model(arch)
+    chunk = None if mode == "whole" else case["chunk"]
+    eng = Engine(ShardedBackend(model, params, num_slots=2,
+                                max_len=case["max_len"], mesh=_mesh(),
+                                block_tokens=case["bt"]),
+                 chunk_tokens=chunk, paged=True)
+    _check_paged(eng, arch, _drain_warm(eng, _requests(arch)))
+
+
+def test_paged_matches_slot_shared_image_vlm():
+    """Many questions about ONE image: requests share the visual span
+    (keyed by per-patch-row digest) + a text head; parity and hits must
+    survive the multimodal prefix."""
+    cfg, model, params = _model("mobilevlm-1.7b")
+    tv = cfg.frontend.num_tokens
+    rng = np.random.default_rng(5)
+    patches = np.asarray(
+        rng.standard_normal((tv, cfg.frontend.frontend_dim)), np.float32)
+    head = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    token_streams = [
+        np.concatenate([head, rng.integers(0, cfg.vocab_size, tail)
+                        .astype(np.int32)]) for tail in (4, 2, 4)]
+
+    def reqs():
+        return [Request(rid=i, tokens=toks.copy(),
+                        patches=patches.copy(), max_new_tokens=4)
+                for i, toks in enumerate(token_streams)]
+
+    max_len = tv + 12 + 4 + 4
+    slot = Engine(LocalBackend(model, params, num_slots=2,
+                               max_len=max_len), paged=False)
+    got_slot = _drain_warm(slot, reqs())
+    paged = Engine(LocalBackend(model, params, num_slots=2,
+                                max_len=max_len, block_tokens=4),
+                   paged=True)
+    got_paged = _drain_warm(paged, reqs())
+    assert got_paged == got_slot
+    assert paged.stats["prefix_hits"] == 2
+    # the whole visual span + shared text head is reused
+    assert paged.stats["prefix_hit_tokens"] >= 2 * (tv + 8)
+    paged.block_pool.check_invariants()
+    assert paged.block_pool.total_refcount == 0
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write + write-once endurance
+# ---------------------------------------------------------------------------
+def test_cow_divergence_mid_block():
+    """Two prompts diverging strictly INSIDE block [8, 12): the sharer
+    hits the 10-position common prefix, recomputes from there, and its
+    differing block registers to a FRESH id — the shared block keeps
+    exactly one write and the answers match the slot pool."""
+    cfg, model, params = _model("granite-3-2b")
+    rng = np.random.default_rng(9)
+    base = rng.integers(0, cfg.vocab_size, 12).astype(np.int32)
+    fork = base.copy()
+    fork[10] = (fork[10] + 1) % cfg.vocab_size
+
+    def reqs():
+        return [Request(rid=0, tokens=base.copy(), max_new_tokens=4),
+                Request(rid=1, tokens=fork.copy(), max_new_tokens=4)]
+
+    slot = Engine(LocalBackend(model, params, num_slots=2, max_len=20),
+                  paged=False)
+    got_slot = _drain_warm(slot, reqs())
+    paged = Engine(LocalBackend(model, params, num_slots=2, max_len=20,
+                                block_tokens=4), paged=True)
+    got_paged = _drain_warm(paged, reqs())
+    assert got_paged == got_slot
+    bp = paged.block_pool
+    assert paged.stats["prefix_hits"] == 1
+    assert paged.finished[-1].prefix_hit == 10          # mid-block hit
+    assert bp.stats["cow_copies"] == 1
+    # 3 blocks from the cold prompt + 1 CoW block from the fork; every
+    # physical block written exactly once
+    assert bp.stats["blocks_registered"] == 4
+    assert bp.stats["block_writes"] == 4
+    assert int(bp.block_writes.max()) == 1
+    bp.check_invariants()
+
+
+def test_shared_blocks_written_once_n_way():
+    """Five identical prompts: the first writes 4 blocks, the other four
+    adopt them by reference — zero additional physical writes."""
+    cfg, model, params = _model("granite-3-2b")
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    eng = Engine(LocalBackend(model, params, num_slots=2, max_len=24,
+                              block_tokens=4), paged=True)
+    for i in range(5):
+        eng.submit(Request(rid=i, tokens=toks.copy(), max_new_tokens=4))
+        while not eng.idle:
+            eng.step()
+    bp = eng.block_pool
+    assert eng.stats["prefix_hits"] == 4
+    assert bp.stats["blocks_registered"] == 4
+    assert bp.stats["block_writes"] == 4
+    assert int(bp.block_writes.max()) == 1, \
+        "a shared block was rewritten under N-way sharing"
+    assert bp.max_refcount == 0
+    bp.check_invariants()
+    # all five answers identical (same prompt, greedy decode)
+    outs = {tuple(r.generated) for r in eng.finished}
+    assert len(outs) == 1
+
+
+def test_ssm_state_snapshot_write_accounting():
+    """Recurrent chains carry one EXTRA write for the terminal state
+    snapshot: a 32-token rwkv6 prompt registers 1 block (ws rows) + 1
+    snapshot = 2 writes; sharers add none."""
+    cfg, model, params = _model("rwkv6-7b")
+    case = CASES["rwkv6-7b"]
+    eng = Engine(LocalBackend(model, params, num_slots=2,
+                              max_len=case["max_len"],
+                              block_tokens=case["bt"]), paged=True)
+    _drain_warm(eng, _requests("rwkv6-7b"))
+    bp = eng.block_pool
+    assert eng.stats["prefix_hits"] == 2
+    assert eng.stats["prefix_hit_tokens"] == 2 * case["head"]
+    assert bp.stats["blocks_registered"] == 1
+    assert bp.stats["block_writes"] == 2        # ws rows + state snapshot
+    assert int(bp.block_writes.max()) == 2
+    bp.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# preemption / spill interplay
+# ---------------------------------------------------------------------------
+def test_paged_parity_under_preemption():
+    """A priority-1 sharer lands mid-run, preempts a low-priority victim
+    into an RRAM spill lane, and everyone still finishes token-identical
+    to the slot-pool engine running the same trace."""
+    cfg, model, params = _model("granite-3-2b")
+
+    def reqs():
+        return _shared_head_requests(
+            cfg, 12, (4, 1, 2, 3), gen=8, seed=4,
+            priorities=(0, 0, 0, 1))
+
+    def drive(paged):
+        eng = Engine(LocalBackend(model, params, num_slots=2, max_len=24,
+                                  n_spill=2, block_tokens=4),
+                     paged=paged)
+        rs = reqs()
+        eng.submit(rs[0])
+        while not eng.idle:
+            eng.step()
+        for r in rs[1:3]:                     # fill both slots
+            eng.submit(r)
+        for _ in range(3):
+            eng.step()
+        eng.submit(rs[3])                     # priority-1: preempts
+        while not eng.idle:
+            eng.step()
+        return eng, {r.rid: list(r.generated) for r in eng.finished}
+
+    slot_eng, got_slot = drive(False)
+    paged_eng, got_paged = drive(True)
+    assert got_paged == got_slot
+    assert paged_eng.stats["evictions"] >= 1, \
+        "trace never exercised preemption"
+    assert paged_eng.stats["prefix_hits"] >= 3
+    paged_eng.block_pool.check_invariants()
+    assert paged_eng.block_pool.total_refcount == 0
+    assert paged_eng.endurance_report()["write_once_ok"]
+
+
+# ---------------------------------------------------------------------------
+# block-charged admission capacity
+# ---------------------------------------------------------------------------
+def test_block_charged_admission_beats_slot_charging():
+    """Same DRAM byte budget (2 worst-case slot images): slot charging
+    pins concurrency at 2, block charging admits every sharer at once
+    because a prefix hit only charges the unshared tail blocks."""
+    cfg, model, params = _model("granite-3-2b", hot_window=28)
+    backend = LocalBackend(model, params, num_slots=4, max_len=28,
+                           block_tokens=4)
+    hot_b, cold_b = backend.slot_kv_bytes()
+
+    def drive(paged):
+        sched = FCFSScheduler(
+            CapacityBudget(2 * hot_b, 16 * (hot_b + cold_b)),
+            hot_b, cold_b)
+        eng = Engine(backend, scheduler=sched, paged=paged)
+        rs = _shared_head_requests(cfg, 20, (4, 1, 2, 3), gen=4, seed=6)
+        eng.submit(rs[0])
+        while not eng.idle:
+            eng.step()
+        for r in rs[1:]:
+            eng.submit(r)
+        peak = 0
+        while not eng.idle:
+            eng.step()
+            peak = max(peak, eng.pool.active_slots)
+        return peak, {r.rid: list(r.generated) for r in eng.finished}
+
+    slot_peak, got_slot = drive(False)
+    paged_peak, got_paged = drive(True)
+    assert got_paged == got_slot
+    assert slot_peak == 2, "worst-case charging should cap at the budget"
+    assert paged_peak == 3, \
+        f"block charging admitted {paged_peak} sharers, expected all 3"
+
+
+def test_cached_blocks_do_not_wedge_admission():
+    """Regression: only *pinned* prefix blocks (refcount > 0) may charge
+    the RRAM gate. An RRAM budget with zero headroom over two residents
+    must keep admitting wave after wave — the earlier waves' blocks stay
+    cached (reclaimable), and charging them would deny every later
+    admission forever."""
+    cfg, model, params = _model("granite-3-2b")
+    backend = LocalBackend(model, params, num_slots=4, max_len=24,
+                           block_tokens=4)
+    hot_b, cold_b = backend.slot_kv_bytes()
+    sched = FCFSScheduler(CapacityBudget(2 * hot_b, 2 * cold_b),
+                          hot_b, cold_b, oversubscribe=1.0)
+    eng = Engine(backend, scheduler=sched, paged=True)
+    reqs = _shared_head_requests(cfg, 12, (4, 1, 4, 2, 3), gen=4, seed=9)
+    done = eng.run(list(reqs), max_steps=300)
+    assert len(done) == 5
+    assert eng.block_pool.pinned_blocks == 0
+    assert eng.block_pool.used_blocks > 0, "cache should stay warm"
+
+
+def test_slot_kv_bytes_length_aware():
+    """Satellite: the byte model's live-length variant rounds to whole
+    blocks, clamps to max_len, and never exceeds the worst case."""
+    _, model, _ = _model("granite-3-2b")
+    full = slot_kv_bytes(model, 24)
+    short = slot_kv_bytes(model, 24, length=5, block_tokens=4)
+    assert short == slot_kv_bytes(model, 24, length=8, block_tokens=4), \
+        "length must be charged in whole blocks"
+    assert short[0] <= full[0] and short[1] < full[1]
+    assert slot_kv_bytes(model, 24, length=999, block_tokens=4) == full
+    lane_full = spill_lane_bytes(model, 24)
+    lane_short = spill_lane_bytes(model, 24, length=5, block_tokens=4)
+    assert lane_short < lane_full
+    assert spill_lane_bytes(model, 24, length=999, block_tokens=4) \
+        == lane_full
+
+
+# ---------------------------------------------------------------------------
+# telemetry: prefix-adopt ledger terms reconcile bit-for-bit
+# ---------------------------------------------------------------------------
+def test_paged_ledger_reconciles_with_simulated_efficiency(tmp_path):
+    """On a drained paged run the step-by-step TierLedger (which prices
+    tail-only prefills + the PREFIX_ADOPT RRAM/UCIe traffic as the
+    engine runs) must equal `simulated_efficiency` (one fsum over the
+    whole trace, `cached_prefix` per request) EXACTLY, and the prefix
+    gauges must surface in the Prometheus exposition."""
+    from repro.serving import (Telemetry, parse_prometheus,
+                               simulated_efficiency)
+
+    cfg, model, params = _model("granite-3-2b")
+    tel = Telemetry()
+    eng = Engine(LocalBackend(model, params, num_slots=2, max_len=24,
+                              block_tokens=4), paged=True, telemetry=tel)
+    _drain_warm(eng, _requests("granite-3-2b"))
+    assert eng.stats["prefix_hits"] == 2
+    sim = simulated_efficiency(cfg, eng.finished)
+    led = tel.ledger.totals()
+    assert led["sim_energy_j"] == sim["sim_energy_j"]
+    assert led["sim_total_s"] == sim["sim_total_s"]
+    assert led["sim_energy_split_j"] == sim["sim_energy_split_j"]
+    assert led["prefix_adopt_bytes"] > 0
+    path = tmp_path / "metrics.prom"
+    tel.write_prometheus(str(path))
+    samples = parse_prometheus(path.read_text())
+    by = {name: value for name, _, value in samples}
+    assert by["repro_serving_prefix_hits"] == 2
+    assert by["repro_serving_prefix_hit_tokens"] \
+        == eng.stats["prefix_hit_tokens"]
+    assert "repro_serving_prefix_blocks_used" in by
+    assert "repro_serving_prefix_cow_copies" in by
+    tel.close()
+
+
+# ---------------------------------------------------------------------------
+# property tests: refcount conservation + structural invariants
+# ---------------------------------------------------------------------------
+def _drive_pool_ops(choose_int, choose_seq, choose_op, n_ops):
+    """Random interleavings of register / lookup+acquire / release /
+    epoch on a small pool over a tiny key alphabet (maximal collisions):
+    the pool's total refcount always equals the outstanding
+    acquisitions, eviction under pressure never frees a referenced
+    block (check_invariants + the double-release guard would trip), and
+    releasing everything returns the count to zero. ``choose_*`` are
+    the randomness hooks — a seeded numpy RNG for the always-on test,
+    hypothesis draws for the shrinking one."""
+    pool = BlockPool(num_blocks=5, block_tokens=3)
+    seqs = [[choose_int(0, 2) for _ in range(choose_int(1, 11))]
+            for _ in range(choose_int(1, 5))]
+    held = []
+    for _ in range(n_ops):
+        op = choose_op(["register", "acquire", "release", "epoch"])
+        keys = tuple(choose_seq(seqs))
+        if op == "register":
+            new, term = pool.register(keys, max_start=100)
+            assert all(n.refcount == 0 for n in new)
+            if term is not None:
+                assert term.end == len(keys)
+        elif op == "acquire":
+            hit = pool.lookup(keys, max_hit=max(len(keys) - 1, 1))
+            assert hit.length <= max(len(keys) - 1, 1)
+            if hit.length:
+                pool.acquire(hit)
+                held.append(hit)
+        elif op == "release" and held:
+            pool.release(held.pop(choose_int(0, len(held) - 1)))
+        else:
+            pool.begin_epoch()
+        pool.check_invariants()
+        assert pool.total_refcount == sum(len(h.nodes) for h in held), \
+            "refcount drifted from outstanding acquisitions"
+    for h in held:
+        pool.release(h)
+    assert pool.total_refcount == 0
+    pool.check_invariants()
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_block_pool_refcount_conservation_seeded(seed):
+    """Deterministic randomized interleavings (always runs, even without
+    hypothesis installed)."""
+    rng = np.random.default_rng(seed)
+    _drive_pool_ops(
+        choose_int=lambda lo, hi: int(rng.integers(lo, hi + 1)),
+        choose_seq=lambda seqs: seqs[int(rng.integers(len(seqs)))],
+        choose_op=lambda ops: ops[int(rng.integers(len(ops)))],
+        n_ops=int(rng.integers(1, 41)))
+
+
+def test_block_pool_refcount_conservation_hypothesis():
+    """The same invariants under hypothesis's shrinking search."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.data())
+    @settings(max_examples=60, deadline=None)
+    def run(data):
+        _drive_pool_ops(
+            choose_int=lambda lo, hi: data.draw(st.integers(lo, hi)),
+            choose_seq=lambda seqs: data.draw(st.sampled_from(seqs)),
+            choose_op=lambda ops: data.draw(st.sampled_from(ops)),
+            n_ops=data.draw(st.integers(1, 40)))
+
+    run()
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
