@@ -73,11 +73,15 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
               n_spill: int | None = None,
               spill_compress: bool | None = None,
               idle_offload_steps: int | None = None,
-              rram_spill_bytes: float | None = None) -> dict:
+              rram_spill_bytes: float | None = None,
+              fused_decode: bool | None = None,
+              sparse_read: float | None = None) -> dict:
     backend = make_backend(backend_kind, model, params,
                            num_slots=concurrency, max_len=max_len,
                            mesh=mesh, n_spill=n_spill,
-                           spill_compress=spill_compress)
+                           spill_compress=spill_compress,
+                           fused_decode=fused_decode,
+                           sparse_read=sparse_read)
 
     def fresh_engine(telemetry=None):
         # verbatim: None consults the env knobs, explicit 0 disables.
@@ -147,6 +151,8 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["spill_lanes"] = backend.n_spill
     m["spill_compress"] = bool(backend.spill_compress)
     m["spill_lane_bytes"] = backend.spill_lane_bytes()
+    m["fused_decode"] = bool(backend.fused_decode)
+    m["sparse_read_tau"] = float(backend.sparse_read_tau)
     m["idle_offload_steps"] = getattr(engine.scheduler,
                                       "idle_offload_steps", None) or 0
     m["idle_offloads"] = engine.stats["idle_offloads"]
@@ -160,7 +166,9 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["engine_stats"] = dict(engine.stats)
     m["endurance"] = engine.endurance_report()
     m["sim"] = simulated_efficiency(
-        cfg, done, spill_compressed=backend.spill_compress)
+        cfg, done, spill_compressed=backend.spill_compress,
+        fused_decode=backend.fused_decode,
+        sparse_read_tau=backend.sparse_read_tau)
     # third pass: telemetry ON over the same stream — records the
     # per-tier traffic/energy ledger + phase breakdown into the BENCH
     # trajectory, checks the ledger reconciles bit-for-bit against
@@ -176,15 +184,17 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
         tel_engine.step()
     tel_wall = time.perf_counter() - t0
     tel_sim = simulated_efficiency(cfg, tel_engine.finished,
-                                   spill_compressed=backend.spill_compress)
+                                   spill_compressed=backend.spill_compress,
+                                   fused_decode=backend.fused_decode,
+                                   sparse_read_tau=backend.sparse_read_tau)
     led = tel.ledger.totals()
     summary = tel.summary()
     m["telemetry"] = {
         "tier_bytes": {k: led[k] for k in
                        ("dram_hot_ring_bytes", "rram_cold_read_bytes",
                         "rram_spill_bytes", "dram_stream_bytes",
-                        "rram_stream_bytes", "kv_append_bytes",
-                        "ucie_bytes")},
+                        "rram_stream_bytes", "sparse_skipped_bytes",
+                        "kv_append_bytes", "ucie_bytes")},
         "energy_split_j": led["sim_energy_split_j"],
         "phase_s": summary["phase_s"],
         "decisions": summary["decisions"],
@@ -384,6 +394,15 @@ def main(argv=None):
     ap.add_argument("--idle-offload-steps", type=int, default=None,
                     help="enable proactive idle cold-KV offload at this "
                          "residency threshold (see serving/scheduler.py)")
+    ap.add_argument("--fused-decode", action="store_true", default=None,
+                    help="fused Pallas paged-decode attention over the "
+                         "tiered pool (GQA archs; default: consult "
+                         "REPRO_SERVE_FUSED_DECODE)")
+    ap.add_argument("--sparse-read", type=float, default=None,
+                    metavar="TAU",
+                    help="SLIM-style sparse-read threshold inside the "
+                         "fused kernel (0 = exact; needs --fused-decode; "
+                         "default: consult REPRO_SERVE_SPARSE_READ)")
     ap.add_argument("--prefix-share", type=int, default=0, metavar="N",
                     help="prefix-sharing comparison: every request opens "
                          "with the same N-token system prompt (and VQA "
@@ -557,7 +576,9 @@ def main(argv=None):
                           image_every=args.image_every,
                           priority_every=args.priority_every,
                           spill_compress=args.spill_compress,
-                          idle_offload_steps=args.idle_offload_steps)
+                          idle_offload_steps=args.idle_offload_steps,
+                          fused_decode=args.fused_decode,
+                          sparse_read=args.sparse_read)
             results.append(r)
             show(f"concurrency={c:3d}", r)
         if len(results) == 2:
@@ -580,6 +601,8 @@ def main(argv=None):
             "oversubscribe": args.oversubscribe or 0,
             "spill_compress": bool(args.spill_compress),
             "idle_offload_steps": args.idle_offload_steps or 0,
+            "fused_decode": bool(args.fused_decode),
+            "sparse_read": args.sparse_read or 0.0,
             "runs": results,
         })
         print(f"[bench] appended to {BENCH_JSON}")

@@ -117,6 +117,11 @@ class ModelConfig:
     kv_frozen_dtype: str = "int8"         # Tier-4 "RRAM" write-once tier
     ffn_weight_store: Literal["native", "int8"] = "native"  # "RRAM" weights
     max_decode_len: int = 512
+    # fused paged-decode attention (kernels/paged_decode.py): opt-in; the
+    # unfused two-segment merge stays the parity oracle. Also settable at
+    # serving time via REPRO_SERVE_FUSED_DECODE / REPRO_SERVE_SPARSE_READ.
+    fused_decode: bool = False
+    sparse_read_tau: float = 0.0          # SLIM-style skip threshold; 0=off
 
     def __post_init__(self):
         if self.head_dim == 0:

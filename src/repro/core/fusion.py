@@ -40,6 +40,31 @@ def _use_pallas(cfg: ModelConfig) -> bool:
             or os.environ.get("REPRO_PALLAS_INTERPRET") == "1")
 
 
+def _use_fused_decode(cfg: ModelConfig) -> bool:
+    """Opt-in fused paged-decode attention (kernels/paged_decode.py).
+    Unlike _use_pallas this doesn't require cfg.use_pallas_kernels: the
+    kernel interprets on CPU, so enabling the knob is always exercisable
+    (CI runs the whole serving stack through it). The unfused two-segment
+    merge stays the parity oracle."""
+    if getattr(cfg, "fused_decode", False):
+        return True
+    return os.environ.get("REPRO_SERVE_FUSED_DECODE", "") not in ("", "0")
+
+
+def _sparse_read_tau(cfg: ModelConfig) -> float:
+    """SLIM-style sparse-read threshold: cfg wins, else the env knob.
+    0 disables (exact kernel). Malformed env values read as off — the
+    serving engine warns rather than crashes on bad knobs."""
+    tau = float(getattr(cfg, "sparse_read_tau", 0.0) or 0.0)
+    if tau > 0.0:
+        return tau
+    raw = os.environ.get("REPRO_SERVE_SPARSE_READ", "")
+    try:
+        return max(float(raw), 0.0) if raw else 0.0
+    except ValueError:
+        return 0.0
+
+
 # ---------------------------------------------------------------------------
 # FUSED_FFN_ACT
 # ---------------------------------------------------------------------------
@@ -154,9 +179,20 @@ def apply_attention_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     ck = KT.store_append(cache["k"], k_new, pos)
     cv = KT.store_append(cache["v"], v_new, pos)
     if "hot" in ck:
-        # tiered: two-segment flash merge — int8 cold tier read directly
-        # (scales factored into the dots), no concat/resharding
-        o = A.attend_tiered(cfg, q, ck, cv, pos)
+        if _use_fused_decode(cfg):
+            # fused paged decode: online softmax streams hot + cold pages
+            # straight from the store layouts (block-table indirection,
+            # in-kernel int8 dequant) — no store_read materialization
+            from repro.kernels import ops
+            o = ops.paged_decode_tiered(cfg, q, ck, cv, pos,
+                                        tau=_sparse_read_tau(cfg))
+        else:
+            # tiered: two-segment flash merge — int8 cold tier read
+            # directly (scales factored into the dots), no concat
+            o = A.attend_tiered(cfg, q, ck, cv, pos)
+    elif _use_fused_decode(cfg):
+        from repro.kernels import ops
+        o = ops.paged_decode_flat(cfg, q, ck, cv, pos)
     else:
         cd = jnp.dtype(cfg.compute_dtype)
         kv, valid = KT.store_read(ck, pos, cd)
@@ -236,6 +272,10 @@ def apply_mla_decode(p: dict, cfg: ModelConfig, x: jax.Array,
     q_nope, q_rope = A.mla_queries(p, cfg, x, positions)
     cc = KT.store_append(cache["c_kv"], c_new, pos)
     cr = KT.store_append(cache["k_rope"], r_new, pos)
+    # fused paged decode is GQA-only for now: MLA's two-latent score sum
+    # (nope + rope per token) doesn't fit the single-K-page kernel shape,
+    # so the fused_decode knob leaves MLA on the unfused oracle (the
+    # serving parity tests pin knob-on == knob-off for MLA archs).
     if "hot" in cc:
         out = A.mla_attend_tiered(p, cfg, q_nope, q_rope, cc, cr, pos)
     else:

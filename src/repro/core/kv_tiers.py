@@ -144,6 +144,24 @@ def tiered_read(cache: dict, pos, dtype=jnp.bfloat16
     return values, valid
 
 
+def n_cold_pages(max_len: int, block_k: int) -> int:
+    """Grid entries needed to cover a max_len cold tier in block_k pages."""
+    return -(-max_len // block_k)
+
+
+def cold_page_table(pos, hot_window: int, max_len: int,
+                    block_k: int) -> jax.Array:
+    """Identity block table for the fused paged-decode kernel: entry j maps
+    logical cold page j (tokens [j*block_k, (j+1)*block_k)) to physical
+    page j, or -1 when the page holds no attendable token (a dead page the
+    kernel never touches). A token is attendable cold when its position
+    <= pos - hot_window; passing hot_window=0 describes a flat store,
+    where validity is simply position <= pos."""
+    j = jnp.arange(n_cold_pages(max_len, block_k), dtype=jnp.int32)
+    live = j * block_k <= pos - hot_window
+    return jnp.where(live, j, -1).astype(jnp.int32)
+
+
 def hot_ring_positions(pos, W: int) -> jax.Array:
     """Absolute position held by each hot slot, given current write pos."""
     i = jnp.arange(W)

@@ -9,6 +9,7 @@ import jax.numpy as jnp
 from repro.kernels import attn_stream as _attn
 from repro.kernels import ffn_act as _ffn
 from repro.kernels import fused_norm as _norm
+from repro.kernels import paged_decode as _paged
 from repro.kernels import qkv_proj as _qkv
 from repro.kernels import ref
 
@@ -16,6 +17,8 @@ attn_stream_kernel = _attn.attn_stream
 ffn_act_kernel = _ffn.ffn_act
 qkv_proj_kernel = _qkv.qkv_proj
 fused_norm_kernel = _norm.fused_norm
+paged_decode_tiered_kernel = _paged.paged_decode_tiered
+paged_decode_flat_kernel = _paged.paged_decode_flat
 
 
 def attn_stream(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -26,6 +29,57 @@ def attn_stream(q: jax.Array, k: jax.Array, v: jax.Array,
     vt = jnp.swapaxes(v, 1, 2)
     o = _attn.attn_stream(qt, kt, vt, causal=causal)
     return jnp.swapaxes(o, 1, 2)
+
+
+PAGED_DECODE_BLOCK = 128  # cold-page tokens per grid step (= endurance blk)
+
+
+def paged_decode_tiered(cfg, q: jax.Array, k_store: dict, v_store: dict,
+                        pos, *, tau: float = 0.0,
+                        block_k: int = PAGED_DECODE_BLOCK) -> jax.Array:
+    """Fused decode attention over a tiered store. q (B,1,H,D) model
+    layout; the identity block table is derived from pos (dead pages are
+    -1 so the kernel skips them). Returns (B,1,H,D)."""
+    from repro.core import kv_tiers as KT
+    B, S, H, D = q.shape
+    Hkv = k_store["hot"].shape[2]
+    G = H // Hkv
+    W = KT.hot_window_of(k_store)
+    max_len = k_store["cold_q"].shape[1]
+    bk = min(block_k, max_len)
+    tab = jnp.broadcast_to(
+        KT.cold_page_table(pos, W, max_len, bk)[None],
+        (B, KT.n_cold_pages(max_len, bk)))
+    lengths = jnp.full((B,), pos, jnp.int32)
+    qr = q[:, 0].reshape(B, Hkv, G, D)
+    o = _paged.paged_decode_tiered(
+        qr, k_store["hot"], v_store["hot"],
+        k_store["cold_q"], k_store["cold_scale"],
+        v_store["cold_q"], v_store["cold_scale"],
+        lengths, tab, scale=D ** -0.5, block_k=bk, tau=tau)
+    return o.reshape(B, H, D)[:, None]
+
+
+def paged_decode_flat(cfg, q: jax.Array, k_store: dict, v_store: dict,
+                      pos, *, block_k: int = PAGED_DECODE_BLOCK
+                      ) -> jax.Array:
+    """Fused decode attention over a flat store; same table plumbing with
+    hot_window=0 (valid = position <= pos)."""
+    from repro.core import kv_tiers as KT
+    B, S, H, D = q.shape
+    Hkv = k_store["flat"].shape[2]
+    G = H // Hkv
+    max_len = k_store["flat"].shape[1]
+    bk = min(block_k, max_len)
+    tab = jnp.broadcast_to(
+        KT.cold_page_table(pos, 0, max_len, bk)[None],
+        (B, KT.n_cold_pages(max_len, bk)))
+    lengths = jnp.full((B,), pos, jnp.int32)
+    qr = q[:, 0].reshape(B, Hkv, G, D)
+    o = _paged.paged_decode_flat(
+        qr, k_store["flat"], v_store["flat"], lengths, tab,
+        scale=D ** -0.5, block_k=bk)
+    return o.reshape(B, H, D)[:, None]
 
 
 def ffn_act(x: jax.Array, w_up: jax.Array, w_gate: jax.Array | None,
@@ -61,4 +115,5 @@ def fused_norm(x: jax.Array, scale: jax.Array, bias: jax.Array | None,
     return out.reshape(*lead, -1)
 
 
-__all__ = ["attn_stream", "ffn_act", "qkv_proj", "fused_norm", "ref"]
+__all__ = ["attn_stream", "ffn_act", "qkv_proj", "fused_norm",
+           "paged_decode_tiered", "paged_decode_flat", "ref"]

@@ -144,6 +144,18 @@ def main(argv=None):
                          "(bounded-error restore; a parked image then "
                          "costs ~the cold tier's RRAM bytes; default: "
                          "consult REPRO_SERVE_SPILL_COMPRESS)")
+    ap.add_argument("--fused-decode", action="store_true", default=None,
+                    help="fused Pallas paged-decode attention: stream "
+                         "K/V pages straight from the tiered layout "
+                         "with in-kernel int8 dequant (GQA archs only; "
+                         "default: consult REPRO_SERVE_FUSED_DECODE)")
+    ap.add_argument("--sparse-read", type=float, default=None,
+                    metavar="TAU",
+                    help="SLIM-style adaptive-threshold sparse read "
+                         "inside the fused kernel: skip cold pages whose "
+                         "score upper bound is < running-max + log(TAU) "
+                         "(0 = exact; needs --fused-decode; default: "
+                         "consult REPRO_SERVE_SPARSE_READ)")
     ap.add_argument("--paged", action="store_true", default=None,
                     help="charge the admission gate per live KV block "
                          "instead of per worst-case slot (default: "
@@ -192,7 +204,8 @@ def main(argv=None):
         args.backend, model, params, num_slots=args.concurrency,
         max_len=max_len,
         mesh=get_mesh(args.mesh) if args.backend == "sharded" else None,
-        n_spill=args.spill_lanes, spill_compress=args.spill_compress)
+        n_spill=args.spill_lanes, spill_compress=args.spill_compress,
+        fused_decode=args.fused_decode, sparse_read=args.sparse_read)
     # telemetry is opt-in: any of the export flags (or --stats-every)
     # turns the hub on; otherwise Engine installs the no-op NullTelemetry
     want_tel = (args.trace_out or args.metrics_out or args.snapshots_out
@@ -264,10 +277,17 @@ def main(argv=None):
               f"{rep['max_writes_per_cold_slot']:.2f} "
               f"(write-once {'OK' if rep['write_once_ok'] else 'VIOLATED'})")
     sim = simulated_efficiency(cfg, done,
-                               spill_compressed=backend.spill_compress)
+                               spill_compressed=backend.spill_compress,
+                               fused_decode=backend.fused_decode,
+                               sparse_read_tau=backend.sparse_read_tau)
+    fused_note = ""
+    if backend.fused_decode:
+        fused_note = " [fused decode" + (
+            f", sparse tau={backend.sparse_read_tau:g}]"
+            if backend.sparse_read_tau else "]")
     print(f"[serve] simulated on {sim['platform']}: "
           f"{sim['sim_tokens_per_j']:.1f} tok/J, "
-          f"{sim['sim_energy_j']:.3f} J total")
+          f"{sim['sim_energy_j']:.3f} J total{fused_note}")
     if tel is not None:
         if args.trace_out:
             tel.write_chrome_trace(args.trace_out)

@@ -81,6 +81,31 @@ def _resolve_spill_compress(flag: bool | None) -> bool:
                           "").strip() not in ("", "0")
 
 
+def _resolve_fused_decode(flag: bool | None) -> bool:
+    """Resolve the fused paged-decode knob: an explicit bool wins; None
+    consults ``REPRO_SERVE_FUSED_DECODE`` (unset/empty/"0" = off)."""
+    if flag is not None:
+        return bool(flag)
+    return os.environ.get("REPRO_SERVE_FUSED_DECODE",
+                          "").strip() not in ("", "0")
+
+
+def _resolve_sparse_read(tau: float | None) -> float:
+    """Resolve the SLIM-style sparse-read threshold: an explicit float
+    wins; None consults ``REPRO_SERVE_SPARSE_READ``. Unparsable or
+    negative values resolve to 0.0 (off) — an env var must never wedge
+    startup."""
+    if tau is not None:
+        return max(float(tau), 0.0)
+    raw = os.environ.get("REPRO_SERVE_SPARSE_READ", "").strip()
+    if not raw:
+        return 0.0
+    try:
+        return max(float(raw), 0.0)
+    except ValueError:
+        return 0.0
+
+
 @runtime_checkable
 class InferenceBackend(Protocol):
     """What the engine needs from an executor. Any object with this
@@ -107,6 +132,14 @@ class InferenceBackend(Protocol):
     #   defaults to core.kv_tiers.ENDURANCE_BLOCK clamped to max_len and
     #   rounded to the chunk grid for recurrent architectures
     prefix_blocks: int         # physical blocks in the prefix store
+    fused_decode: bool        # opt-in fused paged-decode attention
+    #   (kernels/paged_decode.py): decode streams K/V pages straight
+    #   from the tiered layout with in-kernel int8 dequant. GQA-only —
+    #   resolves to off for architectures with no GQA attention layer.
+    #   Default off: REPRO_SERVE_FUSED_DECODE / CLI --fused-decode.
+    sparse_read_tau: float    # SLIM-style adaptive-threshold sparse
+    #   read inside the fused kernel (0.0 = exact). Only meaningful
+    #   with fused_decode; REPRO_SERVE_SPARSE_READ / CLI --sparse-read.
 
     def slot_kv_bytes(self, *, length: int | None = None
                       ) -> tuple[int, int]:
@@ -183,7 +216,9 @@ class _JittedBackend:
                  n_spill: int | None = None,
                  spill_compress: bool | None = None,
                  prefix_blocks: int | None = None,
-                 block_tokens: int | None = None):
+                 block_tokens: int | None = None,
+                 fused_decode: bool | None = None,
+                 sparse_read: float | None = None):
         cfg = model.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only model cannot be served")
@@ -195,6 +230,27 @@ class _JittedBackend:
             n_spill = num_slots      # preemption available out of the box
         if n_spill < 0:
             raise ValueError("backend needs n_spill >= 0")
+        # fused paged-decode attention is GQA-only (apply_mla_decode
+        # keeps the unfused oracle), so the flag resolves to off for
+        # architectures with no GQA attention layer — keeping the knob
+        # truthful for sim pricing and the CLI report, exactly like
+        # spill_compress on a flat cache. The sparse-read threshold only
+        # exists inside the fused kernel, so it follows the same gate.
+        has_gqa = any(u.block.mixer in ("attn", "attn_shared")
+                      for u in model.plan)
+        if fused_decode is None and getattr(cfg, "fused_decode", False):
+            fused_decode = True       # cfg flag wins over an unset env var
+        if sparse_read is None and getattr(cfg, "sparse_read_tau", 0.0):
+            sparse_read = cfg.sparse_read_tau
+        self.fused_decode = _resolve_fused_decode(fused_decode) and has_gqa
+        self.sparse_read_tau = (_resolve_sparse_read(sparse_read)
+                                if self.fused_decode else 0.0)
+        if (self.fused_decode != bool(getattr(cfg, "fused_decode", False))
+                or self.sparse_read_tau
+                != float(getattr(cfg, "sparse_read_tau", 0.0))):
+            cfg = cfg.replace(fused_decode=self.fused_decode,
+                              sparse_read_tau=self.sparse_read_tau)
+            model = Model(cfg, model.rules)
         self.model = model
         self.params = params
         self.num_slots = num_slots
@@ -652,7 +708,9 @@ class ShardedBackend(_JittedBackend):
                  n_spill: int | None = None,
                  spill_compress: bool | None = None,
                  prefix_blocks: int | None = None,
-                 block_tokens: int | None = None):
+                 block_tokens: int | None = None,
+                 fused_decode: bool | None = None,
+                 sparse_read: float | None = None):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh()
@@ -688,7 +746,9 @@ class ShardedBackend(_JittedBackend):
         super().__init__(model, params, num_slots, max_len,
                          n_spill=n_spill, spill_compress=spill_compress,
                          prefix_blocks=prefix_blocks,
-                         block_tokens=block_tokens)
+                         block_tokens=block_tokens,
+                         fused_decode=fused_decode,
+                         sparse_read=sparse_read)
 
     def _place(self, cache: dict) -> dict:
         return jax.device_put(cache, self._pool_sh)
@@ -730,18 +790,24 @@ def make_backend(kind: str, model: Model, params, *, num_slots: int,
                  n_spill: int | None = None,
                  spill_compress: bool | None = None,
                  prefix_blocks: int | None = None,
-                 block_tokens: int | None = None) -> InferenceBackend:
+                 block_tokens: int | None = None,
+                 fused_decode: bool | None = None,
+                 sparse_read: float | None = None) -> InferenceBackend:
     """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
     if kind == "local":
         return LocalBackend(model, params, num_slots, max_len,
                             n_spill=n_spill,
                             spill_compress=spill_compress,
                             prefix_blocks=prefix_blocks,
-                            block_tokens=block_tokens)
+                            block_tokens=block_tokens,
+                            fused_decode=fused_decode,
+                            sparse_read=sparse_read)
     if kind == "sharded":
         return ShardedBackend(model, params, num_slots, max_len, mesh=mesh,
                               n_spill=n_spill,
                               spill_compress=spill_compress,
                               prefix_blocks=prefix_blocks,
-                              block_tokens=block_tokens)
+                              block_tokens=block_tokens,
+                              fused_decode=fused_decode,
+                              sparse_read=sparse_read)
     raise ValueError(f"unknown backend kind {kind!r}")

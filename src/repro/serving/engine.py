@@ -347,7 +347,11 @@ class Engine:
             t_cfg, t_comp = ctx_fn() if callable(ctx_fn) else (None, False)
             self.telemetry.bind(cfg=t_cfg, spill_compressed=t_comp,
                                 clock=self.clock, platform=platform,
-                                on_snapshot=self.endurance_report)
+                                on_snapshot=self.endurance_report,
+                                fused_decode=getattr(
+                                    backend, "fused_decode", None),
+                                sparse_read_tau=getattr(
+                                    backend, "sparse_read_tau", None))
             # the scheduler logs decision codes through the same hub; a
             # user-built scheduler that already carries one keeps it
             if getattr(self.scheduler, "telemetry", None) is None:

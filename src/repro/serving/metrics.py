@@ -147,7 +147,9 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
 
 
 def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
-                         spill_compressed: bool = False) -> dict:
+                         spill_compressed: bool = False,
+                         fused_decode: bool | None = None,
+                         sparse_read_tau: float | None = None) -> dict:
     """Simulated time/energy for the served trace on ``platform``.
 
     Each request contributes a VQA workload of its own (prompt length,
@@ -164,7 +166,16 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
     order-independent: the telemetry `TierLedger`, which prices the SAME
     events step-by-step as the engine runs, reconciles with this
     function bit-for-bit on a drained run.
+
+    ``fused_decode`` / ``sparse_read_tau`` price the fused paged-decode
+    attention path instead of the streamed two-segment merge (pass the
+    backend's resolved knobs; None falls back to the cfg fields so the
+    defaults match whatever the model actually executed).
     """
+    fused = bool(getattr(cfg, "fused_decode", False)
+                 if fused_decode is None else fused_decode)
+    tau = float(getattr(cfg, "sparse_read_tau", 0.0)
+                if sparse_read_tau is None else sparse_read_tau)
     layers = cost_layers(cfg)
     terms = []
     n_spills = 0
@@ -181,7 +192,8 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
         image = req.has_image and cfg.frontend is not None
         terms += request_terms(cfg, platform, int(req.tokens.shape[0]),
                                req.n_generated, image, layers,
-                               cached_prefix=int(req.prefix_hit))
+                               cached_prefix=int(req.prefix_hit),
+                               fused=fused, sparse_tau=tau)
         tokens += req.n_generated
     agg = sum_terms(terms)
     energy, sim_s = agg["sim_energy_j"], agg["sim_total_s"]
@@ -191,6 +203,8 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
         "sim_total_s": sim_s,
         "sim_spills": n_spills,
         "sim_spill_compressed": bool(spill_compressed),
+        "sim_fused_decode": fused,
+        "sim_sparse_read_tau": tau,
         "sim_spill_energy_j": agg["sim_spill_energy_j"],
         "sim_spill_s": agg["sim_spill_s"],
         "sim_energy_split_j": agg["sim_energy_split_j"],

@@ -103,12 +103,23 @@ class TierLedger:
     int8 prefix beyond the ring + its f32 scales) — the byte-level view
     of the tiered-attention dataflow."""
 
-    def __init__(self, cfg, platform=None, spill_compressed: bool = False):
+    def __init__(self, cfg, platform=None, spill_compressed: bool = False,
+                 fused_decode: bool | None = None,
+                 sparse_read_tau: float | None = None):
         from repro.models.counting import (kv_elems_per_token,
                                            kv_scale_elems_per_token)
         self.cfg = cfg
         self.platform = platform or CHIME
         self.spill_compressed = bool(spill_compressed)
+        # fused paged-decode pricing: explicit args (the backend's resolved
+        # knobs) win; None falls back to the cfg fields so a bare
+        # TierLedger(cfg) still prices what the model executes
+        self.fused_decode = bool(
+            getattr(cfg, "fused_decode", False) if fused_decode is None
+            else fused_decode)
+        self.sparse_read_tau = float(
+            getattr(cfg, "sparse_read_tau", 0.0) if sparse_read_tau is None
+            else sparse_read_tau)
         self._layers = cost_layers(cfg)
         self._kv_elems = kv_elems_per_token(cfg)
         self._scale_elems = kv_scale_elems_per_token(cfg)
@@ -134,6 +145,7 @@ class TierLedger:
                      "prefix_adopt_bytes": 0.0,
                      "dram_stream_bytes": 0.0,
                      "rram_stream_bytes": 0.0,
+                     "sparse_skipped_bytes": 0.0,
                      "kv_append_bytes": 0.0,
                      "ucie_bytes": 0.0,
                      "energy_j": 0.0}
@@ -159,6 +171,8 @@ class TierLedger:
                 row["rram_spill_bytes"] += tm.bytes_moved
             elif tm.domain == "prefix":
                 row["prefix_adopt_bytes"] += tm.bytes_moved
+            elif tm.domain == "skipped":
+                row["sparse_skipped_bytes"] += tm.bytes_moved
             elif tm.domain == "kv_write":
                 row["kv_append_bytes"] += tm.bytes_moved
             elif tm.domain == "ucie":
@@ -188,8 +202,9 @@ class TierLedger:
         token's context is prompt + (n_generated - 1) — identical for the
         commit-emitted first token and decode-step tokens."""
         ctx = self._req_prompt[rid] + n_generated - 1
-        self._record(rid, decode_token_terms(self.cfg, self.platform, ctx,
-                                             self._layers))
+        self._record(rid, decode_token_terms(
+            self.cfg, self.platform, ctx, self._layers,
+            fused=self.fused_decode, sparse_tau=self.sparse_read_tau))
         row = self._row
         if row is not None:
             row["tokens"] += 1
@@ -197,6 +212,11 @@ class TierLedger:
                 row["dram_hot_ring_bytes"] += (self._kv_elems * ctx
                                                * self._hot_itemsize)
             else:
+                # the store-level hot/cold view: attendable bytes per
+                # tier. Under the sparse read the skipped share of the
+                # cold bytes shows up in sparse_skipped_bytes (from the
+                # `skipped` CostTerms) while this counter keeps the full
+                # attendable figure.
                 row["dram_hot_ring_bytes"] += (
                     self._kv_elems * min(ctx, self._hot_w)
                     * self._hot_itemsize)
@@ -229,7 +249,8 @@ class TierLedger:
         for k in ("dram_hot_ring_bytes", "rram_cold_read_bytes",
                   "rram_spill_bytes", "prefix_adopt_bytes",
                   "dram_stream_bytes", "rram_stream_bytes",
-                  "kv_append_bytes", "ucie_bytes"):
+                  "sparse_skipped_bytes", "kv_append_bytes",
+                  "ucie_bytes"):
             out[k] = math.fsum(r[k] for r in rows)
         return out
 
@@ -253,10 +274,14 @@ class Telemetry:
                  spill_compressed: bool | None = None, clock=None,
                  stats_every: int = 0, snapshot_path: str | None = None,
                  printer=None, max_events: int = 200_000,
-                 max_decisions: int = 10_000):
+                 max_decisions: int = 10_000,
+                 fused_decode: bool | None = None,
+                 sparse_read_tau: float | None = None):
         self.cfg = cfg
         self.platform = platform
         self.spill_compressed = spill_compressed
+        self.fused_decode = fused_decode
+        self.sparse_read_tau = sparse_read_tau
         self.clock = clock or time.perf_counter
         self.stats_every = int(stats_every or 0)
         self.snapshot_path = snapshot_path
@@ -292,10 +317,13 @@ class Telemetry:
         if self.ledger is None and self.cfg is not None:
             self.ledger = TierLedger(
                 self.cfg, self.platform,
-                bool(self.spill_compressed))
+                bool(self.spill_compressed),
+                fused_decode=self.fused_decode,
+                sparse_read_tau=self.sparse_read_tau)
 
     def bind(self, *, cfg=None, spill_compressed=None, clock=None,
-             platform=None, on_snapshot=None):
+             platform=None, on_snapshot=None, fused_decode=None,
+             sparse_read_tau=None):
         """Engine attachment: fill whatever the user left unset. The
         engine's clock always wins — it is the time authority every
         request timestamp already uses."""
@@ -303,6 +331,10 @@ class Telemetry:
             self.cfg = cfg
         if self.spill_compressed is None:
             self.spill_compressed = spill_compressed
+        if self.fused_decode is None:
+            self.fused_decode = fused_decode
+        if self.sparse_read_tau is None:
+            self.sparse_read_tau = sparse_read_tau
         if self.platform is None:
             self.platform = platform
         if clock is not None:

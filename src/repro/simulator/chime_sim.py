@@ -125,10 +125,29 @@ class CostTerm(typing.NamedTuple):
 
     name: str
     domain: str        # dram|rram|compute|ucie|kv_write|overhead|encoder
-    #                  # |spill|prefix|static
+    #                  # |spill|prefix|static|skipped
     time_s: float
     energy_j: float
     bytes_moved: float
+
+
+# Deterministic priced skip fraction of the cold-tier read under the
+# SLIM-style sparse read (sparse_tau > 0). The kernel's measured skip rate
+# is data-dependent (it compares per-page score upper bounds against the
+# live running max), which an analytical cost model cannot see; the ledger
+# and `simulated_efficiency` both price this MODELED fraction of the cold
+# bytes as skipped (zero time, zero energy, bytes under the `skipped`
+# domain) so the two stay reconciled bit-for-bit. Benchmarks report the
+# modeled figure — README documents the contract.
+SPARSE_READ_PRICED_SKIP = 0.5
+
+
+def _hot_itemsize(cfg: ModelConfig) -> int:
+    """Bytes per hot-ring element (the telemetry ledger's accounting)."""
+    if cfg.compute_dtype == "bfloat16":
+        return 2
+    import numpy as np
+    return int(np.dtype(cfg.compute_dtype).itemsize)
 
 
 def cost_layers(cfg: ModelConfig) -> list[dict]:
@@ -154,8 +173,19 @@ def _kernel_terms(name: str, dom_name: str, dom, flops: float,
 
 
 def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
-                       layers: list[dict] | None = None) -> list[CostTerm]:
-    """The cost terms of ONE decode step at context length ``ctx``."""
+                       layers: list[dict] | None = None,
+                       fused: bool = False,
+                       sparse_tau: float = 0.0) -> list[CostTerm]:
+    """The cost terms of ONE decode step at context length ``ctx``.
+
+    ``fused`` prices the fused paged-decode kernel over a tiered store:
+    the hot ring streams full-precision from DRAM while the cold pages
+    stream int8 (+ f32 scales) from the RRAM tier — exactly the byte
+    split the telemetry ledger's hot/cold row counters report, so the
+    two reconcile. With ``sparse_tau`` > 0 the modeled
+    `SPARSE_READ_PRICED_SKIP` fraction of the cold bytes moves to a
+    zero-cost `skipped` term. A fused FLAT store touches the same bytes
+    as the unfused path and is priced identically."""
     if layers is None:
         layers = _layer_kernels(cfg)
     n_layers = len(layers)
@@ -168,11 +198,35 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
                       if platform.cross_domain_bw else 0.0)
     kv_tok = kv_bytes_per_token(cfg)
     n_attn = max(sum(1 for l in layers if l["has_attn"]), 1)
+    fused_tiered = fused and cfg.kv_policy == "tiered"
+    if fused_tiered:
+        from repro.models.counting import (kv_elems_per_token,
+                                           kv_scale_elems_per_token)
+        W = cfg.kv_hot_window
+        hot_b = kv_elems_per_token(cfg) * min(ctx, W) * _hot_itemsize(cfg)
+        cold_b = max(ctx - W, 0) * (kv_elems_per_token(cfg)
+                                    + 4 * kv_scale_elems_per_token(cfg))
+        skip_b = cold_b * SPARSE_READ_PRICED_SKIP if sparse_tau > 0 else 0.0
+        touched_b = cold_b - skip_b
     terms: list[CostTerm] = []
     for lay in layers:
         for name, dom_name, flops, bytes_r in lay["kernels"]:
             dom = dram if dom_name == "dram" else rram
             if name == "FUSED_ATTN_STREAM":
+                if fused_tiered:
+                    hb, cb, sb = (hot_b / n_attn, touched_b / n_attn,
+                                  skip_b / n_attn)
+                    terms += _kernel_terms(
+                        "FUSED_PAGED_DECODE", "dram", dram, hb, hb,
+                        platform.compute_pj_flop)
+                    terms += _kernel_terms(
+                        "FUSED_PAGED_DECODE/cold", "rram", rram, cb, cb,
+                        platform.compute_pj_flop)
+                    if sb:
+                        terms.append(CostTerm(
+                            "FUSED_PAGED_DECODE/skip", "skipped",
+                            0.0, 0.0, sb))
+                    continue
                 # stream the KV cache for this layer
                 bytes_r = kv_tok / n_attn * ctx
                 flops = bytes_r  # ~1 MAC per cached byte at fp16
@@ -337,12 +391,15 @@ def closing_terms(platform: Platform,
 def request_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                   output_tokens: int, image: bool,
                   layers: list[dict] | None = None,
-                  cached_prefix: int = 0) -> list[CostTerm]:
+                  cached_prefix: int = 0,
+                  fused: bool = False,
+                  sparse_tau: float = 0.0) -> list[CostTerm]:
     """Every cost term of one served request: prefill (tail-only when
     ``cached_prefix`` positions came from the shared prefix store, plus
     the adoption transfer), each decode step at its growing context, and
     the closing static charge — the unit `simulated_efficiency` and the
-    telemetry ledger both sum."""
+    telemetry ledger both sum. ``fused``/``sparse_tau`` select the fused
+    paged-decode pricing for the decode steps (see `decode_token_terms`)."""
     if layers is None:
         layers = _layer_kernels(cfg)
     terms = prefill_terms(cfg, platform, text_tokens, image, layers,
@@ -351,7 +408,8 @@ def request_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
         terms += prefix_adopt_terms(cfg, platform, cached_prefix)
     prompt = (visual_tokens(cfg) if image else 0) + text_tokens
     for step in range(output_tokens):
-        terms += decode_token_terms(cfg, platform, prompt + step, layers)
+        terms += decode_token_terms(cfg, platform, prompt + step, layers,
+                                    fused=fused, sparse_tau=sparse_tau)
     terms += closing_terms(platform, terms)
     return terms
 

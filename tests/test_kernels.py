@@ -59,9 +59,72 @@ def test_attn_stream_blocks_sweep():
                                    rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("S,L,causal", [
+    (200, 200, True),     # ragged square (not a 128-multiple)
+    (200, 200, False),
+    (72, 200, True),      # ragged cached-prefix (both non-multiples)
+    (130, 384, True),     # ragged S over an aligned L
+])
+def test_attn_stream_ragged_shapes(S, L, causal):
+    """Regression: lengths that aren't block multiples used to hard-assert;
+    they now pad to the grid, mask the phantom keys, and slice the output."""
+    B, H, Hkv, D = 1, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, L, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, L, D), jnp.float32)
+    out = attn_stream(q, k, v, causal=causal, interpret=True)
+    want = ref.attn_stream_ref(q, k, v, causal=causal)
+    assert out.shape == (B, H, S, D)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attn_stream_causal_s_gt_l_raises():
+    """Regression: S > L with causal=True made q_offset negative, leaving
+    early queries with zero attendable keys; now an explicit error."""
+    B, H, S, L, D = 1, 2, 160, 128, 64
+    ks = jax.random.split(jax.random.PRNGKey(12), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, L, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, L, D), jnp.float32)
+    with pytest.raises(ValueError, match="S <= L"):
+        attn_stream(q, k, v, causal=True, interpret=True)
+    # non-causal S > L stays legal: every key is visible to every query
+    out = attn_stream(q, k, v, causal=False, interpret=True)
+    want = ref.attn_stream_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_attn_stream_fully_masked_blocks_skipped():
+    """Blocks entirely above the causal diagonal are pl.when-skipped; with
+    small k-blocks most of the grid is dead and the result must stay exact
+    (no reliance on exp underflow zeroing whole-NEG_INF blocks)."""
+    B, H, S, D = 1, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    out = attn_stream(q, k, v, causal=True, block_q=32, block_k=32,
+                      interpret=True)
+    want = ref.attn_stream_ref(q, k, v, causal=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_attn_vmem_budget():
     # production tile choice fits v5e VMEM with generous headroom
     assert attn_stream_vmem_bytes(128, 128, 256) < V5E_VMEM // 8
+    # the estimate must charge the in-kernel f32 copies of the q/k/v
+    # tiles (cast before the dots), not just the HBM-dtype tiles
+    bq = bk = 128
+    D = 256
+    tiles_bf16 = (bq * D + 2 * bk * D) * 2
+    casts_f32 = (bq * D + 2 * bk * D) * 4
+    assert attn_stream_vmem_bytes(bq, bk, D) >= tiles_bf16 + casts_f32
 
 
 # ---------------------------------------------------------------------------

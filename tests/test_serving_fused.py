@@ -1,0 +1,161 @@
+"""Serving-level contracts for the fused paged-decode attention path.
+
+The fused kernel (`kernels/paged_decode.py`) is opt-in behind
+``fused_decode`` / ``REPRO_SERVE_FUSED_DECODE``; the unfused two-segment
+merge stays the parity oracle. Held here:
+
+  * engine token streams are IDENTICAL fused vs unfused (tiered + flat,
+    local + sharded) — with the sparse read off the kernel is an exact
+    (f32-associativity) twin and greedy argmax never flips;
+  * MLA-only architectures resolve the knob to off (the fused path is
+    GQA-only) and keep serving byte-identically;
+  * knob resolution: explicit arg > cfg flag > env var, sparse read
+    gated on fused;
+  * the telemetry TierLedger reconciles BIT-for-bit with
+    `simulated_efficiency` on drained fused and fused+sparse runs, and
+    the sparse run books skipped bytes.
+"""
+
+import jax
+import pytest
+from conftest import build_model as _model
+from conftest import generated as _generated
+from conftest import make_mesh as _mesh
+from conftest import make_requests as _requests
+
+from repro.serving import (Engine, LocalBackend, ShardedBackend,
+                           simulated_efficiency)
+from repro.serving.telemetry import Telemetry
+
+jax.config.update("jax_platform_name", "cpu")
+
+SPECS = [(16, 6), (13, 6), (8, 4)]
+
+
+def _run(backend, cfg, specs=SPECS, seed=3, telemetry=None):
+    eng = Engine(backend, telemetry=telemetry)
+    done = eng.run(_requests(cfg, specs, seed=seed), max_steps=300)
+    return _generated(done), done
+
+
+# ---------------------------------------------------------------------------
+# token parity, local
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kv_policy", ["tiered", "flat"])
+def test_fused_matches_unfused_local(kv_policy):
+    cfg, model, params = _model(kv_policy=kv_policy)
+    base, _ = _run(LocalBackend(model, params, 2, 24,
+                                fused_decode=False), cfg)
+    be = LocalBackend(model, params, 2, 24, fused_decode=True)
+    assert be.fused_decode and be.model.cfg.fused_decode
+    fused, _ = _run(be, cfg)
+    assert fused == base
+
+
+def test_fused_matches_unfused_ragged_slots():
+    """Slots at different context depths share the vmapped kernel: mixed
+    prompt lengths + slot recycling through 2 slots."""
+    cfg, model, params = _model()
+    specs = [(16, 8), (5, 8), (13, 4), (8, 6)]
+    base, _ = _run(LocalBackend(model, params, 2, 24), cfg, specs)
+    fused, _ = _run(LocalBackend(model, params, 2, 24,
+                                 fused_decode=True), cfg, specs)
+    assert fused == base
+
+
+def test_mla_arch_resolves_knob_off_and_serves_identically():
+    cfg, model, params = _model("deepseek-v2-lite")
+    be = LocalBackend(model, params, 2, 24, fused_decode=True,
+                      sparse_read=0.1)
+    assert not be.fused_decode          # GQA-only: knob stays truthful
+    assert be.sparse_read_tau == 0.0    # sparse gated on fused
+    fused, _ = _run(be, cfg)
+    base, _ = _run(LocalBackend(model, params, 2, 24), cfg)
+    assert fused == base
+
+
+# ---------------------------------------------------------------------------
+# token parity, sharded
+# ---------------------------------------------------------------------------
+def test_fused_matches_unfused_sharded():
+    """Fused sharded == unfused local on whatever devices this process
+    has (1 locally, 8 in the CI multi-device job)."""
+    cfg, model, params = _model()
+    base, _ = _run(LocalBackend(model, params, 4, 24), cfg)
+    be = ShardedBackend(model, params, 4, 24, mesh=_mesh(),
+                        fused_decode=True)
+    assert be.fused_decode
+    fused, _ = _run(be, cfg)
+    assert fused == base
+    assert Engine(be).endurance_report()["write_once_ok"]
+
+
+# ---------------------------------------------------------------------------
+# knob resolution
+# ---------------------------------------------------------------------------
+def test_env_knobs_resolve(monkeypatch):
+    cfg, model, params = _model()
+    monkeypatch.setenv("REPRO_SERVE_FUSED_DECODE", "1")
+    monkeypatch.setenv("REPRO_SERVE_SPARSE_READ", "0.01")
+    be = LocalBackend(model, params, 2, 24)
+    assert be.fused_decode and be.sparse_read_tau == 0.01
+    assert be.model.cfg.sparse_read_tau == 0.01
+    # explicit arg beats the env
+    be_off = LocalBackend(model, params, 2, 24, fused_decode=False)
+    assert not be_off.fused_decode and be_off.sparse_read_tau == 0.0
+    # garbage env value must not wedge startup
+    monkeypatch.setenv("REPRO_SERVE_SPARSE_READ", "not-a-float")
+    assert LocalBackend(model, params, 2, 24).sparse_read_tau == 0.0
+
+
+def test_cfg_flag_resolves_without_env():
+    cfg, model, params = _model()
+    from repro.models import Model
+    m2 = Model(cfg.replace(fused_decode=True, sparse_read_tau=1e-3))
+    be = LocalBackend(m2, params, 2, 24)
+    assert be.fused_decode and be.sparse_read_tau == 1e-3
+
+
+# ---------------------------------------------------------------------------
+# ledger reconciliation
+# ---------------------------------------------------------------------------
+def _reconcile(fused, tau=0.0):
+    cfg, model, params = _model()
+    be = LocalBackend(model, params, 2, 24, fused_decode=fused,
+                      sparse_read=tau)
+    tel = Telemetry()
+    _, done = _run(be, cfg, telemetry=tel)
+    sim = simulated_efficiency(cfg, done,
+                               fused_decode=be.fused_decode,
+                               sparse_read_tau=be.sparse_read_tau)
+    led = tel.ledger.totals()
+    return led, sim
+
+
+def test_ledger_reconciles_bit_for_bit_fused():
+    led, sim = _reconcile(fused=True)
+    assert led["sim_energy_j"] == sim["sim_energy_j"]
+    assert led["sim_total_s"] == sim["sim_total_s"]
+    assert sim["sim_fused_decode"] and sim["sim_sparse_read_tau"] == 0.0
+    assert led["sparse_skipped_bytes"] == 0.0
+
+
+def test_ledger_reconciles_bit_for_bit_sparse():
+    led, sim = _reconcile(fused=True, tau=1e-3)
+    assert led["sim_energy_j"] == sim["sim_energy_j"]
+    assert led["sim_total_s"] == sim["sim_total_s"]
+    assert led["sparse_skipped_bytes"] > 0.0
+    led_f, sim_f = _reconcile(fused=True)
+    # the priced skip fraction makes the sparse run strictly cheaper
+    assert led["sim_energy_j"] < led_f["sim_energy_j"]
+
+
+def test_fused_and_unfused_price_differently_but_both_reconcile():
+    led_u, sim_u = _reconcile(fused=False)
+    led_f, sim_f = _reconcile(fused=True)
+    assert led_u["sim_energy_j"] == sim_u["sim_energy_j"]
+    assert not sim_u["sim_fused_decode"]
+    # fused moves the cold bytes to the RRAM domain: totals must differ
+    assert led_f["sim_energy_j"] != led_u["sim_energy_j"]
+    assert led_f["sim_energy_split_j"]["rram"] \
+        > led_u["sim_energy_split_j"]["rram"]
