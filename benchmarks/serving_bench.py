@@ -75,13 +75,18 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
               idle_offload_steps: int | None = None,
               rram_spill_bytes: float | None = None,
               fused_decode: bool | None = None,
-              sparse_read: float | None = None) -> dict:
+              sparse_read: float | None = None,
+              weight_stream: int | None = None) -> dict:
     backend = make_backend(backend_kind, model, params,
                            num_slots=concurrency, max_len=max_len,
                            mesh=mesh, n_spill=n_spill,
                            spill_compress=spill_compress,
                            fused_decode=fused_decode,
-                           sparse_read=sparse_read)
+                           sparse_read=sparse_read,
+                           weight_stream=weight_stream)
+    # price with the backend's RESOLVED cfg: the per-layer "streamed"
+    # flags the weight-stream pricing keys off live in cost_layers(cfg)
+    sim_cfg = backend.sim_context()[0]
 
     def fresh_engine(telemetry=None):
         # verbatim: None consults the env knobs, explicit 0 disables.
@@ -153,6 +158,10 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["spill_lane_bytes"] = backend.spill_lane_bytes()
     m["fused_decode"] = bool(backend.fused_decode)
     m["sparse_read_tau"] = float(backend.sparse_read_tau)
+    m["weight_stream"] = int(backend.weight_stream)
+    wb_dram, wb_rram = backend.weight_bytes()
+    m["weight_bytes_dram"] = int(wb_dram)
+    m["weight_bytes_rram"] = int(wb_rram)
     m["idle_offload_steps"] = getattr(engine.scheduler,
                                       "idle_offload_steps", None) or 0
     m["idle_offloads"] = engine.stats["idle_offloads"]
@@ -166,9 +175,10 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     m["engine_stats"] = dict(engine.stats)
     m["endurance"] = engine.endurance_report()
     m["sim"] = simulated_efficiency(
-        cfg, done, spill_compressed=backend.spill_compress,
+        sim_cfg, done, spill_compressed=backend.spill_compress,
         fused_decode=backend.fused_decode,
-        sparse_read_tau=backend.sparse_read_tau)
+        sparse_read_tau=backend.sparse_read_tau,
+        weight_stream=bool(backend.weight_stream))
     # third pass: telemetry ON over the same stream — records the
     # per-tier traffic/energy ledger + phase breakdown into the BENCH
     # trajectory, checks the ledger reconciles bit-for-bit against
@@ -183,10 +193,12 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
     while not tel_engine.idle:
         tel_engine.step()
     tel_wall = time.perf_counter() - t0
-    tel_sim = simulated_efficiency(cfg, tel_engine.finished,
+    tel_sim = simulated_efficiency(sim_cfg, tel_engine.finished,
                                    spill_compressed=backend.spill_compress,
                                    fused_decode=backend.fused_decode,
-                                   sparse_read_tau=backend.sparse_read_tau)
+                                   sparse_read_tau=backend.sparse_read_tau,
+                                   weight_stream=bool(
+                                       backend.weight_stream))
     led = tel.ledger.totals()
     summary = tel.summary()
     m["telemetry"] = {
@@ -194,7 +206,8 @@ def bench_one(model, params, cfg, backend_kind: str, concurrency: int,
                        ("dram_hot_ring_bytes", "rram_cold_read_bytes",
                         "rram_spill_bytes", "dram_stream_bytes",
                         "rram_stream_bytes", "sparse_skipped_bytes",
-                        "kv_append_bytes", "ucie_bytes")},
+                        "weight_stream_bytes", "kv_append_bytes",
+                        "ucie_bytes")},
         "energy_split_j": led["sim_energy_split_j"],
         "phase_s": summary["phase_s"],
         "decisions": summary["decisions"],
@@ -403,6 +416,12 @@ def main(argv=None):
                     help="SLIM-style sparse-read threshold inside the "
                          "fused kernel (0 = exact; needs --fused-decode; "
                          "default: consult REPRO_SERVE_SPARSE_READ)")
+    ap.add_argument("--weight-stream", type=int, default=None, metavar="W",
+                    help="RRAM weight streaming: run the streamed-vs-"
+                         "resident comparison at this DRAM sliding-"
+                         "window depth (0 = off even under "
+                         "REPRO_SERVE_WEIGHT_STREAM; default: consult "
+                         "the env knob)")
     ap.add_argument("--prefix-share", type=int, default=0, metavar="N",
                     help="prefix-sharing comparison: every request opens "
                          "with the same N-token system prompt (and VQA "
@@ -567,6 +586,36 @@ def main(argv=None):
         print(f"[bench] oversubscription x{args.oversubscribe:g} buys "
               f"x{speedup:.2f} completed tok/s over the "
               f"admission-blocked baseline")
+    elif args.weight_stream:
+        # streamed-vs-resident weight comparison over the SAME stream at
+        # the same slot count: resident weights are the parity oracle
+        # (tokens must match exactly); the streamed run shrinks the DRAM
+        # weight working set to embeddings + head + per-unit sliding
+        # windows and pays the per-layer RRAM fetch energy in the sim
+        for label, w in (("resident", 0),
+                         (f"streamed W={args.weight_stream}",
+                          args.weight_stream)):
+            r = bench_one(model, params, cfg, args.backend,
+                          args.concurrency, n_requests, args.prompt_len,
+                          args.gen, max_len, mesh=mesh,
+                          chunk_tokens=args.chunk_tokens,
+                          token_budget=args.token_budget,
+                          image_every=args.image_every,
+                          priority_every=args.priority_every,
+                          spill_compress=args.spill_compress,
+                          idle_offload_steps=args.idle_offload_steps,
+                          fused_decode=args.fused_decode,
+                          sparse_read=args.sparse_read,
+                          weight_stream=w)
+            results.append(r)
+            show(f"weights {label}", r)
+        res, st = results
+        print(f"[bench] weight streaming W={st['weight_stream']}: DRAM "
+              f"weight working set {st['weight_bytes_dram']} B vs "
+              f"resident {res['weight_bytes_dram']} B "
+              f"({st['weight_bytes_rram']} B homed in RRAM); sim energy "
+              f"{st['sim']['sim_energy_j']:.3f} J vs "
+              f"{res['sim']['sim_energy_j']:.3f} J resident")
     else:
         for c in sorted({1, args.concurrency}):
             r = bench_one(model, params, cfg, args.backend, c, n_requests,
@@ -603,6 +652,7 @@ def main(argv=None):
             "idle_offload_steps": args.idle_offload_steps or 0,
             "fused_decode": bool(args.fused_decode),
             "sparse_read": args.sparse_read or 0.0,
+            "weight_stream": args.weight_stream or 0,
             "runs": results,
         })
         print(f"[bench] appended to {BENCH_JSON}")

@@ -122,6 +122,17 @@ class ModelConfig:
     # serving time via REPRO_SERVE_FUSED_DECODE / REPRO_SERVE_SPARSE_READ.
     fused_decode: bool = False
     sparse_read_tau: float = 0.0          # SLIM-style skip threshold; 0=off
+    # RRAM weight streaming (Cambricon-LLM shape): 0 = all params
+    # DRAM-resident; W >= 1 keeps embeddings/head plus a W-repeat DRAM
+    # sliding window per scanned unit resident and streams the remaining
+    # per-layer weight slices from the simulated RRAM tier, prefetched
+    # one layer ahead inside the scan body. Also settable at serving time
+    # via REPRO_SERVE_WEIGHT_STREAM. Only units with repeats > W stream.
+    weight_stream_layers: int = 0
+    # partial unroll of the per-unit layer scan — the latency-hiding
+    # window `runtime/overlap.py` documents (overlaps the next layer's
+    # weight fetch with the current layer's compute). 1 = seed behaviour.
+    scan_unroll: int = 1
 
     def __post_init__(self):
         if self.head_dim == 0:

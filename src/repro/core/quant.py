@@ -130,11 +130,22 @@ def spill_codec_bound(x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 # gradient compression (cross-pod int8 all-reduce)
 # ---------------------------------------------------------------------------
-def compress_grad(g: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Per-tensor int8 with stochastic-free symmetric scaling; the all-reduce
-    then moves 1/4 of the bf16 bytes over the pod axis."""
+def grad_scale(g: jax.Array) -> jax.Array:
+    """Per-tensor symmetric int8 scale (max|g|/127; 1.0 for an all-zero
+    tensor). Split out so a collective can agree on a SHARED scale
+    (e.g. pmax over pods) before anything quantizes."""
     maxv = jnp.max(jnp.abs(g))
-    scale = jnp.where(maxv > 0, maxv / 127.0, 1.0)
+    return jnp.where(maxv > 0, maxv / 127.0, 1.0)
+
+
+def compress_grad(g: jax.Array, scale: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor int8 with stochastic-free symmetric scaling; the all-reduce
+    then moves 1/4 of the bf16 bytes over the pod axis. ``scale`` imposes
+    an externally-agreed grid (a shared cross-pod scale); None derives the
+    tensor's own `grad_scale`."""
+    if scale is None:
+        scale = grad_scale(g)
     q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
     return q, scale
 

@@ -149,6 +149,15 @@ def main(argv=None):
                          "K/V pages straight from the tiered layout "
                          "with in-kernel int8 dequant (GQA archs only; "
                          "default: consult REPRO_SERVE_FUSED_DECODE)")
+    ap.add_argument("--weight-stream", type=int, default=None,
+                    metavar="W",
+                    help="RRAM weight streaming: keep a W-repeat DRAM "
+                         "sliding window per scanned unit and prefetch "
+                         "the remaining per-layer weight slices from "
+                         "RRAM one layer ahead inside the scan "
+                         "(0 = off even under "
+                         "REPRO_SERVE_WEIGHT_STREAM; default: consult "
+                         "the env knob)")
     ap.add_argument("--sparse-read", type=float, default=None,
                     metavar="TAU",
                     help="SLIM-style adaptive-threshold sparse read "
@@ -205,7 +214,8 @@ def main(argv=None):
         max_len=max_len,
         mesh=get_mesh(args.mesh) if args.backend == "sharded" else None,
         n_spill=args.spill_lanes, spill_compress=args.spill_compress,
-        fused_decode=args.fused_decode, sparse_read=args.sparse_read)
+        fused_decode=args.fused_decode, sparse_read=args.sparse_read,
+        weight_stream=args.weight_stream)
     # telemetry is opt-in: any of the export flags (or --stats-every)
     # turns the hub on; otherwise Engine installs the no-op NullTelemetry
     want_tel = (args.trace_out or args.metrics_out or args.snapshots_out
@@ -276,15 +286,25 @@ def main(argv=None):
         print(f"[serve] endurance: max writes/cold-slot="
               f"{rep['max_writes_per_cold_slot']:.2f} "
               f"(write-once {'OK' if rep['write_once_ok'] else 'VIOLATED'})")
-    sim = simulated_efficiency(cfg, done,
+    # price with the backend's RESOLVED cfg (weight_stream_layers /
+    # fused_decode baked in): the per-layer "streamed" flags the weight-
+    # stream pricing keys off live in cost_layers(cfg)
+    sim_cfg, _ = backend.sim_context()
+    sim = simulated_efficiency(sim_cfg, done,
                                spill_compressed=backend.spill_compress,
                                fused_decode=backend.fused_decode,
-                               sparse_read_tau=backend.sparse_read_tau)
+                               sparse_read_tau=backend.sparse_read_tau,
+                               weight_stream=bool(backend.weight_stream))
     fused_note = ""
     if backend.fused_decode:
         fused_note = " [fused decode" + (
             f", sparse tau={backend.sparse_read_tau:g}]"
             if backend.sparse_read_tau else "]")
+    if backend.weight_stream:
+        dram_w, rram_w = backend.weight_bytes()
+        fused_note += (f" [weight stream W={backend.weight_stream}: "
+                       f"{dram_w / 2**20:.1f} MiB DRAM working set, "
+                       f"{rram_w / 2**20:.1f} MiB streamed from RRAM]")
     print(f"[serve] simulated on {sim['platform']}: "
           f"{sim['sim_tokens_per_j']:.1f} tok/J, "
           f"{sim['sim_energy_j']:.3f} J total{fused_note}")

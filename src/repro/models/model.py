@@ -29,6 +29,7 @@ from repro.models import attention as A
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import vision as V
+from repro.runtime.overlap import unrolled_scan
 from repro.sharding import ShardingRules, logical_constraint, tree_shardings
 
 MAX_LEARNED_POS = 32_768
@@ -90,6 +91,22 @@ class Model:
         # pad vocab (Megatron-style) so embeddings/logits shard over 'model'
         m = cfg.vocab_pad_multiple
         self.padded_vocab = ((cfg.vocab_size + m - 1) // m) * m
+        self._stream_units = frozenset(self.streamed_units())
+
+    def streamed_units(self) -> tuple[int, ...]:
+        """Plan-unit indices whose per-layer weight slices live in the
+        simulated RRAM tier under ``cfg.weight_stream_layers`` (W): a
+        unit streams iff it is scanned (repeats > 1 with scan_layers),
+        carries its own per-layer params (shared-attention units do
+        not), and its repeat count exceeds the W-repeat DRAM sliding
+        window — otherwise the whole unit already fits the window and
+        stays resident."""
+        W = int(getattr(self.cfg, "weight_stream_layers", 0) or 0)
+        if W < 1 or not self.cfg.scan_layers:
+            return ()
+        return tuple(ui for ui, u in enumerate(self.plan)
+                     if u.repeats > W
+                     and u.block.mixer != "attn_shared")
 
     # ------------------------------------------------------------------
     # parameters
@@ -520,14 +537,39 @@ class Model:
                        if ncs and jax.tree.leaves(ncs[0]) else {})
             return x, stacked, aux_t
 
+        unroll = max(int(getattr(cfg, "scan_unroll", 1) or 1), 1)
+        if ui in self._stream_units and up is not None:
+            # RRAM weight streaming: the scan carry holds the CURRENT
+            # layer's params (the DRAM prefetch buffer) while xs delivers
+            # the NEXT layer's slice from the stacked (tier-resident)
+            # array — the `runtime/overlap.py` double-buffer shape, so
+            # the fetch of layer l+1 sits in the same unrolled window as
+            # the compute of layer l. Values and order are untouched:
+            # iteration r still computes with up[r], bit-identical to the
+            # resident scan below.
+            bp0 = jax.tree.map(lambda a: a[0], up)
+            nxt = jax.tree.map(lambda a: jnp.roll(a, -1, axis=0), up)
+
+            def stream_body(carry, xs):
+                x, aux_t, bp = carry
+                bp_next, bc = xs
+                x, nc, aux = body(x, bp, bc)
+                return (x, aux_t + aux, bp_next), nc
+
+            (x, aux_t, _), new_cache = unrolled_scan(
+                stream_body, (x, jnp.zeros((), jnp.float32), bp0),
+                (nxt, ucache), unroll=max(unroll, 2))
+            return x, new_cache, aux_t
+
         def scan_body(carry, xs):
             x, aux_t = carry
             bp, bc = xs
             x, nc, aux = body(x, bp, bc)
             return (x, aux_t + aux), nc
 
-        (x, aux_t), new_cache = jax.lax.scan(
-            scan_body, (x, jnp.zeros((), jnp.float32)), (up, ucache))
+        (x, aux_t), new_cache = unrolled_scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), (up, ucache),
+            unroll=unroll)
         return x, new_cache, aux_t
 
     def _forward(self, params: dict, batch: dict, mode: str,

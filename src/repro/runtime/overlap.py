@@ -23,23 +23,29 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.quant import compress_grad, decompress_grad
+from repro.core.quant import compress_grad, decompress_grad, grad_scale
 
 
 def compressed_pod_allreduce(grads, mesh: Mesh):
     """int8-compressed mean-reduction of a grad pytree over the 'pod' axis.
-    Layout inside each pod is untouched (specs preserved per leaf)."""
+    Layout inside each pod is untouched (specs preserved per leaf).
+
+    Every pod quantizes onto the SAME int8 grid: the per-pod scales are
+    pmax-reduced first and that shared (truly conservative) scale is used
+    both to quantize and to dequantize the int32 payload sum. Summing
+    payloads quantized with *different* per-pod scales and dequantizing
+    with their mean is wrong whenever pod magnitudes differ — the mean is
+    a scale no pod actually used."""
     if "pod" not in mesh.shape:
         return grads
     npods = mesh.shape["pod"]
 
     def one(g):
         def body(gl):
-            q, scale = compress_grad(gl)
+            shared = jax.lax.pmax(grad_scale(gl), "pod")
+            q, _ = compress_grad(gl, scale=shared)
             qsum = jax.lax.psum(q.astype(jnp.int32), "pod")
-            ssum = jax.lax.psum(scale, "pod")  # conservative shared scale
-            return decompress_grad(qsum, ssum / npods,
-                                   gl.dtype) / npods
+            return decompress_grad(qsum, shared, gl.dtype) / npods
 
         spec = P(*([None] * g.ndim))
         return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec,

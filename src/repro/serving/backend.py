@@ -64,6 +64,7 @@ import jax.numpy as jnp
 
 from repro.core import kv_tiers as KT
 from repro.models import Model
+from repro.models.counting import streamed_unit_indices, weight_stream_split
 from repro.serving.kv_pool import (KVPoolState, TieredKVPool, batch_axes,
                                    map_spill_stores, slot_kv_bytes,
                                    spill_lane_bytes, tree_expand,
@@ -106,6 +107,22 @@ def _resolve_sparse_read(tau: float | None) -> float:
         return 0.0
 
 
+def _resolve_weight_stream(layers: int | None) -> int:
+    """Resolve the RRAM weight-streaming window (W = DRAM sliding-window
+    repeats per streamed scan unit; 0 = off): an explicit value wins;
+    None consults ``REPRO_SERVE_WEIGHT_STREAM``. Unparsable or negative
+    values resolve to 0 — an env var must never wedge startup."""
+    if layers is not None:
+        return max(int(layers), 0)
+    raw = os.environ.get("REPRO_SERVE_WEIGHT_STREAM", "").strip()
+    if not raw:
+        return 0
+    try:
+        return max(int(raw), 0)
+    except ValueError:
+        return 0
+
+
 @runtime_checkable
 class InferenceBackend(Protocol):
     """What the engine needs from an executor. Any object with this
@@ -140,6 +157,18 @@ class InferenceBackend(Protocol):
     sparse_read_tau: float    # SLIM-style adaptive-threshold sparse
     #   read inside the fused kernel (0.0 = exact). Only meaningful
     #   with fused_decode; REPRO_SERVE_SPARSE_READ / CLI --sparse-read.
+    weight_stream: int        # RRAM weight-streaming window W (repeats
+    #   of each streamed scan unit kept DRAM-resident; 0 = off, the
+    #   whole param set DRAM-resident). Resolves to 0 when nothing would
+    #   actually stream (no scanned unit deeper than the window), so the
+    #   knob stays truthful for the scheduler's weight charge and sim
+    #   pricing. REPRO_SERVE_WEIGHT_STREAM / CLI --weight-stream.
+
+    def weight_bytes(self) -> tuple[int, int]:
+        """(dram_resident, rram_streamed) param bytes under the resolved
+        weight-streaming window — what the engine hands the scheduler's
+        DRAM weight charge (whole set DRAM-resident at W=0)."""
+        ...
 
     def slot_kv_bytes(self, *, length: int | None = None
                       ) -> tuple[int, int]:
@@ -218,7 +247,8 @@ class _JittedBackend:
                  prefix_blocks: int | None = None,
                  block_tokens: int | None = None,
                  fused_decode: bool | None = None,
-                 sparse_read: float | None = None):
+                 sparse_read: float | None = None,
+                 weight_stream: int | None = None):
         cfg = model.cfg
         if cfg.is_encoder:
             raise ValueError("encoder-only model cannot be served")
@@ -250,6 +280,23 @@ class _JittedBackend:
                 != float(getattr(cfg, "sparse_read_tau", 0.0))):
             cfg = cfg.replace(fused_decode=self.fused_decode,
                               sparse_read_tau=self.sparse_read_tau)
+            model = Model(cfg, model.rules)
+        # RRAM weight streaming: same precedence discipline (explicit
+        # arg > cfg flag > env), and the same truthfulness gate — the
+        # window resolves to 0 when no scan unit would actually stream
+        # (python-loop layers, or nothing deeper than W repeats), so the
+        # scheduler's weight charge and the sim pricing never claim a
+        # transfer the model does not perform.
+        if weight_stream is None and getattr(cfg, "weight_stream_layers",
+                                             0):
+            weight_stream = cfg.weight_stream_layers
+        W = _resolve_weight_stream(weight_stream)
+        if W and not streamed_unit_indices(
+                cfg.replace(weight_stream_layers=W)):
+            W = 0
+        self.weight_stream = W
+        if W != int(getattr(cfg, "weight_stream_layers", 0) or 0):
+            cfg = cfg.replace(weight_stream_layers=W)
             model = Model(cfg, model.rules)
         self.model = model
         self.params = params
@@ -534,6 +581,9 @@ class _JittedBackend:
         return spill_lane_bytes(self.model, self.max_len,
                                 self.spill_compress)
 
+    def weight_bytes(self) -> tuple[int, int]:
+        return weight_stream_split(self.model.cfg)
+
     def sim_context(self) -> tuple:
         return self.model.cfg, self.spill_compress
 
@@ -710,7 +760,8 @@ class ShardedBackend(_JittedBackend):
                  prefix_blocks: int | None = None,
                  block_tokens: int | None = None,
                  fused_decode: bool | None = None,
-                 sparse_read: float | None = None):
+                 sparse_read: float | None = None,
+                 weight_stream: int | None = None):
         if mesh is None:
             from repro.launch.mesh import make_local_mesh
             mesh = make_local_mesh()
@@ -748,7 +799,8 @@ class ShardedBackend(_JittedBackend):
                          prefix_blocks=prefix_blocks,
                          block_tokens=block_tokens,
                          fused_decode=fused_decode,
-                         sparse_read=sparse_read)
+                         sparse_read=sparse_read,
+                         weight_stream=weight_stream)
 
     def _place(self, cache: dict) -> dict:
         return jax.device_put(cache, self._pool_sh)
@@ -792,7 +844,8 @@ def make_backend(kind: str, model: Model, params, *, num_slots: int,
                  prefix_blocks: int | None = None,
                  block_tokens: int | None = None,
                  fused_decode: bool | None = None,
-                 sparse_read: float | None = None) -> InferenceBackend:
+                 sparse_read: float | None = None,
+                 weight_stream: int | None = None) -> InferenceBackend:
     """CLI-facing factory: ``kind`` in {'local', 'sharded'}."""
     if kind == "local":
         return LocalBackend(model, params, num_slots, max_len,
@@ -801,7 +854,8 @@ def make_backend(kind: str, model: Model, params, *, num_slots: int,
                             prefix_blocks=prefix_blocks,
                             block_tokens=block_tokens,
                             fused_decode=fused_decode,
-                            sparse_read=sparse_read)
+                            sparse_read=sparse_read,
+                            weight_stream=weight_stream)
     if kind == "sharded":
         return ShardedBackend(model, params, num_slots, max_len, mesh=mesh,
                               n_spill=n_spill,
@@ -809,5 +863,6 @@ def make_backend(kind: str, model: Model, params, *, num_slots: int,
                               prefix_blocks=prefix_blocks,
                               block_tokens=block_tokens,
                               fused_decode=fused_decode,
-                              sparse_read=sparse_read)
+                              sparse_read=sparse_read,
+                              weight_stream=weight_stream)
     raise ValueError(f"unknown backend kind {kind!r}")

@@ -168,7 +168,16 @@ class Engine:
     blocks take exactly ONE physical write regardless of how many
     requests reference them (the RRAM write-once discipline). The slot
     pool semantics are unchanged either way, so ``Engine(paged=False)``
-    stays the exact parity oracle."""
+    stays the exact parity oracle.
+
+    ``charge_weights`` (env ``REPRO_SERVE_CHARGE_WEIGHTS``; default None
+    = on iff the backend resolved weight streaming on) charges the
+    backend's DRAM-resident weight working set
+    (`backend.weight_bytes()[0]`) off the top of the scheduler's DRAM
+    budget, so admission sees weights + KV, not KV alone — the gate that
+    denies an over-budget resident model (`dram_weights`) and admits its
+    weight-streamed twin, whose working set is only embeddings + head +
+    the per-unit sliding windows."""
 
     def __init__(self, backend,
                  scheduler: FCFSScheduler | None = None,
@@ -179,6 +188,7 @@ class Engine:
                  idle_offload_steps: int | None = None,
                  paged: bool | None = None,
                  prefix_cache: bool | None = None,
+                 charge_weights: bool | None = None,
                  telemetry=None):
         self.backend: InferenceBackend = backend
         self.max_len = backend.max_len
@@ -246,6 +256,22 @@ class Engine:
         n_spill = getattr(backend, "n_spill", 0)
         lane_fn = getattr(backend, "spill_lane_bytes", None)
         lane_b = lane_fn() if callable(lane_fn) else hot_b + cold_b
+        # ---- DRAM weight working-set charge --------------------------
+        # charge_weights: explicit arg > REPRO_SERVE_CHARGE_WEIGHTS env >
+        # on-iff-the-backend-streams default. The charge makes the DRAM
+        # admission gate see the resident weight working set, not just
+        # KV — which is what actually denies an over-budget resident
+        # model and admits its streamed twin. Backends without the
+        # weight surface (custom PR-era executors) degrade to the legacy
+        # KV-only gates.
+        if charge_weights is None:
+            env_cw = _env_int("REPRO_SERVE_CHARGE_WEIGHTS")
+            charge_weights = None if env_cw is None else bool(env_cw)
+        wb_fn = getattr(backend, "weight_bytes", None)
+        if charge_weights is None:
+            charge_weights = bool(getattr(backend, "weight_stream", 0))
+        self.charge_weights = bool(charge_weights) and callable(wb_fn)
+        weight_b = float(wb_fn()[0]) if self.charge_weights else None
         if scheduler is None:
             scheduler = FCFSScheduler(CapacityBudget.from_platform(platform),
                                       hot_b, cold_b,
@@ -254,7 +280,8 @@ class Engine:
                                       oversubscribe=oversubscribe,
                                       spill_lanes=n_spill,
                                       idle_offload_steps=idle_offload_steps,
-                                      lane_bytes=lane_b)
+                                      lane_bytes=lane_b,
+                                      weight_bytes=weight_b)
         elif not isinstance(scheduler, FCFSScheduler) or (
                 type(scheduler).plan is not FCFSScheduler.plan):
             pass  # custom planner: it owns its own chunking policy
@@ -277,6 +304,8 @@ class Engine:
                 scheduler.idle_offload_steps = idle_offload_steps
             if scheduler.lane_bytes is None:
                 scheduler.lane_bytes = lane_b
+            if scheduler.weight_bytes is None and weight_b is not None:
+                scheduler.weight_bytes = weight_b
         if self.paged:
             # live-block charges + prefix probing: back-fill only unset
             # hooks so a custom scheduler's own policy wins
@@ -314,9 +343,13 @@ class Engine:
                 "keywords to enable it",
                 DeprecationWarning, stacklevel=2)
         if scheduler.max_concurrent < 1:
+            wb = getattr(scheduler, "weight_bytes", None) or 0
+            wmsg = (f" plus the {wb:.3e}-byte DRAM-resident weight "
+                    f"working set" if wb else "")
             raise ValueError(
-                f"one slot's KV state ({hot_b} hot + {cold_b} cold bytes) "
-                f"exceeds the domain budgets; nothing can be admitted")
+                f"one slot's KV state ({hot_b} hot + {cold_b} cold bytes)"
+                f"{wmsg} exceeds the domain budgets; nothing can be "
+                f"admitted")
         # num_slots beyond the byte budgets is allowed but idle: admission
         # is gated per-request by the scheduler, so effective concurrency
         # is min(num_slots, scheduler.max_concurrent)
@@ -351,7 +384,12 @@ class Engine:
                                 fused_decode=getattr(
                                     backend, "fused_decode", None),
                                 sparse_read_tau=getattr(
-                                    backend, "sparse_read_tau", None))
+                                    backend, "sparse_read_tau", None),
+                                weight_stream=(
+                                    None if getattr(backend,
+                                                    "weight_stream", None)
+                                    is None
+                                    else bool(backend.weight_stream)))
             # the scheduler logs decision codes through the same hub; a
             # user-built scheduler that already carries one keeps it
             if getattr(self.scheduler, "telemetry", None) is None:

@@ -149,7 +149,8 @@ def aggregate_metrics(finished, wall_s: float) -> dict:
 def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
                          spill_compressed: bool = False,
                          fused_decode: bool | None = None,
-                         sparse_read_tau: float | None = None) -> dict:
+                         sparse_read_tau: float | None = None,
+                         weight_stream: bool | None = None) -> dict:
     """Simulated time/energy for the served trace on ``platform``.
 
     Each request contributes a VQA workload of its own (prompt length,
@@ -171,11 +172,16 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
     attention path instead of the streamed two-segment merge (pass the
     backend's resolved knobs; None falls back to the cfg fields so the
     defaults match whatever the model actually executed).
+    ``weight_stream`` additionally prices the RRAM weight fetches of the
+    streamed scan units (same resolution: the backend's resolved knob,
+    else truthy ``cfg.weight_stream_layers``).
     """
     fused = bool(getattr(cfg, "fused_decode", False)
                  if fused_decode is None else fused_decode)
     tau = float(getattr(cfg, "sparse_read_tau", 0.0)
                 if sparse_read_tau is None else sparse_read_tau)
+    wstream = bool(getattr(cfg, "weight_stream_layers", 0)
+                   if weight_stream is None else weight_stream)
     layers = cost_layers(cfg)
     terms = []
     n_spills = 0
@@ -193,7 +199,8 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
         terms += request_terms(cfg, platform, int(req.tokens.shape[0]),
                                req.n_generated, image, layers,
                                cached_prefix=int(req.prefix_hit),
-                               fused=fused, sparse_tau=tau)
+                               fused=fused, sparse_tau=tau,
+                               weight_stream=wstream)
         tokens += req.n_generated
     agg = sum_terms(terms)
     energy, sim_s = agg["sim_energy_j"], agg["sim_total_s"]
@@ -205,6 +212,7 @@ def simulated_efficiency(cfg, finished, platform: Platform = CHIME,
         "sim_spill_compressed": bool(spill_compressed),
         "sim_fused_decode": fused,
         "sim_sparse_read_tau": tau,
+        "sim_weight_stream": wstream,
         "sim_spill_energy_j": agg["sim_spill_energy_j"],
         "sim_spill_s": agg["sim_spill_s"],
         "sim_energy_split_j": agg["sim_energy_split_j"],

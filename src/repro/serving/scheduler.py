@@ -70,11 +70,17 @@ class CapacityBudget:
         return cls(dram, rram)
 
     def max_concurrent(self, hot_bytes_per_slot: int,
-                       cold_bytes_per_slot: int) -> int:
-        """Largest slot count both domains can hold simultaneously."""
+                       cold_bytes_per_slot: int, *,
+                       weight_bytes: float = 0.0) -> int:
+        """Largest slot count both domains can hold simultaneously.
+        ``weight_bytes`` (the DRAM-resident weight working set) comes off
+        the top of the DRAM budget before any KV slot charges it."""
+        dram = self.dram_bytes - weight_bytes
+        if dram < 0:
+            return 0
         lim = float("inf")
         if hot_bytes_per_slot > 0:
-            lim = min(lim, self.dram_bytes // hot_bytes_per_slot)
+            lim = min(lim, dram // hot_bytes_per_slot)
         if cold_bytes_per_slot > 0:
             lim = min(lim, self.rram_bytes // cold_bytes_per_slot)
         return int(lim) if lim != float("inf") else 2 ** 30
@@ -82,33 +88,44 @@ class CapacityBudget:
     def admits(self, n_resident: int, hot_bytes_per_slot: int,
                cold_bytes_per_slot: int, *, oversubscribe: float = 1.0,
                spilled: int = 0, spill_lanes: int = 0,
-               spilled_bytes: float = 0.0) -> bool:
+               spilled_bytes: float = 0.0,
+               weight_bytes: float = 0.0) -> bool:
         """Can an (n_resident+1)-th request's KV state fit?
 
         ``oversubscribe`` scales the DRAM gate (>= 1): residents beyond
         the base DRAM capacity are spill-backed, so the overflow plus the
         ``spilled`` requests already parked in RRAM must fit in
         ``spill_lanes`` lanes, and ``spilled_bytes`` (the parked images)
-        counts against the RRAM budget alongside the cold tiers."""
+        counts against the RRAM budget alongside the cold tiers.
+        ``weight_bytes`` is the DRAM-resident weight working set — it is
+        NOT spill-backed, so it shrinks the DRAM budget before the
+        oversubscribe factor applies."""
         return self.deny_reason(
             n_resident, hot_bytes_per_slot, cold_bytes_per_slot,
             oversubscribe=oversubscribe, spilled=spilled,
-            spill_lanes=spill_lanes, spilled_bytes=spilled_bytes) is None
+            spill_lanes=spill_lanes, spilled_bytes=spilled_bytes,
+            weight_bytes=weight_bytes) is None
 
     def deny_reason(self, n_resident: int, hot_bytes_per_slot: int,
                     cold_bytes_per_slot: int, *,
                     oversubscribe: float = 1.0, spilled: int = 0,
                     spill_lanes: int = 0,
-                    spilled_bytes: float = 0.0) -> str | None:
-        """`admits`, but naming WHICH gate blocks: ``dram_budget``,
+                    spilled_bytes: float = 0.0,
+                    weight_bytes: float = 0.0) -> str | None:
+        """`admits`, but naming WHICH gate blocks: ``dram_weights``
+        (the weight working set alone overflows DRAM — nothing can ever
+        be admitted; stream the weights instead), ``dram_budget``,
         ``spill_lanes`` or ``rram_budget`` (None = admissible) — the
         telemetry decision log's admission-denial reason codes."""
         hot, cold = hot_bytes_per_slot, cold_bytes_per_slot
+        dram = self.dram_bytes - weight_bytes
+        if dram < 0:
+            return "dram_weights"
         n = n_resident + 1
-        if n * hot > self.dram_bytes * oversubscribe:
+        if n * hot > dram * oversubscribe:
             return "dram_budget"
         if hot > 0 and oversubscribe > 1.0:
-            overflow = n - int(self.dram_bytes // hot)
+            overflow = n - int(dram // hot)
             if overflow > 0 and overflow + spilled > spill_lanes:
                 return "spill_lanes"
         if n * cold + spilled_bytes > self.rram_bytes:
@@ -118,17 +135,21 @@ class CapacityBudget:
     def deny_reason_bytes(self, hot_bytes: float, cold_bytes: float, *,
                           hot_unit: int = 0, oversubscribe: float = 1.0,
                           spilled: int = 0, spill_lanes: int = 0,
-                          spilled_bytes: float = 0.0) -> str | None:
+                          spilled_bytes: float = 0.0,
+                          weight_bytes: float = 0.0) -> str | None:
         """`deny_reason` for LIVE byte totals instead of uniform per-slot
         worst cases: the paged pool charges each resident its block-
         rounded prompt+generation footprint, so the gate compares the
         summed hot/cold bytes (candidate included) directly against the
         domain budgets. ``hot_unit`` (one full slot's hot bytes) converts
         DRAM overflow into spill-lane slots for the oversubscribe gate."""
-        if hot_bytes > self.dram_bytes * oversubscribe:
+        dram = self.dram_bytes - weight_bytes
+        if dram < 0:
+            return "dram_weights"
+        if hot_bytes > dram * oversubscribe:
             return "dram_budget"
         if hot_unit > 0 and oversubscribe > 1.0:
-            over = hot_bytes - self.dram_bytes
+            over = hot_bytes - dram
             overflow = int(-(-over // hot_unit)) if over > 0 else 0
             if overflow > 0 and overflow + spilled > spill_lanes:
                 return "spill_lanes"
@@ -217,6 +238,14 @@ class FCFSScheduler:
     (blocks referenced by a live admission — unreferenced cached blocks
     are reclaimable and must not gate admission), charged against the
     RRAM budget alongside parked spill images.
+
+    ``weight_bytes`` (None = engine fills it from the backend when
+    weight charging is on; None/0 reproduces the legacy KV-only gates)
+    is the DRAM-resident weight working set, charged off the top of the
+    DRAM budget before any KV byte gate — weight streaming shrinks it to
+    embeddings + head + the per-unit sliding windows, which is what lets
+    an over-budget model through the gate at all (deny reason
+    ``dram_weights`` when the weights alone overflow the domain).
     """
 
     def __init__(self, budget: CapacityBudget, hot_bytes_per_slot: int,
@@ -228,7 +257,8 @@ class FCFSScheduler:
                  idle_offload_steps: int | None = None,
                  lane_bytes: int | None = None,
                  charge_fn=None, prefix_probe=None,
-                 shared_bytes_fn=None):
+                 shared_bytes_fn=None,
+                 weight_bytes: float | None = None):
         if chunk_tokens is not None and chunk_tokens < 1:
             # a cap < 1 would make plan() emit degenerate chunks forever
             raise ValueError(f"chunk_tokens must be >= 1 or None, got "
@@ -239,6 +269,9 @@ class FCFSScheduler:
         if oversubscribe is not None and oversubscribe < 1:
             raise ValueError(f"oversubscribe must be >= 1 or None, got "
                              f"{oversubscribe}")
+        if weight_bytes is not None and weight_bytes < 0:
+            raise ValueError(f"weight_bytes must be >= 0 or None, got "
+                             f"{weight_bytes}")
         if idle_offload_steps is not None and idle_offload_steps < 1:
             # < 1 would offload a request the same step it got its slot:
             # zero guaranteed progress per rotation = potential livelock
@@ -256,6 +289,11 @@ class FCFSScheduler:
         self.charge_fn = charge_fn
         self.prefix_probe = prefix_probe
         self.shared_bytes_fn = shared_bytes_fn
+        # DRAM-resident weight working set charged off the top of the
+        # DRAM budget (None = engine fills it from the backend when
+        # weight charging is on; stays None -> charges 0, the legacy
+        # KV-only accounting)
+        self.weight_bytes = weight_bytes
         # paged accounting: admission-time (hot, cold) charge per resident
         # rid; parked requests keep their entry (sums drop, re-add on
         # restore) so the round trip is charge-neutral
@@ -375,7 +413,8 @@ class FCFSScheduler:
                 oversubscribe=self.oversubscribe or 1.0,
                 spilled=spilled_after,
                 spill_lanes=self.spill_lanes or 0,
-                spilled_bytes=spilled_after * lane_b + shared)
+                spilled_bytes=spilled_after * lane_b + shared,
+                weight_bytes=self.weight_bytes or 0.0)
         hot, cold = self._charged_hot, self._charged_cold
         if parked is not None:
             ph, pc = self._charge_of(parked)
@@ -387,12 +426,14 @@ class FCFSScheduler:
             oversubscribe=self.oversubscribe or 1.0,
             spilled=spilled_after,
             spill_lanes=self.spill_lanes or 0,
-            spilled_bytes=spilled_after * lane_b + shared)
+            spilled_bytes=spilled_after * lane_b + shared,
+            weight_bytes=self.weight_bytes or 0.0)
 
     @property
     def max_concurrent(self) -> int:
-        return self.budget.max_concurrent(self.hot_bytes_per_slot,
-                                          self.cold_bytes_per_slot)
+        return self.budget.max_concurrent(
+            self.hot_bytes_per_slot, self.cold_bytes_per_slot,
+            weight_bytes=self.weight_bytes or 0.0)
 
     def can_admit(self, n_active: int) -> bool:
         return bool(self._queue) and self._admits(n_active, self.spilled)

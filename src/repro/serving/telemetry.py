@@ -65,6 +65,8 @@ REASON_CODES = {
     "admit": "queue head admitted (slot + both byte budgets ok)",
     "deny_no_free_slot": "queue head blocked: no free KV slot",
     "deny_dram_budget": "queue head blocked: DRAM hot-ring byte budget",
+    "deny_dram_weights": "queue head blocked: resident weight working "
+                         "set leaves no DRAM headroom for its KV",
     "deny_rram_budget": "queue head blocked: RRAM cold-tier byte budget",
     "deny_spill_lanes": "queue head blocked: oversubscribe overflow "
                         "exceeds free spill lanes",
@@ -105,7 +107,8 @@ class TierLedger:
 
     def __init__(self, cfg, platform=None, spill_compressed: bool = False,
                  fused_decode: bool | None = None,
-                 sparse_read_tau: float | None = None):
+                 sparse_read_tau: float | None = None,
+                 weight_stream: bool | None = None):
         from repro.models.counting import (kv_elems_per_token,
                                            kv_scale_elems_per_token)
         self.cfg = cfg
@@ -120,6 +123,9 @@ class TierLedger:
         self.sparse_read_tau = float(
             getattr(cfg, "sparse_read_tau", 0.0) if sparse_read_tau is None
             else sparse_read_tau)
+        self.weight_stream = bool(
+            getattr(cfg, "weight_stream_layers", 0) if weight_stream is None
+            else weight_stream)
         self._layers = cost_layers(cfg)
         self._kv_elems = kv_elems_per_token(cfg)
         self._scale_elems = kv_scale_elems_per_token(cfg)
@@ -146,6 +152,7 @@ class TierLedger:
                      "dram_stream_bytes": 0.0,
                      "rram_stream_bytes": 0.0,
                      "sparse_skipped_bytes": 0.0,
+                     "weight_stream_bytes": 0.0,
                      "kv_append_bytes": 0.0,
                      "ucie_bytes": 0.0,
                      "energy_j": 0.0}
@@ -173,6 +180,8 @@ class TierLedger:
                 row["prefix_adopt_bytes"] += tm.bytes_moved
             elif tm.domain == "skipped":
                 row["sparse_skipped_bytes"] += tm.bytes_moved
+            elif tm.domain == "weight_stream":
+                row["weight_stream_bytes"] += tm.bytes_moved
             elif tm.domain == "kv_write":
                 row["kv_append_bytes"] += tm.bytes_moved
             elif tm.domain == "ucie":
@@ -191,7 +200,8 @@ class TierLedger:
         prompt = (visual_tokens(self.cfg) if image else 0) + text_tokens
         self._req_prompt[rid] = prompt
         terms = prefill_terms(self.cfg, self.platform, text_tokens,
-                              image, self._layers, cached_prefix=cached)
+                              image, self._layers, cached_prefix=cached,
+                              weight_stream=self.weight_stream)
         if cached > 0:
             terms = terms + prefix_adopt_terms(self.cfg, self.platform,
                                                cached)
@@ -204,7 +214,8 @@ class TierLedger:
         ctx = self._req_prompt[rid] + n_generated - 1
         self._record(rid, decode_token_terms(
             self.cfg, self.platform, ctx, self._layers,
-            fused=self.fused_decode, sparse_tau=self.sparse_read_tau))
+            fused=self.fused_decode, sparse_tau=self.sparse_read_tau,
+            weight_stream=self.weight_stream))
         row = self._row
         if row is not None:
             row["tokens"] += 1
@@ -249,8 +260,8 @@ class TierLedger:
         for k in ("dram_hot_ring_bytes", "rram_cold_read_bytes",
                   "rram_spill_bytes", "prefix_adopt_bytes",
                   "dram_stream_bytes", "rram_stream_bytes",
-                  "sparse_skipped_bytes", "kv_append_bytes",
-                  "ucie_bytes"):
+                  "sparse_skipped_bytes", "weight_stream_bytes",
+                  "kv_append_bytes", "ucie_bytes"):
             out[k] = math.fsum(r[k] for r in rows)
         return out
 
@@ -276,12 +287,14 @@ class Telemetry:
                  printer=None, max_events: int = 200_000,
                  max_decisions: int = 10_000,
                  fused_decode: bool | None = None,
-                 sparse_read_tau: float | None = None):
+                 sparse_read_tau: float | None = None,
+                 weight_stream: bool | None = None):
         self.cfg = cfg
         self.platform = platform
         self.spill_compressed = spill_compressed
         self.fused_decode = fused_decode
         self.sparse_read_tau = sparse_read_tau
+        self.weight_stream = weight_stream
         self.clock = clock or time.perf_counter
         self.stats_every = int(stats_every or 0)
         self.snapshot_path = snapshot_path
@@ -319,11 +332,12 @@ class Telemetry:
                 self.cfg, self.platform,
                 bool(self.spill_compressed),
                 fused_decode=self.fused_decode,
-                sparse_read_tau=self.sparse_read_tau)
+                sparse_read_tau=self.sparse_read_tau,
+                weight_stream=self.weight_stream)
 
     def bind(self, *, cfg=None, spill_compressed=None, clock=None,
              platform=None, on_snapshot=None, fused_decode=None,
-             sparse_read_tau=None):
+             sparse_read_tau=None, weight_stream=None):
         """Engine attachment: fill whatever the user left unset. The
         engine's clock always wins — it is the time authority every
         request timestamp already uses."""
@@ -335,6 +349,8 @@ class Telemetry:
             self.fused_decode = fused_decode
         if self.sparse_read_tau is None:
             self.sparse_read_tau = sparse_read_tau
+        if self.weight_stream is None:
+            self.weight_stream = weight_stream
         if self.platform is None:
             self.platform = platform
         if clock is not None:
@@ -660,7 +676,8 @@ class Telemetry:
                  for k in ("dram_hot_ring_bytes", "rram_cold_read_bytes",
                            "rram_spill_bytes", "prefix_adopt_bytes",
                            "dram_stream_bytes", "rram_stream_bytes",
-                           "kv_append_bytes", "ucie_bytes")])
+                           "weight_stream_bytes", "kv_append_bytes",
+                           "ucie_bytes")])
             fam("repro_serving_sim_energy_joules_total", "counter",
                 "Simulated energy by cost-term domain.",
                 [({"domain": d}, repr(e))

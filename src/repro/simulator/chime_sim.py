@@ -21,7 +21,8 @@ import typing
 
 from repro.configs.base import ModelConfig
 from repro.core.planner import plan_for
-from repro.models.counting import kv_bytes_per_token
+from repro.models.counting import (kv_bytes_per_token, param_dtype_bytes,
+                                   streamed_unit_indices)
 from repro.simulator.hardware import CHIME, Platform
 
 
@@ -47,10 +48,14 @@ class SimResult:
 
 
 def _layer_kernels(cfg: ModelConfig) -> list[dict]:
-    """Per-layer fused kernels with per-token flops/bytes (decode GEMV)."""
+    """Per-layer fused kernels with per-token flops/bytes (decode GEMV).
+    Layers of a streamed scan unit (``cfg.weight_stream_layers``) carry
+    ``streamed=True`` so the weight-stream pricing knows whose projection
+    weights live in the RRAM tier."""
     D = cfg.d_model
+    streamed = set(streamed_unit_indices(cfg))
     out = []
-    for unit_plan in plan_for(cfg).layers:
+    for uidx, unit_plan in enumerate(plan_for(cfg).layers):
         for _ in range(unit_plan.repeats):
             kerns = []
             if unit_plan.mixer in ("attn", "attn_shared"):
@@ -96,13 +101,18 @@ def _layer_kernels(cfg: ModelConfig) -> list[dict]:
             out.append({"kernels": kerns,
                         "has_attn": unit_plan.mixer in (
                             "attn", "attn_shared", "mla"),
-                        "has_ffn": has_ffn})
+                        "has_ffn": has_ffn,
+                        "streamed": uidx in streamed})
     return out
 
 
 def _kernel_time_energy(domain, flops: float, bytes_r: float,
                         pj_flop: float, weight_dtype_bytes: float = 2.0
                         ) -> tuple[float, float]:
+    """Time/energy of one kernel on ``domain``. The kernel table's static
+    byte counts assume bf16 weights; ``weight_dtype_bytes`` rescales them
+    to the stored dtype (1.0 for int8, 4.0 for f32) before pricing."""
+    bytes_r = bytes_r * (weight_dtype_bytes / 2.0)
     t = max(flops / domain.peak_flops, bytes_r / domain.internal_bw)
     e = bytes_r * 8 * domain.read_energy_pj_bit * 1e-12 \
         + flops * pj_flop * 1e-12
@@ -125,7 +135,7 @@ class CostTerm(typing.NamedTuple):
 
     name: str
     domain: str        # dram|rram|compute|ucie|kv_write|overhead|encoder
-    #                  # |spill|prefix|static|skipped
+    #                  # |spill|prefix|static|skipped|weight_stream
     time_s: float
     energy_j: float
     bytes_moved: float
@@ -172,10 +182,56 @@ def _kernel_terms(name: str, dom_name: str, dom, flops: float,
     ]
 
 
+def _layer_weight_raw_bytes(lay: dict) -> float:
+    """One layer's static projection-weight bytes as the kernel table
+    states them (bf16): the DRAM-domain weight kernels. FFN weights are
+    excluded — they already live beside the RRAM near-memory compute and
+    never cross a tier. The attention KV stream is not a weight read."""
+    return float(sum(b for (name, dom, _f, b) in lay["kernels"]
+                     if dom == "dram" and name != "FUSED_ATTN_STREAM"))
+
+
+def layer_stream_bytes(cfg: ModelConfig, lay: dict) -> float:
+    """Dtype-correct bytes of ONE streamed layer's RRAM weight read,
+    rescaled from the kernel table's bf16 assumption to the stored
+    param dtype."""
+    return _layer_weight_raw_bytes(lay) * (param_dtype_bytes(cfg) / 2.0)
+
+
+def weight_stream_layer_terms(cfg: ModelConfig, platform: Platform,
+                              lay: dict, hide_s: float) -> list[CostTerm]:
+    """The weight-stream cost of ONE streamed layer in one step: the RRAM
+    read of the layer's projection-weight slice (dtype-correct via the
+    honored `_kernel_time_energy`) plus its UCIe hop into the DRAM
+    prefetch window. The layer-ahead prefetch overlaps the fetch with the
+    layer's own compute/stream time (``hide_s``), so only the residual
+    stall carries time; the read/transfer ENERGY is paid in full —
+    overlap hides latency, not joules. The UCIe term carries zero bytes
+    (the read term already counts the slice once — the spill ``/ucie``
+    convention)."""
+    rram = platform.domains.get("rram", platform.domains["dram"])
+    raw = _layer_weight_raw_bytes(lay)
+    wdt = float(param_dtype_bytes(cfg))
+    rt, re = _kernel_time_energy(rram, 0.0, raw, platform.compute_pj_flop,
+                                 weight_dtype_bytes=wdt)
+    wb = raw * (wdt / 2.0)
+    hop_t = hop_e = 0.0
+    if platform.cross_domain_bw:
+        hop_t = wb / platform.cross_domain_bw
+        hop_e = wb * 8 * platform.cross_domain_pj_bit * 1e-12
+    stall = max(0.0, rt + hop_t - hide_s)
+    terms = [CostTerm("WEIGHT_STREAM", "weight_stream", stall, re, wb)]
+    if hop_e:
+        terms.append(CostTerm("WEIGHT_STREAM/ucie", "weight_stream",
+                              0.0, hop_e, 0.0))
+    return terms
+
+
 def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
                        layers: list[dict] | None = None,
                        fused: bool = False,
-                       sparse_tau: float = 0.0) -> list[CostTerm]:
+                       sparse_tau: float = 0.0,
+                       weight_stream: bool = False) -> list[CostTerm]:
     """The cost terms of ONE decode step at context length ``ctx``.
 
     ``fused`` prices the fused paged-decode kernel over a tiered store:
@@ -185,7 +241,15 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
     two reconcile. With ``sparse_tau`` > 0 the modeled
     `SPARSE_READ_PRICED_SKIP` fraction of the cold bytes moves to a
     zero-cost `skipped` term. A fused FLAT store touches the same bytes
-    as the unfused path and is priced identically."""
+    as the unfused path and is priced identically.
+
+    ``weight_stream`` adds, per layer flagged ``streamed`` in the table,
+    the RRAM weight-read + UCIe terms of `weight_stream_layer_terms` —
+    the projection-weight slice fetched into the DRAM window every step
+    (the window is transit storage, so a streamed unit refetches all its
+    repeats per token). The resident kernels are left untouched: the
+    compute side still reads the staged slice from DRAM exactly as the
+    resident model does, so streamed pricing is resident + fetch."""
     if layers is None:
         layers = _layer_kernels(cfg)
     n_layers = len(layers)
@@ -210,6 +274,7 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
         touched_b = cold_b - skip_b
     terms: list[CostTerm] = []
     for lay in layers:
+        lay_start = len(terms)
         for name, dom_name, flops, bytes_r in lay["kernels"]:
             dom = dram if dom_name == "dram" else rram
             if name == "FUSED_ATTN_STREAM":
@@ -243,6 +308,9 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
             kv_tok / max(n_layers, 1) * 8
             * dram.write_energy_pj_bit * 1e-12,
             kv_tok / max(n_layers, 1)))
+        if weight_stream and lay.get("streamed"):
+            hide = math.fsum(t.time_s for t in terms[lay_start:])
+            terms += weight_stream_layer_terms(cfg, platform, lay, hide)
     terms.append(CostTerm(
         "STEP_OVERHEAD", "overhead",
         platform.layer_overhead_s * n_layers
@@ -253,7 +321,8 @@ def decode_token_terms(cfg: ModelConfig, platform: Platform, ctx: int,
 def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                   image: bool,
                   layers: list[dict] | None = None,
-                  cached_prefix: int = 0) -> list[CostTerm]:
+                  cached_prefix: int = 0,
+                  weight_stream: bool = False) -> list[CostTerm]:
     """The cost terms of one whole-prompt prefill (weights read once per
     layer and reused across prompt tokens; compute scales with prompt).
 
@@ -263,7 +332,13 @@ def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
     block store — priced separately by `prefix_adopt_terms`), while the
     attention stream still reads the FULL prompt's KV for the tail's
     attention. ``cached_prefix=0`` is term-for-term identical to the
-    historical whole-prompt pricing."""
+    historical whole-prompt pricing.
+
+    ``weight_stream`` adds one `weight_stream_layer_terms` fetch per
+    streamed layer (weights cross the tier once per prefill, whatever
+    the prompt length — the same read-once shape as the resident
+    kernels). Chunked prefills are priced whole-prompt at commit, so the
+    fetch is charged exactly once per request either way."""
     if layers is None:
         layers = _layer_kernels(cfg)
     n_layers = len(layers)
@@ -277,6 +352,7 @@ def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
     kv_tok = kv_bytes_per_token(cfg)
     terms: list[CostTerm] = []
     for lay in layers:
+        lay_start = len(terms)
         for name, dom_name, flops, bytes_r in lay["kernels"]:
             dom = dram if dom_name == "dram" else rram
             if name == "FUSED_ATTN_STREAM":
@@ -286,6 +362,9 @@ def prefill_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                 flops = flops * tail
             terms += _kernel_terms(name, dom_name, dom, flops, bytes_r,
                                    platform.compute_pj_flop)
+        if weight_stream and lay.get("streamed"):
+            hide = math.fsum(t.time_s for t in terms[lay_start:])
+            terms += weight_stream_layer_terms(cfg, platform, lay, hide)
     # vision encoder stub cost: FastViT/ViT on 512^2 ~ 10-40 GFLOP.
     # A cache hit covering the whole visual span skips the encoder —
     # the shared image was encoded when its blocks were registered.
@@ -393,23 +472,28 @@ def request_terms(cfg: ModelConfig, platform: Platform, text_tokens: int,
                   layers: list[dict] | None = None,
                   cached_prefix: int = 0,
                   fused: bool = False,
-                  sparse_tau: float = 0.0) -> list[CostTerm]:
+                  sparse_tau: float = 0.0,
+                  weight_stream: bool = False) -> list[CostTerm]:
     """Every cost term of one served request: prefill (tail-only when
     ``cached_prefix`` positions came from the shared prefix store, plus
     the adoption transfer), each decode step at its growing context, and
     the closing static charge — the unit `simulated_efficiency` and the
     telemetry ledger both sum. ``fused``/``sparse_tau`` select the fused
-    paged-decode pricing for the decode steps (see `decode_token_terms`)."""
+    paged-decode pricing for the decode steps (see `decode_token_terms`);
+    ``weight_stream`` adds the RRAM weight-fetch terms of the streamed
+    layers to prefill and every decode step."""
     if layers is None:
         layers = _layer_kernels(cfg)
     terms = prefill_terms(cfg, platform, text_tokens, image, layers,
-                          cached_prefix=cached_prefix)
+                          cached_prefix=cached_prefix,
+                          weight_stream=weight_stream)
     if cached_prefix > 0:
         terms += prefix_adopt_terms(cfg, platform, cached_prefix)
     prompt = (visual_tokens(cfg) if image else 0) + text_tokens
     for step in range(output_tokens):
         terms += decode_token_terms(cfg, platform, prompt + step, layers,
-                                    fused=fused, sparse_tau=sparse_tau)
+                                    fused=fused, sparse_tau=sparse_tau,
+                                    weight_stream=weight_stream)
     terms += closing_terms(platform, terms)
     return terms
 

@@ -64,11 +64,14 @@ def test_engine_admission_respects_byte_budgets():
     cfg, model, params = _model()
     hot_b, cold_b = slot_kv_bytes(model, max_len=24)
     budget = CapacityBudget(dram_bytes=2 * hot_b, rram_bytes=2 * cold_b)
-    # oversubscribe pinned to 1.0: this test is about the STRICT gate
-    # (the CI coverage job force-relaxes unset schedulers via
-    # REPRO_SERVE_OVERSUBSCRIBE)
+    # oversubscribe pinned to 1.0 and the weight charge off: this test
+    # is about the STRICT KV-only gate (the CI coverage job force-
+    # relaxes unset schedulers via REPRO_SERVE_OVERSUBSCRIBE, and the
+    # weight-stream pass's REPRO_SERVE_WEIGHT_STREAM would otherwise
+    # charge the weight working set against this synthetic KV budget)
     sched = FCFSScheduler(budget, hot_b, cold_b, oversubscribe=1.0)
-    eng = _engine(model, params, 4, 24, scheduler=sched)
+    eng = _engine(model, params, 4, 24, scheduler=sched,
+                  charge_weights=False)
     for r in _requests(cfg, [(8, 6)] * 5):
         eng.submit(r)
     peak = 0
